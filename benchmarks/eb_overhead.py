@@ -1,0 +1,77 @@
+"""Table I / Fig. 6 reproduction: ABFT overhead for low-precision
+EmbeddingBag.
+
+Paper settings: 4M-row int8 tables, d ∈ {32, 64, 128, 256}, average pooling
+100, batch 10; regular and weighted sums.  (``--quick`` shrinks rows to keep
+the CPU container responsive; full-table runs are the default for
+``python -m benchmarks.eb_overhead``.)
+
+Reports measured overhead vs the unprotected EB and the paper's analytic
+``1/d + 1/(3m)`` (§V-C).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, modelled_cost, time_fn
+from repro.core import abft_embedding as ae
+
+ROWS = 4_000_000
+DIMS = (32, 64, 128, 256)
+POOL = 100
+BATCH = 10
+
+
+def make_table(key, rows: int, d: int):
+    kt, ka, kb = jax.random.split(key, 3)
+    table = jax.random.randint(kt, (rows, d), -128, 128, jnp.int8)
+    alphas = jax.random.uniform(ka, (rows,), jnp.float32, 1e-3, 2e-3)
+    betas = jax.random.uniform(kb, (rows,), jnp.float32, -1e-2, 1e-2)
+    return table, alphas, betas
+
+
+def run(csv: Csv, *, quick: bool = False):
+    rows = 200_000 if quick else ROWS
+    dims = DIMS[:2] if quick else DIMS
+    rng = np.random.default_rng(0)
+    plain = jax.jit(ae.embedding_bag)
+    abft = jax.jit(ae.abft_embedding_bag)
+    for d in dims:
+        table, alphas, betas = make_table(jax.random.key(d), rows, d)
+        rowsums = jax.jit(ae.table_rowsums)(table)
+        jax.block_until_ready(rowsums)
+        for weighted in (False, True):
+            # fresh indices per timing iteration would flush cache like the
+            # paper; one fixed large random batch approximates it on CPU
+            idx = jnp.asarray(
+                rng.integers(0, rows, (BATCH, POOL)), jnp.int32)
+            w = (jnp.asarray(rng.uniform(0.5, 1.5, (BATCH, POOL)),
+                             jnp.float32) if weighted else None)
+            t0 = time_fn(plain, table, alphas, betas, idx, w)
+            t1 = time_fn(abft, table, alphas, betas, idx, rowsums, w)
+            c0 = modelled_cost(ae.embedding_bag, table, alphas, betas,
+                               idx, w)
+            c1 = modelled_cost(
+                lambda t, a, b, i, r, ww: ae.abft_embedding_bag(
+                    t, a, b, i, r, ww),
+                table, alphas, betas, idx, rowsums, w)
+            dbytes = c1["bytes"] / max(c0["bytes"], 1) - 1
+            analytic = 1 / d + 1 / (3 * POOL)
+            csv.row("eb_overhead", f"d={d}",
+                    "weighted" if weighted else "regular",
+                    f"{rows}", f"{t0*1e6:.1f}", f"{t1*1e6:.1f}",
+                    f"{(t1/t0-1)*100:.1f}%", f"{dbytes*100:.2f}%",
+                    f"{analytic*100:.2f}%")
+
+
+def main(quick: bool = False):
+    csv = Csv(["bench", "dim", "mode", "rows", "plain_us", "abft_us",
+               "overhead", "tpu_bytes_overhead", "analytic_overhead"])
+    run(csv, quick=quick)
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""§Roofline table: render per-cell roofline terms from dry-run artifacts.
+
+Reads ``artifacts/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
+emits the per-(arch × shape × mesh) three-term table with the dominant
+bottleneck, MODEL_FLOPS ratio, and fits-in-HBM flag.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Csv
+
+HBM_PER_CHIP = 16 * 1024 ** 3   # v5e: 16 GiB
+
+
+def load_cells(art_dir: str = "artifacts/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(csv: Csv, art_dir: str = "artifacts/dryrun"):
+    cells = load_cells(art_dir)
+    for c in cells:
+        if c["status"] == "skipped":
+            csv.row("roofline", c["arch"], c["shape"], c["mesh"], "SKIP",
+                    "-", "-", "-", "-", "-",
+                    c["skip_reason"].split(":")[0])
+            continue
+        if c["status"] != "ok":
+            csv.row("roofline", c["arch"], c["shape"], c["mesh"], "FAIL",
+                    "-", "-", "-", "-", "-", c.get("error", "")[:60])
+            continue
+        r = c["roofline"]
+        mem = c["memory_per_device"]["peak_estimate_bytes"]
+        fits = "fits" if mem <= HBM_PER_CHIP else "OOM!"
+        ratio = c.get("model_vs_hlo")
+        csv.row("roofline", c["arch"], c["shape"], c["mesh"],
+                f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+                f"{r['collective_s']:.3e}", r["dominant"],
+                f"{ratio:.2f}" if ratio else "-",
+                f"{mem/2**30:.1f}GiB", fits)
+    return cells
+
+
+def main(quick: bool = False):
+    csv = Csv(["bench", "arch", "shape", "mesh", "compute_s", "memory_s",
+               "collective_s", "dominant", "model/hlo", "mem_per_dev",
+               "hbm"])
+    run(csv)
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark suite entry point: ``python -m benchmarks.run [--quick]``.
+
+One benchmark per paper table/figure:
+  * gemm_overhead   — Fig. 5  (ABFT GEMM overhead, 28 DLRM shapes)
+  * eb_overhead     — Table I / Fig. 6 (ABFT EmbeddingBag overhead)
+  * gemm_detection  — Table II (simulated-error detection accuracy, GEMM)
+  * eb_detection    — Table III (simulated-error detection accuracy, EB)
+  * roofline_table  — §Roofline (from dry-run artifacts, if present)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of shapes / smaller tables")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    args = ap.parse_args()
+
+    from benchmarks import (eb_detection, eb_overhead, gemm_detection,
+                            gemm_overhead, roofline_table)
+
+    benches = {
+        "gemm_overhead": gemm_overhead.main,
+        "eb_overhead": eb_overhead.main,
+        "gemm_detection": gemm_detection.main,
+        "eb_detection": eb_detection.main,
+        "roofline_table": roofline_table.main,
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+    for name, fn in benches.items():
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+        except FileNotFoundError as e:
+            print(f"({name} skipped: {e})")
+        print(f"=== {name} done in {time.time()-t0:.1f}s ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

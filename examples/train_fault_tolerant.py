@@ -1,0 +1,97 @@
+"""End-to-end driver: train a ~100M-param LM with the fault-tolerant loop.
+
+    PYTHONPATH=src python examples/train_fault_tolerant.py            # quick
+    PYTHONPATH=src python examples/train_fault_tolerant.py --full     # ~100M
+
+Demonstrates the full production stack on one host:
+  * seeded synthetic data pipeline (restart-safe: batch = f(seed, step)),
+  * jitted train step (grad accum + AdamW + clip + ABFT metrics),
+  * checksummed async checkpoints + crash-restart resume,
+  * a simulated mid-run crash: the loop is killed and restarted, resumes
+    from the newest committed checkpoint and reaches the same final state.
+"""
+import argparse
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data import make_dataset
+from repro.launch.steps import init_train_state, make_train_step
+from repro.layers.common import Ctx
+from repro.models.base import build_model
+from repro.runtime import LoopConfig, TrainLoop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true",
+                help="~100M params, 300 steps (minutes on CPU)")
+ap.add_argument("--steps", type=int, default=0)
+args = ap.parse_args()
+
+if args.full:
+    cfg = ArchConfig(name="lm100m", family="dense", n_layers=8,
+                     d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+                     vocab=32000, head_dim=64, attn_chunk=256)
+    seq, batch, steps = 256, 8, args.steps or 300
+else:
+    cfg = ArchConfig(name="lm8m", family="dense", n_layers=4,
+                     d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                     vocab=4096, head_dim=32, attn_chunk=64)
+    seq, batch, steps = 128, 8, args.steps or 60
+
+shape = ShapeConfig("ex", "train", seq, batch)
+model = build_model(cfg, max_pos=seq + 8)
+ctx = Ctx(quant=False, compute_dtype=jnp.bfloat16)
+step_fn = jax.jit(make_train_step(model, ctx, accum=2, peak_lr=1e-3,
+                                  warmup=20, total_steps=steps),
+                  donate_argnums=(0,))
+
+ckpt_dir = "/tmp/repro_example_ckpt"
+shutil.rmtree(ckpt_dir, ignore_errors=True)
+dataset = make_dataset(cfg, shape)
+state = init_train_state(model, jax.random.key(0))
+n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  "
+      f"steps={steps}  seq={seq} batch={batch}")
+
+losses = []
+
+
+def hook(step, metrics):
+    losses.append(float(metrics["loss_final"]))
+    print(f"  step {step:4d}  loss {losses[-1]:.4f}  "
+          f"lr {float(metrics['lr']):.2e}  "
+          f"gnorm {float(metrics['grad_norm']):.2f}", flush=True)
+
+
+loop = TrainLoop(step_fn, dataset,
+                 cfg=LoopConfig(ckpt_dir=ckpt_dir, save_every=20,
+                                log_every=10, fault_policy="recompute"),
+                 metrics_hook=hook)
+
+# ---- phase 1: train to 60% of the run, then simulate a crash --------------
+crash_at = int(steps * 0.6)
+print(f"\n[phase 1] training to step {crash_at}, then 'crashing'...")
+state_mid, _ = loop.run(state, crash_at, resume=False)
+loop.ckpt.wait()
+print(f"[crash] process gone. committed checkpoints: "
+      f"{sorted(os.listdir(ckpt_dir))}")
+
+# ---- phase 2: a NEW loop (fresh process in real life) resumes --------------
+print("\n[phase 2] restart: resuming from latest committed checkpoint")
+state_fresh = init_train_state(model, jax.random.key(0))
+loop2 = TrainLoop(step_fn, dataset,
+                  cfg=LoopConfig(ckpt_dir=ckpt_dir, save_every=20,
+                                 log_every=10, fault_policy="recompute"),
+                  metrics_hook=hook)
+state_final, metrics = loop2.run(state_fresh, steps)
+
+print(f"\nfinal loss {float(metrics['loss_final']):.4f} "
+      f"(first logged {losses[0]:.4f}) — "
+      f"{'improved' if losses[-1] < losses[0] else 'NOT improved'}")
+print(f"loop stats: {loop2.stats}")
+assert losses[-1] < losses[0], "training did not reduce loss"
+print("train_fault_tolerant OK")

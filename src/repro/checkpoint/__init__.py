@@ -1,0 +1,7 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointManager,
+    save_checkpoint,
+    load_checkpoint,
+    latest_step,
+    CheckpointCorruption,
+)

@@ -1,0 +1,5 @@
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.configs.registry import get_arch, list_archs, ARCHS
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "get_arch", "list_archs",
+           "ARCHS"]

@@ -1,0 +1,29 @@
+"""granite-moe-3b-a800m [moe]: 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+
+40 experts do not divide the 16-wide `model` axis => expert dim replicates
+and the (tiny, 512-wide) expert FFN hidden dim shards instead — but 512/16 =
+32 lanes per chip, so the sharding rules keep `expert_mlp` unsharded below
+128 lanes and the FLOP-light experts replicate; 24 heads likewise.  This arch
+is intentionally the poster child for "the mesh doesn't fit the model":
+see EXPERIMENTS.md §Roofline."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,                   # per-expert FFN width
+    vocab=49155,
+    head_dim=64,
+    n_experts=40,
+    top_k=8,
+    moe_group=512,
+    rope_theta=10000.0,
+    train_accum=16,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+)

@@ -1,0 +1,40 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from repro.configs import (
+    whisper_large_v3,
+    llama3_2_1b,
+    internlm2_20b,
+    qwen3_8b,
+    mistral_large_123b,
+    rwkv6_1b6,
+    llama4_scout_17b_a16e,
+    granite_moe_3b_a800m,
+    hymba_1b5,
+    llava_next_mistral_7b,
+    dlrm,
+)
+
+ARCHS = {
+    "whisper-large-v3": whisper_large_v3.CONFIG,
+    "llama3.2-1b": llama3_2_1b.CONFIG,
+    "internlm2-20b": internlm2_20b.CONFIG,
+    "qwen3-8b": qwen3_8b.CONFIG,
+    "mistral-large-123b": mistral_large_123b.CONFIG,
+    "rwkv6-1.6b": rwkv6_1b6.CONFIG,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e.CONFIG,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m.CONFIG,
+    "hymba-1.5b": hymba_1b5.CONFIG,
+    "llava-next-mistral-7b": llava_next_mistral_7b.CONFIG,
+    "dlrm": dlrm.CONFIG,            # the paper's own architecture
+}
+
+
+def get_arch(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)

@@ -1,0 +1,38 @@
+"""The paper's contribution: ABFT soft-error detection for low-precision ops.
+
+- :mod:`repro.core.abft_gemm`      — Algorithm 1 (ABFT for quantized GEMM)
+- :mod:`repro.core.abft_embedding` — Algorithm 2 (ABFT for quantized EmbeddingBag)
+- :mod:`repro.core.abft_float`     — beyond-paper float ABFT (training GEMMs)
+- :mod:`repro.core.inject`         — bit-flip / value-replacement fault injection
+- :mod:`repro.core.policy`         — FaultReport plumbing + detect->act policies
+- :mod:`repro.core.checksum`       — pytree mod-checksums (checkpoints, collectives)
+"""
+from repro.core.abft_gemm import (
+    MOD,
+    encode_weight_checksum,
+    abft_qgemm,
+    abft_qgemm_packed,
+    pack_encoded_b,
+    verify_rows,
+)
+from repro.core.abft_embedding import (
+    table_rowsums,
+    embedding_bag,
+    abft_embedding_bag,
+)
+from repro.core.policy import FaultReport, merge_reports, empty_report
+
+__all__ = [
+    "MOD",
+    "encode_weight_checksum",
+    "abft_qgemm",
+    "abft_qgemm_packed",
+    "pack_encoded_b",
+    "verify_rows",
+    "table_rowsums",
+    "embedding_bag",
+    "abft_embedding_bag",
+    "FaultReport",
+    "merge_reports",
+    "empty_report",
+]

@@ -1,0 +1,84 @@
+"""Fault injection — the paper's two fault models (§IV-C, §VI-B).
+
+Model 1: *random single-bit flip* — flip one random bit of one random element.
+Model 2: *random data fluctuation* — replace one element with a uniform random
+value of its dtype's range.
+
+Injectors are pure functions (value in, corrupted value out) so they compose
+with jit/vmap; benchmark harnesses vmap over keys to run the paper's
+2800-sample campaigns in one call.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _uint_dtype(dtype) -> jnp.dtype:
+    return {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}[jnp.dtype(dtype).itemsize]
+
+
+def flip_bit(x: jax.Array, flat_index: jax.Array, bit: jax.Array) -> jax.Array:
+    """Flip bit ``bit`` of the element at ``flat_index`` (any int/float dtype)."""
+    udtype = _uint_dtype(x.dtype)
+    flat = jax.lax.bitcast_convert_type(x.reshape(-1), udtype)
+    mask = (jnp.asarray(1, udtype) << bit.astype(udtype))
+    flat = flat.at[flat_index].set(flat[flat_index] ^ mask)
+    return jax.lax.bitcast_convert_type(flat, x.dtype).reshape(x.shape)
+
+
+def random_bitflip(key: jax.Array, x: jax.Array,
+                   bit_range: tuple[int, int] | None = None) -> jax.Array:
+    """Fault model 1. ``bit_range=(lo, hi)`` restricts to bits [lo, hi)."""
+    nbits = jnp.dtype(x.dtype).itemsize * 8
+    lo, hi = bit_range if bit_range is not None else (0, nbits)
+    k1, k2 = jax.random.split(key)
+    idx = jax.random.randint(k1, (), 0, x.size)
+    bit = jax.random.randint(k2, (), lo, hi)
+    return flip_bit(x, idx, bit)
+
+
+def random_value(key: jax.Array, x: jax.Array) -> jax.Array:
+    """Fault model 2: one element replaced by a uniform random bit-pattern."""
+    udtype = _uint_dtype(x.dtype)
+    k1, k2 = jax.random.split(key)
+    idx = jax.random.randint(k1, (), 0, x.size)
+    nbits = jnp.dtype(x.dtype).itemsize * 8
+    rnd_bits = jax.random.bits(k2, (), jnp.uint32)
+    rnd = (rnd_bits & jnp.uint32((1 << min(nbits, 32)) - 1)).astype(udtype)
+    flat = jax.lax.bitcast_convert_type(x.reshape(-1), udtype)
+    flat = flat.at[idx].set(rnd)
+    return jax.lax.bitcast_convert_type(flat, x.dtype).reshape(x.shape)
+
+
+def flip_bit_in_leaf(tree, key: jax.Array):
+    """Flip one random bit in one random (largest-ish) leaf of a pytree.
+
+    Host-side demo helper (serve driver / examples): picks a leaf weighted
+    by size so big weight matrices — the realistic victims — dominate.
+    Returns (corrupted_tree, leaf_path_str).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    sizes = jnp.asarray([l.size for _, l in leaves], jnp.float32)
+    k1, k2 = jax.random.split(key)
+    li = int(jax.random.choice(k1, len(leaves), p=sizes / sizes.sum()))
+    path, leaf = leaves[li]
+    corrupted = random_bitflip(k2, leaf)
+    flat = [l for _, l in leaves]
+    flat[li] = corrupted
+    return (jax.tree_util.tree_unflatten(treedef, flat),
+            jax.tree_util.keystr(path))
+
+
+@partial(jax.jit, static_argnames=("fn", "n"))
+def campaign(fn, key: jax.Array, n: int):
+    """Run ``fn(key_i) -> bool detected`` for n keys; returns detected count.
+
+    The benchmark harnesses pass closures that (inject -> run op -> read
+    err_count) to reproduce the paper's Tables II / III at full sample size.
+    """
+    keys = jax.random.split(key, n)
+    detected = jax.vmap(fn)(keys)
+    return jnp.sum(detected.astype(jnp.int32))

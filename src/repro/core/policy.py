@@ -1,0 +1,100 @@
+"""Fault reports and detect->act policies.
+
+Every ABFT-protected op contributes to a :class:`FaultReport` — a small int32
+pytree threaded functionally through layers, models, and step functions (it
+scans/pmaps/pjits like any other pytree).  Policies decide what a step does
+when ``report.total_errors() > 0``:
+
+- ``log``       — surface counts in step metrics (default; zero control flow)
+- ``recompute`` — re-run the op under ``lax.cond`` (paper §I: an error that
+                  strikes twice is vanishingly rare, so one deterministic
+                  retry clears transient faults; retries are counted)
+- ``abort``     — raise via ``checkify``-style debug check at the host level
+                  (used by serving: fail the request, not the server)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FaultReport:
+    gemm_checks: jax.Array
+    gemm_errors: jax.Array
+    eb_checks: jax.Array
+    eb_errors: jax.Array
+    recomputes: jax.Array
+
+    def tree_flatten(self):
+        return ((self.gemm_checks, self.gemm_errors, self.eb_checks,
+                 self.eb_errors, self.recomputes), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def total_errors(self) -> jax.Array:
+        return self.gemm_errors + self.eb_errors
+
+    def as_metrics(self) -> dict:
+        return {
+            "abft/gemm_checks": self.gemm_checks,
+            "abft/gemm_errors": self.gemm_errors,
+            "abft/eb_checks": self.eb_checks,
+            "abft/eb_errors": self.eb_errors,
+            "abft/recomputes": self.recomputes,
+        }
+
+
+def empty_report() -> FaultReport:
+    z = jnp.zeros((), jnp.int32)
+    return FaultReport(z, z, z, z, z)
+
+
+def gemm_report(err_count: jax.Array, recomputes=None) -> FaultReport:
+    z = jnp.zeros((), jnp.int32)
+    r = z if recomputes is None else recomputes.astype(jnp.int32)
+    return FaultReport(jnp.ones((), jnp.int32), err_count.astype(jnp.int32),
+                       z, z, r)
+
+
+def eb_report(err_count: jax.Array) -> FaultReport:
+    z = jnp.zeros((), jnp.int32)
+    return FaultReport(z, z, jnp.ones((), jnp.int32),
+                       err_count.astype(jnp.int32), z)
+
+
+def merge_reports(*reports: FaultReport) -> FaultReport:
+    if not reports:
+        return empty_report()
+    return jax.tree.map(lambda *xs: sum(xs), *reports)
+
+
+def with_recompute(op: Callable, max_retries: int = 1):
+    """Wrap an ABFT op ``op() -> (out, err_count)`` with detect->recompute.
+
+    In simulation a deterministic re-run returns the same value; on real
+    hardware a transient fault does not recur.  What matters structurally is
+    the control flow (lax.cond) and the retry accounting, both preserved.
+    """
+    def wrapped(*args, **kwargs):
+        out, err = op(*args, **kwargs)
+        retries = jnp.zeros((), jnp.int32)
+        for _ in range(max_retries):
+            def retry(_):
+                o2, e2 = op(*args, **kwargs)
+                return o2, e2, jnp.ones((), jnp.int32)
+
+            def keep(_):
+                return out, err, jnp.zeros((), jnp.int32)
+
+            out, err, did = jax.lax.cond(err > 0, retry, keep, None)
+            retries = retries + did
+        return out, err, retries
+
+    return wrapped

@@ -1,0 +1,8 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    SyntheticLMDataset,
+    SyntheticDLRMDataset,
+    make_dataset,
+    shard_batch,
+    Prefetcher,
+)

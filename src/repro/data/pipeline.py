@@ -1,0 +1,173 @@
+"""Synthetic data pipelines: deterministic, host-sharded, prefetched.
+
+Production DLRM/LM input pipelines stream from feature stores; here the
+substrate is complete but the source is synthetic (seeded — every batch is a
+pure function of (seed, step), so a restarted/elastic run regenerates the
+exact same stream without data-loader checkpoints; the paper's philosophy of
+cheap recompute applies to data too).
+
+Pieces:
+- :class:`SyntheticLMDataset` — next-token LM batches for every LM-family
+  arch (token/label shift, optional patch/frame stubs for vlm/encdec).
+- :class:`SyntheticDLRMDataset` — the paper's own workload: dense features +
+  26 multi-hot categorical bags (variable pooling, padded to fixed shape).
+- :func:`shard_batch` — places a host-global numpy batch onto the mesh
+  according to the step's input shardings (multi-host ready: each host only
+  materializes its addressable shard).
+- :class:`Prefetcher` — double-buffered host->device pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+IGNORE = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    # DLRM-specific knobs (paper Table I scale-down happens in configs)
+    avg_pool: int = 100
+    max_pool: int = 128
+
+
+def _rng_for(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+class SyntheticLMDataset:
+    """Seeded synthetic LM batches matching ``Model.input_specs`` layouts."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig,
+                 data_cfg: DataConfig = DataConfig()):
+        self.cfg = cfg
+        self.shape = shape
+        self.data_cfg = data_cfg
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg, shape = self.cfg, self.shape
+        rng = _rng_for(self.data_cfg.seed, step)
+        B, S = shape.global_batch, shape.seq_len
+        text_len = S
+        batch: Dict[str, np.ndarray] = {}
+        if cfg.family == "vlm":
+            text_len = S - cfg.n_patches
+            batch["patches"] = rng.standard_normal(
+                (B, cfg.n_patches, cfg.patch_dim), dtype=np.float32)
+        if cfg.family == "hybrid":
+            text_len = S - cfg.meta_tokens
+        if cfg.family == "encdec":
+            batch["frames"] = rng.standard_normal(
+                (B, cfg.enc_seq, cfg.d_model), dtype=np.float32)
+        toks = rng.integers(0, cfg.vocab, (B, text_len + 1), dtype=np.int64)
+        batch["tokens"] = toks[:, :-1].astype(np.int32)
+        if shape.kind == "train":
+            batch["labels"] = toks[:, 1:].astype(np.int32)
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class SyntheticDLRMDataset:
+    """The paper's workload: dense features + multi-hot categorical bags.
+
+    Bags use the fixed-shape padded layout of core.abft_embedding:
+    ``indices [B, n_tables, max_pool]`` padded with -1, pooling sizes drawn
+    around ``avg_pool`` (paper Table I uses avg 100).
+    """
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig,
+                 data_cfg: DataConfig = DataConfig()):
+        self.cfg = cfg
+        self.shape = shape
+        self.data_cfg = data_cfg
+
+    @property
+    def extras(self):
+        from repro.configs.dlrm import EXTRAS
+        return EXTRAS
+
+    def batch_at(self, step: int, *, table_rows: Optional[int] = None
+                 ) -> Dict[str, np.ndarray]:
+        ex, dc = self.extras, self.data_cfg
+        rows = table_rows or ex.table_rows
+        rng = _rng_for(dc.seed, step)
+        B = self.shape.global_batch
+        dense = rng.standard_normal((B, ex.n_dense)).astype(np.float32)
+        pools = rng.integers(1, dc.max_pool + 1, (ex.n_tables, B))
+        idx = rng.integers(0, rows,
+                           (ex.n_tables, B, dc.max_pool), dtype=np.int64)
+        mask = np.arange(dc.max_pool)[None, None, :] < pools[..., None]
+        idx = np.where(mask, idx, -1).astype(np.int32)
+        label = rng.integers(0, 2, (B,)).astype(np.float32)
+        return {"dense": dense, "bags": idx, "label": label}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_dataset(cfg: ArchConfig, shape: ShapeConfig,
+                 data_cfg: DataConfig = DataConfig()):
+    if cfg.family == "dlrm":
+        return SyntheticDLRMDataset(cfg, shape, data_cfg)
+    return SyntheticLMDataset(cfg, shape, data_cfg)
+
+
+def shard_batch(batch: Dict[str, np.ndarray], shardings) -> Dict:
+    """Host-global numpy batch -> sharded jax arrays.
+
+    Single-process: ``device_put`` with the target sharding. Multi-host: each
+    process passes only its addressable slice via
+    ``jax.make_array_from_process_local_data`` (shape-preserving).
+    """
+    def put(x, s):
+        if jax.process_count() > 1:  # pragma: no cover - multihost only
+            return jax.make_array_from_process_local_data(s, x)
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, batch, shardings)
+
+
+class Prefetcher:
+    """Double-buffered background host->device transfer."""
+
+    def __init__(self, it: Iterator, shardings=None, depth: int = 2):
+        self._it = it
+        self._shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for batch in self._it:
+                if self._shardings is not None:
+                    batch = shard_batch(batch, self._shardings)
+                self._q.put(batch)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: quantized EmbeddingBag with fused ABFT row-sum.
+
+TPU-native analogue of FBGEMM's prefetching EB (DESIGN.md §3): bag indices
+are *scalar-prefetched* (``PrefetchScalarGridSpec``) so the index of the next
+row is known to the DMA engine ahead of the grid step; each step streams one
+embedding row HBM→VMEM, dequantizes (α_i, β_i), and accumulates both the bag
+vector and its scalar sum — the left side of Eq. (5) — in the same pass.
+
+grid = (bags, pool): for bag ``b``, steps ``p = 0..pool-1`` accumulate row
+``indices[b, p]``.  Padded slots (index < 0) are pre-masked by the wrapper
+into (row 0, weight 0).
+
+Outputs: ``R [bags, d] f32`` and ``rsum [bags, 1] f32`` (Σ_j R[b, j]).
+The Eq. (5) comparison against the gathered table row-sums is O(bags·pool)
+and happens in the ops wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, row_ref, ab_ref, r_ref, rsum_ref, acc_ref, *,
+            pool: int):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    alpha = ab_ref[0, 0, p]
+    beta = ab_ref[0, 1, p]
+    w = ab_ref[0, 2, p]
+    row = row_ref[...].astype(jnp.float32)      # [1, d]
+    acc_ref[...] += w * (alpha * row + beta)
+
+    @pl.when(p == pool - 1)
+    def _flush():
+        r_ref[...] = acc_ref[...]
+        rsum_ref[...] = jnp.sum(acc_ref[...], axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def abft_eb_pallas(table_q: jax.Array, alphas: jax.Array, betas: jax.Array,
+                   indices: jax.Array, weights: jax.Array | None = None, *,
+                   interpret: bool = False):
+    """Gather-and-sum with fused RSum. Returns ``(R [bags,d], rsum [bags])``.
+
+    table_q int8 [rows, d]; alphas/betas f32 [rows]; indices int32
+    [bags, pool] (−1 padded); weights f32 [bags, pool] or None.
+    """
+    bags, pool = indices.shape
+    rows, d = table_q.shape
+    valid = indices >= 0
+    safe_idx = jnp.where(valid, indices, 0).astype(jnp.int32)
+    w = jnp.ones_like(alphas[safe_idx]) if weights is None else weights
+    w = jnp.where(valid, w, 0.0)
+    # [bags, 3, pool]: per-slot (alpha, beta*w-handling, weight) — gathered by
+    # XLA (O(bags*pool) — negligible vs the O(bags*pool*d) row traffic).
+    ab = jnp.stack([alphas[safe_idx], betas[safe_idx], w], axis=1)
+
+    grid = (bags, pool)
+    r, rsum = pl.pallas_call(
+        functools.partial(_kernel, pool=pool),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # one embedding row per step, addressed by the prefetched
+                # flat index — the TPU analogue of software prefetch.
+                pl.BlockSpec(
+                    (1, d), lambda b, p, idx_ref: (idx_ref[b, p], 0)),
+                pl.BlockSpec((1, 3, pool), lambda b, p, idx_ref: (b, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, d), lambda b, p, idx_ref: (b, 0)),
+                pl.BlockSpec((1, 1), lambda b, p, idx_ref: (b, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((bags, d), jnp.float32),
+            jax.ShapeDtypeStruct((bags, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(safe_idx, table_q, ab)
+    return r, rsum[:, 0]

@@ -1,0 +1,75 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``use_pallas`` selects the Pallas path (TPU target; ``interpret=True``
+executes the kernel body on CPU for validation) vs. the pure-XLA path (the
+op set the dry-run lowers — identical math, real HLO cost model).  On a CPU
+container the default is the XLA path; on TPU it is the Pallas path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abft_gemm as _ag
+from repro.core import abft_embedding as _ae
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def abft_qgemm(a_q: jax.Array, b_packed: jax.Array, *,
+               use_pallas: Optional[bool] = None, interpret: bool = False,
+               bm: int = 128, bn: int = 128, bk: int = 128):
+    """ABFT int8 GEMM against a packed B'. -> (C int32, err_rows int32 [m])."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        from repro.kernels.abft_qgemm import abft_qgemm_pallas
+        return abft_qgemm_pallas(a_q, b_packed, bm=bm, bn=bn, bk=bk,
+                                 interpret=interpret or not _on_tpu())
+    return _ref.abft_qgemm_ref(a_q, b_packed)
+
+
+def abft_embedding_bag(table_q, alphas, betas, indices, rowsums,
+                       weights=None, *, rel_bound: float = _ae.REL_BOUND,
+                       use_pallas: Optional[bool] = None,
+                       interpret: bool = False):
+    """EB forward + Eq. (5) check. -> AbftEbOut(r, err_bags, err_count)."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        from repro.kernels.abft_embeddingbag import abft_eb_pallas
+        r, rsum = abft_eb_pallas(table_q, alphas, betas, indices, weights,
+                                 interpret=interpret or not _on_tpu())
+        d = table_q.shape[-1]
+        valid = indices >= 0
+        safe_idx = jnp.where(valid, indices, 0)
+        a = alphas[safe_idx]
+        b = betas[safe_idx]
+        w = jnp.ones_like(a) if weights is None else weights
+        w = jnp.where(valid, w, 0.0)
+        ct = rowsums[safe_idx].astype(jnp.float32)
+        csum = jnp.sum(w * (a * ct + d * b), axis=-1)
+        # accumulation-magnitude bound (see core.abft_embedding)
+        mag = jnp.sum(jnp.abs(w) * (jnp.abs(a) * jnp.abs(ct)
+                                    + d * jnp.abs(b)), axis=-1)
+        tol = rel_bound * jnp.maximum(mag, 1.0)
+        err_bags = jnp.abs(rsum - csum) > tol
+        return _ae.AbftEbOut(r, err_bags, jnp.sum(err_bags).astype(jnp.int32))
+    return _ae.abft_embedding_bag(table_q, alphas, betas, indices, rowsums,
+                                  weights, rel_bound)
+
+
+def quantize_rows(x: jax.Array, *, use_pallas: Optional[bool] = None,
+                  interpret: bool = False):
+    """Per-row signed-int8 dynamic quantization. -> (q, alpha, beta)."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        from repro.kernels.quantize_rows import quantize_rows_pallas
+        return quantize_rows_pallas(x, interpret=interpret or not _on_tpu())
+    return _ref.quantize_rows_ref(x)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: per-row dynamic activation quantization (signed int8).
+
+One pass per row block: rowwise min/max reduction (VPU), derive (α, β) with
+``x ≈ α·q + β`` over the signed range [-128, 127], emit q int8 + α, β f32.
+Feeds :mod:`repro.kernels.abft_qgemm` (whose MXU path is s8×s8).
+
+Block shape: (bm, n) — a full activation row must fit VMEM, which holds for
+every assigned arch (max d_model 12288 → 48 KiB/row in f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INT8_LO, INT8_HI = -128, 127
+
+
+def _kernel(x_ref, q_ref, alpha_ref, beta_ref):
+    x = x_ref[...]
+    xmin = jnp.min(x, axis=1, keepdims=True)
+    xmax = jnp.max(x, axis=1, keepdims=True)
+    span = jnp.maximum(xmax - xmin, 1e-12)
+    alpha = span / (INT8_HI - INT8_LO)
+    beta = xmin - INT8_LO * alpha
+    q = jnp.clip(jnp.round((x - beta) / alpha), INT8_LO, INT8_HI)
+    q_ref[...] = q.astype(jnp.int8)
+    alpha_ref[...] = alpha
+    beta_ref[...] = beta
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def quantize_rows_pallas(x: jax.Array, *, bm: int = 128,
+                         interpret: bool = False):
+    """f32 [m, n] -> (q int8 [m, n], alpha f32 [m], beta f32 [m])."""
+    m, n = x.shape
+    mp = -(-m // bm) * bm
+    x_pad = jnp.zeros((mp, n), x.dtype).at[:m].set(x)
+    q, alpha, beta = pl.pallas_call(
+        _kernel,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, n), jnp.int8),
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_pad.astype(jnp.float32))
+    return q[:m], alpha[:m, 0], beta[:m, 0]

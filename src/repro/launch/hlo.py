@@ -1,0 +1,72 @@
+"""HLO post-processing for the roofline: collective-byte accounting.
+
+``collective_bytes`` is not in ``compiled.cost_analysis()``; we parse the
+compiled (post-SPMD) HLO text and sum the **result** bytes of every
+collective op (all-gather results count at gathered size, all-reduce at
+tensor size, reduce-scatter at the scattered shard size) — a consistent,
+reproducible convention recorded in EXPERIMENTS.md.
+
+Async pairs (``all-gather-start``/``-done``) are counted once at ``-start``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?(?:,\s*)?)+)\)?\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {count, bytes} + total, from compiled HLO text."""
+    stats: Dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    seen_done = ("-done(", "-update(")
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if any(s in line for s in seen_done):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes, kind, _ = m.groups()
+        b = _shape_bytes(shapes)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += b
+    total = {"count": sum(v["count"] for v in stats.values()),
+             "bytes": sum(v["bytes"] for v in stats.values())}
+    out = dict(stats)
+    out["total"] = total
+    return out
+
+
+def scan_trip_counts(hlo_text: str) -> int:
+    """Best-effort: product-free sum of while-loop trip counts is not
+    recoverable from text portably; we rely on cost_analysis flops instead.
+    Kept for HLO inspection in the perf loop."""
+    return hlo_text.count("while(")

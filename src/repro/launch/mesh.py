@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=("data","model") single pod; (2,16,16)=("pod","data","model")
+    for the 2-pod / 512-chip configuration."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        return jax.make_mesh(shape, axes)
+    except (ValueError, TypeError):
+        # fall back: slice exactly prod(shape) devices and reshape
+        n = int(np.prod(shape))
+        devices = np.asarray(jax.devices()[:n]).reshape(shape)
+        from jax.sharding import Mesh
+        return Mesh(devices, axes)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    import jax
+
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(devices, axes)

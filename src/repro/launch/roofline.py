@@ -1,0 +1,85 @@
+"""Roofline terms from dry-run artifacts (TPU v5e targets).
+
+Per (arch × shape × mesh) cell::
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = link_bytes_per_device / ICI_BW
+
+All inputs are per-device quantities (the compiled module is the SPMD
+per-partition program — verified convention, see EXPERIMENTS.md §Dry-run).
+``MODEL_FLOPS`` is the analytic useful-work floor:
+    train   6·N_active·tokens      (fwd 2x + bwd 4x)
+    prefill 2·N_active·tokens
+    decode  2·N_active·batch       (one token per sequence)
+The ratio MODEL_FLOPS / (HLO flops × devices) exposes remat/redundancy
+waste (>1/3 for remat-heavy training is expected: remat re-runs fwd).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip (int8 counted at same rate)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def roofline_terms(cost: dict, *, n_devices: int) -> Dict[str, float]:
+    compute = cost["flops"] / PEAK_FLOPS
+    memory = cost["bytes"] / HBM_BW
+    collective = cost["collective_link_bytes"] / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])
+    bound = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant[0],
+        "step_lower_bound_s": bound,
+        # fraction of roofline achieved if the step ran exactly at the
+        # dominant-term bound with perfect overlap of the other two
+        "roofline_fraction": (compute / bound) if bound > 0 else 0.0,
+    }
+
+
+def count_params(lp_tree, *, active_moe: Optional[float] = None,
+                 moe_key: str = "moe") -> Dict[str, float]:
+    """(total, active) parameter counts from a LogicalParam/SDS tree.
+
+    ``active_moe`` scales leaves under a ``moe`` subtree by top_k/n_experts
+    (router-active fraction) for the MoE MODEL_FLOPS convention.
+    """
+    from repro.sharding import is_lp
+
+    total = 0.0
+    active = 0.0
+
+    def visit(path, leaf):
+        nonlocal total, active
+        v = leaf.value if is_lp(leaf) else leaf
+        n = 1.0
+        for d in v.shape:
+            n *= d
+        total += n
+        frac = 1.0
+        if active_moe is not None and any(
+                getattr(k, "key", None) == moe_key for k in path):
+            frac = active_moe
+        active += frac * n
+
+    leaves = jax.tree_util.tree_flatten_with_path(
+        lp_tree, is_leaf=is_lp)[0]
+    for path, leaf in leaves:
+        visit(path, leaf)
+    return {"total": total, "active": active}
+
+
+def model_flops(kind: str, n_active: float, *, tokens: float) -> float:
+    """Analytic useful FLOPs for the whole step (global, all devices)."""
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens     # prefill & decode fwd-only

@@ -1,0 +1,2 @@
+"""Model-building layers. Every forward returns ``(y, FaultReport)`` so ABFT
+detection results flow up to the step functions."""

@@ -1,0 +1,279 @@
+"""GQA attention: chunked flash-scan (train/prefill) + KV-cache decode.
+
+Layouts (sharding-driven, DESIGN.md §5):
+  * train/prefill: q,k,v in **H-layout** [B, H, S, dh] with KV heads repeated
+    to H — the head dim shards cleanly on `model` (H % 16 == 0 archs) and the
+    repeat is a local slice under SPMD.  KV memory stays O(local heads).
+  * decode: cache in **grouped KV layout** [B, Kv, S, dh] with the *sequence*
+    dim sequence-parallel over `model` (kv_heads of 5/8/20 never divide 16);
+    softmax statistics and PV partials reduce over shards with tiny
+    collectives.
+
+The flash-scan streams KV chunks with online-softmax statistics (f32), so
+score matrices never materialize beyond [.., Sq, chunk].  Masking supports:
+causal, sliding window (traced per-layer scalar), and an always-visible
+global prefix (Hymba meta tokens).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy
+from repro.layers.common import Ctx
+from repro.layers.linear import apply_linear, maybe_qlinear_init
+from repro.layers.norms import headnorm, init_headnorm
+from repro.layers.rope import apply_rope
+from repro.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   *, qk_norm: bool = False, quant: bool = False,
+                   dtype=jnp.float32, bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": maybe_qlinear_init(ks[0], d_model, n_heads * head_dim,
+                                 ("embed", "heads_x"), quant, dtype, bias),
+        "wk": maybe_qlinear_init(ks[1], d_model, n_kv * head_dim,
+                                 ("embed", "heads_x"), quant, dtype, bias),
+        "wv": maybe_qlinear_init(ks[2], d_model, n_kv * head_dim,
+                                 ("embed", "heads_x"), quant, dtype, bias),
+        "wo": maybe_qlinear_init(ks[3], n_heads * head_dim, d_model,
+                                 ("heads_x", "embed"), quant, dtype, bias),
+    }
+    if qk_norm:
+        p["q_norm"] = init_headnorm(head_dim, dtype)
+        p["k_norm"] = init_headnorm(head_dim, dtype)
+    return p
+
+
+def _split_heads(x, n: int, head_dim: int):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, head_dim)
+
+
+def _qkv(p, x, x_kv, ctx, *, n_heads, n_kv, head_dim, positions, kv_pos,
+         use_rope, rope_theta, rules):
+    """Project + norm + rope + repeat-to-H. Returns q,k,v in H-layout."""
+    src = x if x_kv is None else x_kv
+    q, r1 = apply_linear(p["wq"], x, ctx)
+    k, r2 = apply_linear(p["wk"], src, ctx)
+    v, r3 = apply_linear(p["wv"], src, ctx)
+    q = _split_heads(q, n_heads, head_dim)
+    k = _split_heads(k, n_kv, head_dim)
+    v = _split_heads(v, n_kv, head_dim)
+    if "q_norm" in p:
+        q = headnorm(p["q_norm"], q)
+        k = headnorm(p["k_norm"], k)
+    if use_rope and x_kv is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, kv_pos, rope_theta)
+    g = n_heads // n_kv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    # H-layout [B, H, S, dh]; H shards on `model` when divisible.
+    q = constrain(q.transpose(0, 2, 1, 3), ("batch", "heads_x", None, None),
+                  rules)
+    k = constrain(k.transpose(0, 2, 1, 3), ("batch", "heads_x", None, None),
+                  rules)
+    v = constrain(v.transpose(0, 2, 1, 3), ("batch", "heads_x", None, None),
+                  rules)
+    return q, k, v, (r1, r2, r3)
+
+
+def flash_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
+                    window=None, prefix_global: int = 0, chunk: int = 1024):
+    """Online-softmax attention over KV chunks.
+
+    q [B,H,Sq,dh]; k,v [B,H,Skv,dh]; q_positions [B,Sq]; kv_positions
+    [B,Skv] (−1 marks padding); window may be a traced scalar.
+    Returns [B,H,Sq,dh] (f32)."""
+    b, h, sq, dh = q.shape
+    skv = k.shape[2]
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+    kc = k.reshape(b, h, n_chunks, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, n_chunks, chunk, dh).transpose(2, 0, 1, 3, 4)
+    pc = kv_positions.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    scale = dh ** -0.5
+    qf = q.astype(jnp.bfloat16)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i = xs                                # [B,H,C,dh],[B,C]
+        s = jnp.einsum("bhsd,bhtd->bhst", qf, k_i.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        qp = q_positions[:, None, :, None]                # [B,1,Sq,1]
+        kp = p_i[:, None, None, :]                        # [B,1,1,C]
+        mask = kp >= 0
+        if causal:
+            mask &= qp >= kp
+        if window is not None:
+            in_win = (qp - kp) < window
+            if prefix_global > 0:
+                in_win |= kp < prefix_global
+            mask &= in_win
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bhst,bhtd->bhsd",
+                                p.astype(jnp.bfloat16),
+                                v_i.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    if n_chunks == 1:
+        (m, l, acc), _ = body((m0, l0, acc0), (kc[0], vc[0], pc[0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    return acc / jnp.maximum(l, 1e-37)[..., None]
+
+
+def attention(p, x, ctx: Ctx, *, n_heads: int, n_kv: int, head_dim: int,
+              positions, rope_theta: float = 10000.0, use_rope: bool = True,
+              causal: bool = True, window=None, prefix_global: int = 0,
+              x_kv=None, kv_positions=None,
+              chunk: int = 1024) -> Tuple[jax.Array, policy.FaultReport]:
+    """Full-sequence attention (train). x [B,S,d] -> [B,S,d].
+
+    ``x_kv`` switches to cross-attention (keys/values from the encoder)."""
+    b, s, _ = x.shape
+    kv_pos = positions if kv_positions is None else kv_positions
+    q, k, v, reps = _qkv(p, x, x_kv, ctx, n_heads=n_heads, n_kv=n_kv,
+                         head_dim=head_dim, positions=positions,
+                         kv_pos=kv_pos, use_rope=use_rope,
+                         rope_theta=rope_theta, rules=ctx.rules)
+    out = flash_attention(q, k, v, q_positions=positions,
+                          kv_positions=kv_pos, causal=causal, window=window,
+                          prefix_global=prefix_global, chunk=chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    y, r4 = apply_linear(p["wo"], out.astype(ctx.compute_dtype), ctx)
+    return y, policy.merge_reports(*reps, r4)
+
+
+def attention_prefill(p, x, ctx: Ctx, *, n_heads, n_kv, head_dim, positions,
+                      cache_len: int, rope_theta=10000.0, use_rope=True,
+                      window=None, prefix_global: int = 0, chunk: int = 1024):
+    """Prefill: attention() + the populated grouped-layout KV cache, padded
+    to ``cache_len``."""
+    b, s, _ = x.shape
+    q, r1 = apply_linear(p["wq"], x, ctx)
+    k, r2 = apply_linear(p["wk"], x, ctx)
+    v, r3 = apply_linear(p["wv"], x, ctx)
+    q = _split_heads(q, n_heads, head_dim)
+    kh = _split_heads(k, n_kv, head_dim)
+    vh = _split_heads(v, n_kv, head_dim)
+    if "q_norm" in p:
+        q = headnorm(p["q_norm"], q)
+        kh = headnorm(p["k_norm"], kh)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        kh = apply_rope(kh, positions, rope_theta)
+    g = n_heads // n_kv
+    k_full = jnp.repeat(kh, g, axis=2) if g > 1 else kh
+    v_full = jnp.repeat(vh, g, axis=2) if g > 1 else vh
+    qh = constrain(q.transpose(0, 2, 1, 3),
+                   ("batch", "heads_x", None, None), ctx.rules)
+    k_full = constrain(k_full.transpose(0, 2, 1, 3),
+                       ("batch", "heads_x", None, None), ctx.rules)
+    v_full = constrain(v_full.transpose(0, 2, 1, 3),
+                       ("batch", "heads_x", None, None), ctx.rules)
+    out = flash_attention(qh, k_full, v_full, q_positions=positions,
+                          kv_positions=positions, causal=True, window=window,
+                          prefix_global=prefix_global, chunk=chunk)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    y, r4 = apply_linear(p["wo"], out.astype(ctx.compute_dtype), ctx)
+    pad = cache_len - s
+    kt = kh.transpose(0, 2, 1, 3)            # grouped layout [B,Kv,S,dh]
+    vt = vh.transpose(0, 2, 1, 3)
+    cache = {
+        "k": constrain(jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                       ("batch", None, "kv_seq", None), ctx.rules),
+        "v": constrain(jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                       ("batch", None, "kv_seq", None), ctx.rules),
+    }
+    return y, cache, policy.merge_reports(r1, r2, r3, r4)
+
+
+def attention_decode(p, x, cache, pos, ctx: Ctx, *, n_heads: int, n_kv: int,
+                     head_dim: int, rope_theta: float = 10000.0,
+                     use_rope: bool = True, window=None,
+                     prefix_global: int = 0, cross: bool = False):
+    """One-token decode. x [B,d]; cache {k,v [B,Kv,S,dh]} (seq-sharded);
+    pos [B].  Cross-attention decode attends a static (encoder) cache.
+    Returns (y [B,d], new_cache, report)."""
+    b, d = x.shape
+    s_max = cache["k"].shape[2]
+    q, r1 = apply_linear(p["wq"], x[:, None, :], ctx)
+    q = _split_heads(q, n_heads, head_dim)                  # [B,1,H,dh]
+    if not cross:
+        k_new, r2 = apply_linear(p["wk"], x[:, None, :], ctx)
+        v_new, r3 = apply_linear(p["wv"], x[:, None, :], ctx)
+        k_new = _split_heads(k_new, n_kv, head_dim)
+        v_new = _split_heads(v_new, n_kv, head_dim)
+        if "q_norm" in p:
+            q = headnorm(p["q_norm"], q)
+            k_new = headnorm(p["k_norm"], k_new)
+        if use_rope:
+            q = apply_rope(q, pos[:, None], rope_theta)
+            k_new = apply_rope(k_new, pos[:, None], rope_theta)
+        bidx = jnp.arange(b)
+        cache = {
+            "k": cache["k"].at[bidx, :, pos].set(
+                k_new[:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[bidx, :, pos].set(
+                v_new[:, 0].astype(cache["v"].dtype)),
+        }
+        cache = {
+            "k": constrain(cache["k"], ("batch", None, "kv_seq", None),
+                           ctx.rules),
+            "v": constrain(cache["v"], ("batch", None, "kv_seq", None),
+                           ctx.rules),
+        }
+        reports = (r1, r2, r3)
+    else:
+        if "q_norm" in p:
+            q = headnorm(p["q_norm"], q)
+        reports = (r1,)
+
+    g = n_heads // n_kv
+    qg = q.reshape(b, n_kv, g, head_dim)
+    kf = cache["k"].astype(jnp.bfloat16)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.bfloat16), kf,
+                   preferred_element_type=jnp.float32) * head_dim ** -0.5
+    kv_pos = jnp.arange(s_max)[None, None, None, :]
+    if cross:
+        valid = jnp.broadcast_to(kv_pos >= 0, s.shape)
+    else:
+        valid = kv_pos <= pos[:, None, None, None]
+        if window is not None:
+            in_win = (pos[:, None, None, None] - kv_pos) < window
+            if prefix_global > 0:
+                in_win |= kv_pos < prefix_global
+            valid &= in_win
+    s = jnp.where(valid, s, NEG_INF)
+    probs = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs.astype(jnp.bfloat16),
+                     cache["v"].astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, n_heads * head_dim).astype(ctx.compute_dtype)
+    y, r4 = apply_linear(p["wo"], out, ctx)
+    return y, cache, policy.merge_reports(*reports, r4)

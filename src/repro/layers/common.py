@@ -1,0 +1,40 @@
+"""Shared layer context."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call layer context (static under jit).
+
+    quant=True selects the paper's int8 pipeline (Fig. 1) with ABFT; False is
+    the bf16 training path.  ``abft`` gates verification (off = the paper's
+    "unprotected" baseline for overhead measurements).
+    """
+    rules: Optional[dict] = None          # sharding rules for constrain()
+    quant: bool = False                   # int8 serving path
+    abft: bool = True                     # ABFT verification on
+    float_abft: bool = False              # float ABFT on bf16 GEMMs
+    compute_dtype: Any = jnp.bfloat16
+    abft_tp_local: bool = False           # per-shard checksums (hillclimb)
+    wkv_chunk: int = 0                    # >0: chunked matmul-form WKV6
+                                          # (EXPERIMENTS.md §Perf hillclimb 1)
+    wkv_mm_bf16: bool = False             # bf16 WKV matmul operands (f32 acc)
+    ssm_chunk: int = 0                    # >0: two-level rematted mamba scan
+    moe_gather: bool = False              # scatter/gather MoE dispatch
+                                          # (EXPERIMENTS.md §Perf hillclimb 2)
+    no_remat: bool = False                # disable layer-scan remat
+    moe_seq_groups: bool = False          # scan over MoE token groups
+                                          # (bounds live dispatch buffers)
+    # Cost-probe controls (EXPERIMENTS.md §Dry-run methodology): XLA counts
+    # while bodies once, so probes unroll scans and the launcher
+    # extrapolates exactly in trip counts.
+    unroll_layers: bool = False           # unroll the layer-stack scans
+    unroll_time: bool = False             # unroll seq scans (rwkv/mamba)
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)

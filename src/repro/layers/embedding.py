@@ -1,0 +1,79 @@
+"""Token embeddings: bf16 gather (training) and quantized EB + ABFT (serving).
+
+A token lookup is an EmbeddingBag with pooling size 1 (paper §III-C); the
+serving path therefore verifies Eq. (5) per token batch.  DLRM's multi-hot
+bags use the same code with pool > 1 and optional per-index weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abft_embedding as ae
+from repro.core import policy
+from repro.layers.common import Ctx
+from repro.sharding import LogicalParam, param
+
+
+def init_embed(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": param(key, (vocab, d), ("vocab", "embed"), dtype)}
+
+
+def embed(p, tokens, ctx: Ctx):
+    x = p["table"][tokens].astype(ctx.compute_dtype)
+    return x, policy.empty_report()
+
+
+def init_qembed(key, vocab: int, d: int):
+    """Quantized table (+ per-row alpha/beta) with precomputed row sums."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    table = jax.random.randint(k1, (vocab, d), -127, 128, jnp.int8)
+    alphas = jax.random.uniform(k2, (vocab,), jnp.float32, 5e-3, 2e-2)
+    betas = jax.random.uniform(k3, (vocab,), jnp.float32, -0.1, 0.1)
+    return {
+        "table": LogicalParam(table, ("vocab", "embed")),
+        "alphas": LogicalParam(alphas, ("vocab",)),
+        "betas": LogicalParam(betas, ("vocab",)),
+        "rowsums": LogicalParam(ae.table_rowsums(table), ("vocab",)),
+    }
+
+
+def qembed(p, tokens, ctx: Ctx):
+    """tokens [...] int32 -> ([..., d] bf16, report). Pool size 1 EB-ABFT."""
+    shape = tokens.shape
+    bags = tokens.reshape(-1, 1)
+    if ctx.abft:
+        out = ae.abft_embedding_bag(p["table"], p["alphas"], p["betas"],
+                                    bags, p["rowsums"])
+        r, report = out.r, policy.eb_report(out.err_count)
+    else:
+        r = ae.embedding_bag(p["table"], p["alphas"], p["betas"], bags)
+        report = policy.empty_report()
+    d = p["table"].shape[-1]
+    return r.astype(ctx.compute_dtype).reshape(*shape, d), report
+
+
+def init_embedding_bag(key, rows: int, d: int):
+    """DLRM-style multi-hot table (quantized, ABFT-ready)."""
+    p = init_qembed(key, rows, d)
+    p["table"] = LogicalParam(p["table"].value, ("table_rows", "embed"))
+    p["alphas"] = LogicalParam(p["alphas"].value, ("table_rows",))
+    p["betas"] = LogicalParam(p["betas"].value, ("table_rows",))
+    p["rowsums"] = LogicalParam(p["rowsums"].value, ("table_rows",))
+    return p
+
+
+def embedding_bag_fwd(p, indices, ctx: Ctx, weights=None):
+    """indices [bags, pool] (−1 padded) -> ([bags, d], report)."""
+    if ctx.abft:
+        out = ae.abft_embedding_bag(p["table"], p["alphas"], p["betas"],
+                                    indices, p["rowsums"], weights)
+        return out.r.astype(ctx.compute_dtype), policy.eb_report(out.err_count)
+    r = ae.embedding_bag(p["table"], p["alphas"], p["betas"], indices, weights)
+    return r.astype(ctx.compute_dtype), policy.empty_report()
+
+
+def apply_embed(p, tokens, ctx: Ctx):
+    if "alphas" in p:
+        return qembed(p, tokens, ctx)
+    return embed(p, tokens, ctx)

@@ -1,0 +1,142 @@
+"""Linear layers: bf16 (training) and int8+ABFT (the paper's serving path).
+
+The quantized linear runs Fig. 1 end to end:
+  dynamic per-row activation quant (signed int8)  ->  int8 GEMM against the
+  packed, checksum-encoded weight  ->  Eq. (3b) verify on the int32 C_temp
+  (BEFORE requantization, §IV-B)  ->  rank-1 dequant + bias -> bf16.
+
+Weights are packed once at init/conversion (amortized encoding, §IV-A1).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abft_gemm as ag
+from repro.core import policy
+from repro.core.abft_float import abft_gemm_f32, encode_weight_f32
+from repro.kernels import ref as kref
+from repro.layers.common import Ctx
+from repro.sharding import LogicalParam, constrain, param
+
+
+# ----------------------------- bf16 linear ---------------------------------
+
+def init_linear(key, d_in: int, d_out: int,
+                axes: Tuple[str, str] = ("embed", "mlp"),
+                dtype=jnp.float32, bias: bool = True,
+                scale: Optional[float] = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": param(key, (d_in, d_out), axes, dtype, scale=scale)}
+    if bias:
+        p["b"] = LogicalParam(jnp.zeros((d_out,), dtype), (axes[1],))
+    return p
+
+
+def linear(p, x, ctx: Ctx):
+    """bf16 linear, optional float-ABFT (beyond paper) on the 2D GEMM."""
+    w = p["w"].astype(ctx.compute_dtype)
+    if ctx.float_abft:
+        m_shape = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        out = abft_gemm_f32(x2, w)
+        y = out.c.astype(ctx.compute_dtype).reshape(*m_shape, w.shape[-1])
+        report = policy.gemm_report(out.err_count)
+    else:
+        y = jnp.dot(x.astype(ctx.compute_dtype), w,
+                    preferred_element_type=ctx.compute_dtype)
+        report = policy.empty_report()
+    if "b" in p:
+        y = y + p["b"].astype(ctx.compute_dtype)
+    return y, report
+
+
+# --------------------------- int8 ABFT linear ------------------------------
+
+def init_qlinear(key, d_in: int, d_out: int,
+                 axes: Tuple[str, str] = ("embed", "mlp"),
+                 bias: bool = True):
+    """Random-int8 quantized weight, packed with a consistent checksum.
+
+    Real deployments convert from trained bf16 weights via
+    :func:`quantize_linear`; random init keeps dry-run/eval_shape pure.
+    """
+    k1, k2 = jax.random.split(key)
+    w_q = jax.random.randint(k1, (d_in, d_out), -127, 128, jnp.int8)
+    packed = ag.pack_encoded_b(w_q)                     # [d_in, d_out+128]
+    alpha = jax.random.uniform(k2, (d_out,), jnp.float32, 1e-3, 2e-3)
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0).astype(jnp.float32)
+    p = {
+        "w_packed": LogicalParam(packed, (axes[0], axes[1])),
+        "alpha": LogicalParam(alpha, (axes[1],)),
+        "colsum": LogicalParam(colsum, (axes[1],)),
+    }
+    if bias:
+        p["b"] = LogicalParam(jnp.zeros((d_out,), jnp.float32), (axes[1],))
+    return p
+
+
+def quantize_linear(p_f32, axes: Tuple[str, str] = ("embed", "mlp")):
+    """Convert a trained bf16/f32 linear into the packed ABFT form."""
+    from repro.quant import quantize_channels
+    w = p_f32["w"].value if isinstance(p_f32["w"], LogicalParam) else p_f32["w"]
+    q = quantize_channels(jnp.asarray(w, jnp.float32))
+    packed = ag.pack_encoded_b(q.values)
+    colsum = jnp.sum(q.values.astype(jnp.int32), axis=0).astype(jnp.float32)
+    out = {
+        "w_packed": LogicalParam(packed, (axes[0], axes[1])),
+        "alpha": LogicalParam(q.alpha, (axes[1],)),
+        "colsum": LogicalParam(colsum, (axes[1],)),
+    }
+    if "b" in p_f32:
+        b = p_f32["b"].value if isinstance(p_f32["b"], LogicalParam) else p_f32["b"]
+        out["b"] = LogicalParam(jnp.asarray(b, jnp.float32), (axes[1],))
+    return out
+
+
+def qlinear(p, x, ctx: Ctx):
+    """int8 ABFT linear: x [..., d_in] -> (y [..., d_out] bf16, report)."""
+    packed = p["w_packed"]
+    d_in = packed.shape[0]
+    d_out = packed.shape[1] - ag.LANE
+    m_shape = x.shape[:-1]
+    x2 = x.reshape(-1, d_in)
+
+    # dynamic per-row signed-int8 quantization (kernels/quantize_rows target)
+    x_q, a_alpha, a_beta = kref.quantize_rows_ref(x2)
+
+    if ctx.abft:
+        c, err_rows = kref.abft_qgemm_ref(x_q, packed)   # fused checksum GEMM
+        err_count = jnp.sum(err_rows).astype(jnp.int32)
+        report = policy.gemm_report(err_count)
+    else:
+        c = jax.lax.dot_general(
+            x_q, packed[:, :d_out], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        report = policy.empty_report()
+
+    # Requantization rank-1 algebra (Eq. 1 with symmetric B: beta_B = 0):
+    #   y = alpha_A[i] * alpha_B[j] * C[i,j] + beta_A[i] * alpha_B[j] * colsum_B[j]
+    w_alpha = p["alpha"]
+    y = (a_alpha[:, None] * (c.astype(jnp.float32) * w_alpha[None, :])
+         + a_beta[:, None] * (w_alpha * p["colsum"])[None, :])
+    if "b" in p:
+        y = y + p["b"][None, :]
+    y = y.astype(ctx.compute_dtype).reshape(*m_shape, d_out)
+    return y, report
+
+
+def maybe_qlinear_init(key, d_in, d_out, axes, quant: bool,
+                       dtype=jnp.float32, bias: bool = True):
+    if quant:
+        return init_qlinear(key, d_in, d_out, axes, bias=bias)
+    return init_linear(key, d_in, d_out, axes, dtype=dtype, bias=bias)
+
+
+def apply_linear(p, x, ctx: Ctx):
+    """Dispatch on parameter form (packed int8 vs float)."""
+    if "w_packed" in p:
+        return qlinear(p, x, ctx)
+    return linear(p, x, ctx)

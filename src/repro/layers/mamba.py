@@ -1,0 +1,133 @@
+"""Selective SSM (Mamba-style) branch, used by Hymba's hybrid heads.
+
+    h_t = exp(Δ_t ∘ A) ∘ h_{t-1} + (Δ_t ∘ B_t) x_t
+    y_t = C_t · h_t + D ∘ x_t
+
+h ∈ R^{d_inner × N} (N = ssm_state).  Elementwise recurrence — not a GEMM —
+so ABFT does not apply to the scan itself (DESIGN.md §Arch-applicability);
+in/out projections are ABFT-protected linears.
+
+The depthwise causal conv (kernel 4) is implemented with shifts; its state
+(last 3 inputs) joins the decode cache with the SSM state h.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy
+from repro.layers.common import Ctx
+from repro.layers.linear import apply_linear, maybe_qlinear_init
+from repro.sharding import LogicalParam, param
+
+CONV_K = 4
+
+
+def init_mamba(key, d: int, d_inner: int, n_state: int, *,
+               dt_rank: int = 32, quant: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": maybe_qlinear_init(ks[0], d, 2 * d_inner,
+                                      ("embed", "mlp"), quant, dtype,
+                                      bias=False),
+        "conv_w": param(ks[1], (CONV_K, d_inner), (None, "mlp"), dtype,
+                        scale=0.5),
+        "x_proj": maybe_qlinear_init(ks[2], d_inner, dt_rank + 2 * n_state,
+                                     ("mlp_in", None), quant, dtype,
+                                     bias=False),
+        "dt_proj": init_dt(ks[3], dt_rank, d_inner, dtype),
+        "a_log": param(ks[4], (d_inner, n_state), ("mlp", None), dtype,
+                       scale=0.5, init="ones"),
+        "d_skip": param(ks[5], (d_inner,), ("mlp",), dtype, init="ones"),
+        "out_proj": maybe_qlinear_init(jax.random.fold_in(key, 7), d_inner,
+                                       d, ("mlp_in", "embed"), quant, dtype,
+                                       bias=False),
+    }
+
+
+def init_dt(key, dt_rank: int, d_inner: int, dtype):
+    return {
+        "w": param(key, (dt_rank, d_inner), (None, "mlp"), dtype),
+        "b": LogicalParam(jnp.zeros((d_inner,), dtype), ("mlp",)),
+    }
+
+
+def _causal_conv(x, conv_w, conv_state):
+    """x [B,S,di]; conv_state [B, K-1, di] (previous inputs).
+
+    Returns (y [B,S,di], new_conv_state)."""
+    xc = jnp.concatenate([conv_state, x], axis=1)           # [B, S+K-1, di]
+    y = sum(xc[:, i:i + x.shape[1], :] * conv_w[i][None, None, :]
+            for i in range(CONV_K))
+    return y, xc[:, -(CONV_K - 1):, :]
+
+
+def mamba(p, x, cache, ctx: Ctx, *, d_inner: int, n_state: int,
+          dt_rank: int = 32) -> Tuple[jax.Array, dict, policy.FaultReport]:
+    """x [B,S,d]; cache {"conv": [B,K-1,di], "h": [B,di,N]} (f32).
+
+    Returns (y [B,S,d], new_cache, report)."""
+    b, s, d = x.shape
+    xz, r1 = apply_linear(p["in_proj"], x, ctx)
+    xin, z = jnp.split(xz, 2, axis=-1)                       # [B,S,di]
+    xin_f = xin.astype(jnp.float32)
+    conv_w = p["conv_w"].astype(jnp.float32)
+    xc, conv_state = _causal_conv(xin_f, conv_w, cache["conv"])
+    xc = jax.nn.silu(xc)
+
+    bcd, r2 = apply_linear(p["x_proj"], xc.astype(ctx.compute_dtype), ctx)
+    bcd = bcd.astype(jnp.float32)
+    dt_in = bcd[..., :dt_rank]
+    b_t = bcd[..., dt_rank:dt_rank + n_state]                # [B,S,N]
+    c_t = bcd[..., dt_rank + n_state:]                       # [B,S,N]
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"]["w"].astype(jnp.float32)
+                         + p["dt_proj"]["b"].astype(jnp.float32))  # [B,S,di]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # [di,N]
+
+    def step(h, inp):
+        x_t, dt_t, b_tt, c_tt = inp          # [B,di],[B,di],[B,N],[B,N]
+        da = jnp.exp(dt_t[..., None] * a[None])              # [B,di,N]
+        h = da * h + (dt_t * x_t)[..., None] * b_tt[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_tt)
+        return h, y_t
+
+    seq = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+           b_t.transpose(1, 0, 2), c_t.transpose(1, 0, 2))
+    chunk = ctx.ssm_chunk
+    if chunk and s > 1 and s % chunk == 0:
+        # Two-level scan: outer over chunks (h stashed at boundaries only),
+        # inner per-token under remat (one chunk's residuals live at a
+        # time).  Bounds the backward stash from O(S) states to
+        # O(S/chunk) + one chunk — the hymba train_4k OOM fix
+        # (EXPERIMENTS §Dry-run).  Streaming traffic still per-token; the
+        # structural fix is a Pallas selective-scan kernel (DESIGN §3).
+        seq_c = jax.tree.map(
+            lambda t: t.reshape((s // chunk, chunk) + t.shape[1:]), seq)
+
+        @jax.checkpoint
+        def chunk_body(h, inp_chunk):
+            return jax.lax.scan(step, h, inp_chunk)
+
+        h, ys = jax.lax.scan(chunk_body, cache["h"], seq_c)
+        ys = ys.reshape((s,) + ys.shape[2:])
+    else:
+        h, ys = jax.lax.scan(step, cache["h"], seq, unroll=ctx.unroll_time)
+    y = ys.transpose(1, 0, 2) + xc * p["d_skip"].astype(jnp.float32)[None,
+                                                                     None, :]
+    y = y.astype(ctx.compute_dtype) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(ctx.compute_dtype)
+    y, r3 = apply_linear(p["out_proj"], y, ctx)
+    return y, {"conv": conv_state, "h": h}, policy.merge_reports(r1, r2, r3)
+
+
+def init_mamba_cache(batch: int, d_inner: int, n_state: int):
+    return {
+        "conv": LogicalParam(
+            jnp.zeros((batch, CONV_K - 1, d_inner), jnp.float32),
+            ("batch", None, "mlp")),
+        "h": LogicalParam(
+            jnp.zeros((batch, d_inner, n_state), jnp.float32),
+            ("batch", "mlp", None)),
+    }

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GeLU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy
+from repro.layers.common import Ctx
+from repro.layers.linear import apply_linear, maybe_qlinear_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, *, gated: bool = True,
+             quant: bool = False, dtype=jnp.float32, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": maybe_qlinear_init(ks[0], d_model, d_ff, ("embed", "mlp"),
+                                 quant, dtype, bias),
+        "down": maybe_qlinear_init(ks[1], d_ff, d_model, ("mlp_in", "embed"),
+                                   quant, dtype, bias),
+    }
+    if gated:
+        p["gate"] = maybe_qlinear_init(ks[2], d_model, d_ff, ("embed", "mlp"),
+                                       quant, dtype, bias)
+    return p
+
+
+def mlp(p, x, ctx: Ctx):
+    up, r1 = apply_linear(p["up"], x, ctx)
+    if "gate" in p:
+        gate, r2 = apply_linear(p["gate"], x, ctx)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(ctx.compute_dtype) * up
+    else:
+        r2 = policy.empty_report()
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(ctx.compute_dtype)
+    y, r3 = apply_linear(p["down"], h, ctx)
+    return y, policy.merge_reports(r1, r2, r3)

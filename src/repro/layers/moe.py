@@ -1,0 +1,295 @@
+"""GShard-style Mixture of Experts (top-k gating, capacity factor).
+
+Dispatch/combine are one-hot einsums within token groups — the TPU-native
+MoE pattern (dense MXU work, static shapes, expert-parallel over `model`
+when E divides the axis, expert-FFN TP otherwise; DESIGN.md §5).
+
+In quant mode the per-expert FFN GEMMs run the paper's int8 ABFT pipeline,
+batched over experts via vmap (one packed checksum per expert weight).  The
+router and the dispatch/combine data movement stay in floating point: they
+are index logic, which ABFT does not cover (same caveat as EB indices).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abft_gemm as ag
+from repro.core import policy
+from repro.kernels import ref as kref
+from repro.layers.common import Ctx
+from repro.layers.linear import init_linear
+from repro.sharding import LogicalParam, constrain, param
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, *,
+             quant: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {"router": init_linear(ks[0], d_model, n_experts,
+                               ("embed", None), dtype, bias=False)}
+    if quant:
+        def q_expert(k, din, dout):
+            kk = jax.random.split(k, n_experts)
+            ws = jax.vmap(lambda kki: jax.random.randint(
+                kki, (din, dout), -127, 128, jnp.int8))(kk)
+            packed = jax.vmap(ag.pack_encoded_b)(ws)
+            alpha = jax.random.uniform(k, (n_experts, dout), jnp.float32,
+                                       1e-3, 2e-3)
+            colsum = jnp.sum(ws.astype(jnp.int32), axis=1).astype(jnp.float32)
+            return {
+                "w_packed": LogicalParam(packed,
+                                         ("expert", "embed", "expert_mlp")),
+                "alpha": LogicalParam(alpha, ("expert", "expert_mlp")),
+                "colsum": LogicalParam(colsum, ("expert", "expert_mlp")),
+            }
+        p["gate"] = q_expert(ks[1], d_model, d_ff)
+        p["up"] = q_expert(ks[2], d_model, d_ff)
+        p["down"] = q_expert(ks[3], d_ff, d_model)
+    else:
+        p["gate"] = {"w": param(ks[1], (n_experts, d_model, d_ff),
+                                ("expert", "embed", "expert_mlp"), dtype,
+                                scale=d_model ** -0.5)}
+        p["up"] = {"w": param(ks[2], (n_experts, d_model, d_ff),
+                              ("expert", "embed", "expert_mlp"), dtype,
+                              scale=d_model ** -0.5)}
+        p["down"] = {"w": param(ks[3], (n_experts, d_ff, d_model),
+                                ("expert", "expert_mlp", "embed"), dtype,
+                                scale=d_ff ** -0.5)}
+    return p
+
+
+def _expert_matmul(wp, h, ctx: Ctx):
+    """h [E, C', d_in] x expert weights -> ([E, C', d_out], report)."""
+    if "w_packed" in wp:
+        def one(packed_e, h_e):
+            h_q, a_alpha, a_beta = kref.quantize_rows_ref(h_e)
+            if ctx.abft:
+                c, err_rows = kref.abft_qgemm_ref(h_q, packed_e)
+                err = jnp.sum(err_rows).astype(jnp.int32)
+            else:
+                d_out = packed_e.shape[1] - ag.LANE
+                c = jax.lax.dot_general(
+                    h_q, packed_e[:, :d_out], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                err = jnp.zeros((), jnp.int32)
+            return c, a_alpha, a_beta, err
+
+        c, a_alpha, a_beta, errs = jax.vmap(one)(wp["w_packed"], h)
+        y = (a_alpha[..., None] * (c.astype(jnp.float32)
+                                   * wp["alpha"][:, None, :])
+             + a_beta[..., None] * (wp["alpha"] * wp["colsum"])[:, None, :])
+        return (y.astype(ctx.compute_dtype),
+                policy.gemm_report(jnp.sum(errs)))
+    y = jnp.einsum("ecd,edf->ecf", h.astype(ctx.compute_dtype),
+                   wp["w"].astype(ctx.compute_dtype),
+                   preferred_element_type=ctx.compute_dtype)
+    return y, policy.empty_report()
+
+
+def _route(xg, router_w, top_k: int):
+    gate_logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(gate_logits, axis=-1)          # [g, G, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)     # [g, G, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    return probs, gate_vals, gate_idx
+
+
+def _aux_loss(probs, gate_idx, n_experts: int):
+    """Switch-style load-balance loss."""
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], n_experts, dtype=jnp.float32),
+        axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    return n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def _slot_assignment(gate_idx, n_experts: int, capacity: int):
+    """Per-(token, k) expert slot via the per-k cumsum ordering.
+
+    Returns slot [g, G, k] int32 (= e·C + pos, or E·C for dropped) — the
+    same capacity/drop semantics as the one-hot dispatch, as integers.
+    """
+    g, G, k = gate_idx.shape
+    counts = jnp.zeros((g, n_experts), jnp.int32)
+    slots = []
+    for kk in range(k):
+        sel = jax.nn.one_hot(gate_idx[..., kk], n_experts,
+                             dtype=jnp.int32)              # [g, G, E]
+        pos = jnp.cumsum(sel, axis=1) - 1 + counts[:, None, :]
+        pos_k = jnp.take_along_axis(
+            pos, gate_idx[..., kk:kk + 1], axis=-1)[..., 0]       # [g, G]
+        keep = pos_k < capacity
+        slots.append(jnp.where(keep,
+                               gate_idx[..., kk] * capacity + pos_k,
+                               n_experts * capacity))
+        counts = counts + jnp.sum(sel * (pos < capacity), axis=1)
+    return jnp.stack(slots, axis=-1)                       # [g, G, k]
+
+
+def moe_ffn(p, x, ctx: Ctx, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, group_size: int = 1024
+            ) -> Tuple[jax.Array, jax.Array, policy.FaultReport]:
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar, report).
+
+    Dispatch/combine implementation is selected by ``ctx.moe_gather``:
+      * False — GShard one-hot einsums (baseline; dense MXU work of
+        O(G·E·C·d) MACs over mostly-zero one-hots);
+      * True  — scatter/gather indexing with identical capacity semantics:
+        O(E·C·d) pure data movement, zero matmul waste
+        (EXPERIMENTS §Perf hillclimb 2).
+    """
+    b, s, d = x.shape
+    tokens = b * s
+    g_sz = min(group_size, tokens)
+    n_groups = tokens // g_sz
+    assert n_groups * g_sz == tokens, (tokens, g_sz)
+    xg = x.reshape(n_groups, g_sz, d)
+
+    router_w = p["router"]["w"].astype(jnp.float32)
+    probs, gate_vals, gate_idx = _route(xg, router_w, top_k)
+    aux = _aux_loss(probs, gate_idx, n_experts)
+
+    capacity = max(int(g_sz * top_k * capacity_factor / n_experts), 4)
+    capacity = min(capacity, g_sz)
+
+    if ctx.moe_seq_groups and n_groups > 1:
+        # Sequence the group dim: one group's 10x-amplified expert buffers
+        # live at a time (top-k · capacity_factor token amplification is
+        # what blows HBM on high-top-k archs) — EXPERIMENTS §Perf
+        # hillclimb 2, iteration 5.
+        @jax.checkpoint
+        def group_body(_, inp):
+            xg_g, gv_g, gi_g = inp
+            y_g, rep_g = _moe_group(p, xg_g[None], gv_g[None], gi_g[None],
+                                    ctx, n_experts, top_k, capacity)
+            return None, (y_g[0], rep_g)
+
+        _, (yg, reps) = jax.lax.scan(group_body, None,
+                                     (xg, gate_vals, gate_idx))
+        rep = jax.tree.map(jnp.sum, reps)
+        return (yg.reshape(b, s, d).astype(ctx.compute_dtype), aux, rep)
+
+    y, rep = _moe_group(p, xg, gate_vals, gate_idx, ctx, n_experts, top_k,
+                        capacity)
+    return (y.reshape(b, s, d).astype(ctx.compute_dtype), aux, rep)
+
+
+def _moe_group(p, xg, gate_vals, gate_idx, ctx: Ctx, n_experts: int,
+               top_k: int, capacity: int):
+    """Dispatch -> expert FFN -> combine for a block of groups."""
+    n_groups, g_sz, d = xg.shape
+    if ctx.moe_gather:
+        e_in, slot = _dispatch_gather(xg, gate_idx, n_experts, capacity)
+    else:
+        e_in, combine = _dispatch_onehot(xg, gate_vals, gate_idx,
+                                         n_experts, capacity)
+
+    # Token-parallel MoE (EXPERIMENTS §Perf hillclimb 2): ONLY when the
+    # rules map "moe_tokens" (small-expert archs whose weights fit
+    # replicated) — an unconditional constraint would DEMAND replication
+    # of the unmapped dims and defeat SPMD propagation (measured: granite
+    # collective term 25 -> 198 s; reverted).
+    tp = ctx.rules is not None and ctx.rules.get("moe_tokens") is not None
+
+    def _tp(x):
+        return constrain(x, ("expert", "moe_tokens", None),
+                         ctx.rules) if tp else x
+
+    e_in = _tp(e_in)
+    gate_h, r1 = _expert_matmul(p["gate"], e_in, ctx)
+    up_h, r2 = _expert_matmul(p["up"], e_in, ctx)
+    h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(ctx.compute_dtype) \
+        * up_h
+    h = _tp(h)
+    out, r3 = _expert_matmul(p["down"], h, ctx)            # [E, g*C, d]
+    out = _tp(out)
+
+    if ctx.moe_gather:
+        y = _combine_gather(out, slot, gate_vals, n_groups, n_experts,
+                            capacity, ctx)
+    else:
+        out = out.reshape(n_experts, n_groups, capacity,
+                          d).transpose(1, 0, 2, 3)
+        y = jnp.einsum("gsec,gecd->gsd", combine.astype(jnp.bfloat16),
+                       out.astype(jnp.bfloat16),
+                       preferred_element_type=ctx.compute_dtype)
+    return y, policy.merge_reports(r1, r2, r3)
+
+
+def _dispatch_onehot(xg, gate_vals, gate_idx, n_experts: int,
+                     capacity: int):
+    """GShard baseline: one-hot [g,G,E,C] dispatch/combine tensors."""
+    n_groups, g_sz, d = xg.shape
+    top_k = gate_idx.shape[-1]
+    dispatch = jnp.zeros((n_groups, g_sz, n_experts, capacity), jnp.bfloat16)
+    combine = jnp.zeros((n_groups, g_sz, n_experts, capacity), jnp.float32)
+    counts = jnp.zeros((n_groups, n_experts), jnp.int32)
+    for kk in range(top_k):
+        sel = jax.nn.one_hot(gate_idx[..., kk], n_experts,
+                             dtype=jnp.int32)              # [g, G, E]
+        pos = jnp.cumsum(sel, axis=1) - 1 + counts[:, None, :]
+        keep = (pos < capacity) & (sel > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity),
+                                capacity + 1, dtype=jnp.bfloat16)[..., :-1]
+        slot = sel.astype(jnp.bfloat16)[..., None] * pos_oh  # [g,G,E,C]
+        dispatch = dispatch + slot
+        combine = combine + slot.astype(jnp.float32) * \
+            gate_vals[..., kk][..., None, None]
+        counts = counts + jnp.sum(sel * keep.astype(jnp.int32), axis=1)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch,
+                           xg.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.bfloat16)
+    e_in = expert_in.transpose(1, 0, 2, 3).reshape(
+        n_experts, n_groups * capacity, xg.shape[-1])      # [E, g*C, d]
+    return e_in, combine
+
+
+def _dispatch_gather(xg, gate_idx, n_experts: int, capacity: int):
+    """Index-based dispatch: scatter token ids into expert slots, gather
+    rows.  Same slot assignment as the one-hot path, none of its MACs."""
+    n_groups, g_sz, d = xg.shape
+    top_k = gate_idx.shape[-1]
+    slot = _slot_assignment(gate_idx, n_experts, capacity)   # [g, G, k]
+
+    token_ids = jnp.broadcast_to(
+        jnp.arange(g_sz, dtype=jnp.int32)[None, :, None],
+        (n_groups, g_sz, top_k)).reshape(n_groups, -1)
+    flat_slot = slot.reshape(n_groups, -1)                   # [g, G*k]
+
+    def scatter_one(slots_g, toks_g):
+        init = jnp.full((n_experts * capacity,), g_sz, jnp.int32)
+        return init.at[slots_g].set(toks_g, mode="drop")
+
+    token_for_slot = jax.vmap(scatter_one)(flat_slot, token_ids)
+    xg_pad = jnp.concatenate(
+        [xg, jnp.zeros((n_groups, 1, d), xg.dtype)], axis=1)
+    rows = jnp.take_along_axis(
+        xg_pad, token_for_slot[..., None], axis=1)           # [g, E*C, d]
+    e_in = (rows.reshape(n_groups, n_experts, capacity, d)
+            .transpose(1, 0, 2, 3)
+            .reshape(n_experts, n_groups * capacity, d)
+            .astype(jnp.bfloat16))
+    return e_in, slot
+
+
+def _combine_gather(out, slot, gate_vals, n_groups: int, n_experts: int,
+                    capacity: int, ctx: Ctx):
+    """y[s] = Σ_k gate[s,k] · out[slot[s,k]] (dropped slots → 0)."""
+    d = out.shape[-1]
+    out_g = (out.reshape(n_experts, n_groups, capacity, d)
+             .transpose(1, 0, 2, 3)
+             .reshape(n_groups, n_experts * capacity, d))
+    out_pad = jnp.concatenate(
+        [out_g, jnp.zeros((n_groups, 1, d), out_g.dtype)], axis=1)
+    g_sz = slot.shape[1]
+    flat = slot.reshape(n_groups, -1)                        # [g, G*k]
+    picked = jnp.take_along_axis(
+        out_pad, flat[..., None], axis=1).reshape(
+        n_groups, g_sz, -1, d)                               # [g, G, k, d]
+    y = jnp.sum(picked.astype(jnp.float32)
+                * gate_vals[..., None].astype(jnp.float32), axis=2)
+    return y.astype(ctx.compute_dtype)

@@ -1,0 +1,46 @@
+"""RMSNorm / LayerNorm (f32 statistics, cast back to compute dtype)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import LogicalParam, param
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": LogicalParam(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {
+        "scale": LogicalParam(jnp.ones((d,), dtype), ("embed",)),
+        "bias": LogicalParam(jnp.zeros((d,), dtype), ("embed",)),
+    }
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_headnorm(head_dim: int, dtype=jnp.float32):
+    """qk-norm (qwen3): RMS over head_dim with learned scale."""
+    return {"scale": LogicalParam(jnp.ones((head_dim,), dtype), (None,))}
+
+
+def headnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,35 @@
+"""Rotary position embeddings (f32 angles — exact out to 500k+ positions)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x [..., S, H?, dh] with positions [..., S] broadcastable to x[..., S].
+
+    Layout convention here: x is [B, S, H, dh]; positions [B, S] (or [S]).
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [B, S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoid_positions(seq_len: int, d: int) -> jnp.ndarray:
+    """Whisper-encoder style absolute sinusoid table [seq_len, d] (f32)."""
+    half = d // 2
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                  / max(half - 1, 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

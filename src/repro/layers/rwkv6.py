@@ -1,0 +1,226 @@
+"""RWKV6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+Per head (dh-dim), per timestep t::
+
+    wkv_t = S_{t-1} + (u ∘ k_t) ⊗ v_t          (bonus for current token)
+    y_t   = r_t · wkv_t
+    S_t   = diag(w_t) · S_{t-1} + k_t ⊗ v_t     (data-dependent decay w_t)
+
+with w_t = exp(-exp(w0 + lora(x_t))) ∈ (0, 1) per channel (the Finch
+innovation — decay depends on input).  The recurrence is an outer-product
+state update, not a GEMM, so the paper's ABFT does not apply to it (DESIGN.md
+§Arch-applicability); the R/K/V/G/O projections and channel-mix are
+ABFT-protected linears like any other.
+
+Training runs lax.scan over time; decode carries ``(S, x_prev)`` as cache —
+O(1) per token (this is why rwkv6 runs the long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy
+from repro.layers.common import Ctx
+from repro.layers.linear import apply_linear, maybe_qlinear_init
+from repro.layers.norms import init_layernorm, layernorm
+from repro.sharding import LogicalParam, param
+
+
+def init_timemix(key, d: int, n_heads: int, *, lora_rank: int = 64,
+                 quant: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 9)
+    dh = d // n_heads
+    return {
+        "mu": param(ks[0], (5, d), (None, "embed"), dtype, scale=0.5),
+        "w0": param(ks[1], (d,), ("embed",), dtype, scale=0.5),
+        "w_lora_a": param(ks[2], (d, lora_rank), ("embed", None), dtype),
+        "w_lora_b": param(ks[3], (lora_rank, d), (None, "embed"), dtype),
+        "bonus": param(ks[4], (n_heads, dh), (None, None), dtype, scale=0.5),
+        "wr": maybe_qlinear_init(ks[5], d, d, ("embed", "heads_x"),
+                                 quant, dtype, bias=False),
+        "wk": maybe_qlinear_init(ks[6], d, d, ("embed", "heads_x"),
+                                 quant, dtype, bias=False),
+        "wv": maybe_qlinear_init(ks[7], d, d, ("embed", "heads_x"),
+                                 quant, dtype, bias=False),
+        "wg": maybe_qlinear_init(ks[8], d, d, ("embed", "heads_x"),
+                                 quant, dtype, bias=False),
+        "wo": maybe_qlinear_init(jax.random.fold_in(key, 99), d, d,
+                                 ("heads_x", "embed"), quant, dtype,
+                                 bias=False),
+        "ln_x": init_layernorm(d, dtype),
+    }
+
+
+def _token_shift(x, x_prev):
+    """[B,S,d] shifted right by one; position 0 sees x_prev (decode carry)."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+#: log-decay clamp: w = exp(lw), lw ∈ [LOG_W_MIN, 0].  Decays below
+#: e^-5 ≈ 6.7e-3 wipe the state within one step anyway; the clamp bounds
+#: the chunked form's intra-chunk exponents (C·|lw| ≤ 80 < log f32max ≈ 88
+#: for C=16) — the same clamp the official RWKV CUDA kernels apply.
+LOG_W_MIN = -5.0
+
+
+def wkv_recurrent(rh, kh, vh, lwh, u, state, *, unroll=False):
+    """Per-token reference recurrence (paper-faithful baseline; decode).
+
+    rh/kh/vh/lwh [B,S,H,dh] f32 (lwh = log decay), u [H,dh],
+    state [B,H,dh,dh].  Returns (ys [B,S,H,dh], new_state)."""
+    wh = jnp.exp(lwh)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                                 # [B,H,dh]
+        kv = k_t[..., :, None] * v_t[..., None, :]               # [B,H,dh,dh]
+        wkv = S + u[None, :, :, None] * kv
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t, wkv)
+        S_new = w_t[..., :, None] * S + kv
+        return S_new, y_t
+
+    xs_seq = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+              vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, xs_seq, unroll=unroll)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def wkv_chunked(rh, kh, vh, lwh, u, state, *, chunk: int = 16,
+                mm_dtype=None):
+    """Matmul-form chunked WKV6 (beyond-paper perf path, EXPERIMENTS §Perf).
+
+    Exact reformulation of :func:`wkv_recurrent` (same clamp):
+      la_t = Σ_{τ≤t} lw_τ  (in-chunk cumulative log decay, la_0 = 0)
+      y_t  = (r_t∘e^{la_{t-1}})·S_0                     [inter — one matmul]
+           + Σ_{j<t} (r_t∘e^{la_{t-1}})·(k_j∘e^{-la_j}) v_j   [intra — [C,C]]
+           + (r_t·(u∘k_t)) v_t                          [bonus diagonal]
+      S_C  = e^{la_C}∘S_0 + Σ_j (k_j∘e^{la_C-la_j}) ⊗ v_j
+    The state is read/written once per *chunk* instead of once per token
+    (HBM traffic ÷ C on the dominant term) and every Σ_j is an MXU matmul.
+    Exponent bounds: la ≤ 0 and -la_j ≤ C·|LOG_W_MIN| < log(f32max).
+    """
+    b, s, h, dh = rh.shape
+    assert s % chunk == 0, (s, chunk)
+    # f32 safety envelope: the intra-chunk factor e^{-la_j} reaches
+    # e^{chunk·|LOG_W_MIN|}; keep it clear of f32 max (e^88.7).
+    assert chunk * abs(LOG_W_MIN) <= 80.0, (
+        f"chunk={chunk} exceeds the f32-safe envelope for "
+        f"LOG_W_MIN={LOG_W_MIN}; use chunk <= {int(80 / abs(LOG_W_MIN))}")
+    n = s // chunk
+
+    def to_chunks(x):   # [B,S,H,K] -> [n, B, H, C, K]
+        return (x.reshape(b, n, chunk, h, dh)
+                .transpose(1, 0, 3, 2, 4))
+
+    rc, kc, vc, lwc = map(to_chunks, (rh, kh, vh, lwh))
+    la = jnp.cumsum(lwc, axis=-2)                       # [n,B,H,C,K]
+    la_prev = la - lwc                                  # la_{t-1} (la_0 = 0)
+    la_end = la[..., -1:, :]                            # [n,B,H,1,K]
+
+    # Precomputed-stacked normalization beats in-body recomputation AND
+    # in-body + remat under XLA fusion (both measured worse — EXPERIMENTS
+    # §Perf hillclimb 1, iterations 2-3): one vectorized cumsum/exp pass,
+    # and the scan backward re-slices the stacks instead of re-deriving.
+    mm = jnp.float32 if mm_dtype is None else mm_dtype
+    r_t_ = (rc * jnp.exp(la_prev)).astype(mm)           # bounded ≤ |r|
+    k_in = (kc * jnp.exp(-la)).astype(mm)               # ≤ e^{C·|lw_min|}
+    k_st = (kc * jnp.exp(la_end - la)).astype(mm)       # bounded ≤ |k|
+    v_mm = vc.astype(mm)
+    diag = jnp.sum(rc * u[None, None, :, None, :] * kc, axis=-1)  # [n,B,H,C]
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def chunk_step(S, inp):
+        r_, kin, kst, v_, lae, dg = inp
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", r_.astype(jnp.float32), S)
+        scores = jnp.einsum("bhck,bhjk->bhcj", r_, kin,
+                            preferred_element_type=jnp.float32) * mask
+        y_intra = jnp.einsum("bhcj,bhjv->bhcv", scores.astype(mm), v_,
+                             preferred_element_type=jnp.float32)
+        y = y_inter + y_intra + dg[..., None] * v_.astype(jnp.float32)
+        S_new = (jnp.exp(lae[..., 0, :])[..., None] * S
+                 + jnp.einsum("bhjk,bhjv->bhkv", kst, v_,
+                              preferred_element_type=jnp.float32))
+        return S_new, y
+
+    state, ys = jax.lax.scan(
+        chunk_step, state, (r_t_, k_in, k_st, v_mm, la_end, diag))
+    # ys [n,B,H,C,V] -> [B,S,H,V]
+    return (ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dh), state)
+
+
+def timemix(p, x, x_prev, state, ctx: Ctx, *, n_heads: int
+            ) -> Tuple[jax.Array, jax.Array, jax.Array, policy.FaultReport]:
+    """x [B,S,d], x_prev [B,d], state S [B,H,dh,dh] (f32).
+
+    ``ctx.wkv_chunk > 0`` selects the chunked matmul form when the length
+    divides; decode (S=1) and the paper-faithful baseline use the per-token
+    recurrence.  Returns (y, new_x_prev, new_state, report)."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(jnp.float32)
+    xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
+
+    def mix(i):
+        return (xf + (xsf - xf) * mu[i]).astype(ctx.compute_dtype)
+
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r, r1 = apply_linear(p["wr"], xr, ctx)
+    k, r2 = apply_linear(p["wk"], xk, ctx)
+    v, r3 = apply_linear(p["wv"], xv, ctx)
+    g, r4 = apply_linear(p["wg"], xg, ctx)
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw))), log-clamped
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)
+                    ) @ p["w_lora_b"].astype(jnp.float32)
+    lw = jnp.clip(-jnp.exp(p["w0"].astype(jnp.float32) + lora),
+                  LOG_W_MIN, 0.0)                                # [B,S,d]
+
+    rh = r.reshape(b, s, n_heads, dh).astype(jnp.float32)
+    kh = k.reshape(b, s, n_heads, dh).astype(jnp.float32)
+    vh = v.reshape(b, s, n_heads, dh).astype(jnp.float32)
+    lwh = lw.reshape(b, s, n_heads, dh)
+    u = p["bonus"].astype(jnp.float32)                           # [H,dh]
+
+    chunk = ctx.wkv_chunk
+    if chunk and s > 1 and s % chunk == 0:
+        ys, state = wkv_chunked(
+            rh, kh, vh, lwh, u, state, chunk=chunk,
+            mm_dtype=jnp.bfloat16 if ctx.wkv_mm_bf16 else jnp.float32)
+    else:
+        ys, state = wkv_recurrent(rh, kh, vh, lwh, u, state,
+                                  unroll=ctx.unroll_time)
+    y = ys.reshape(b, s, d)
+    y = layernorm(p["ln_x"], y.astype(ctx.compute_dtype))
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(ctx.compute_dtype)
+    y, r5 = apply_linear(p["wo"], y, ctx)
+    return (y, x[:, -1, :], state,
+            policy.merge_reports(r1, r2, r3, r4, r5))
+
+
+def init_channelmix(key, d: int, d_ff: int, *, quant: bool = False,
+                    dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": param(ks[0], (2, d), (None, "embed"), dtype, scale=0.5),
+        "wk": maybe_qlinear_init(ks[1], d, d_ff, ("embed", "mlp"),
+                                 quant, dtype, bias=False),
+        "wv": maybe_qlinear_init(ks[2], d_ff, d, ("mlp_in", "embed"),
+                                 quant, dtype, bias=False),
+    }
+
+
+def channelmix(p, x, x_prev, ctx: Ctx):
+    """Squared-ReLU channel mix. Returns (y, new_x_prev, report)."""
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(jnp.float32)
+    xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
+    xk = (xf + (xsf - xf) * mu[0]).astype(ctx.compute_dtype)
+    k, r1 = apply_linear(p["wk"], xk, ctx)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(
+        ctx.compute_dtype)
+    y, r2 = apply_linear(p["wv"], k, ctx)
+    return y, x[:, -1, :], policy.merge_reports(r1, r2)

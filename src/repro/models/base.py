@@ -1,0 +1,145 @@
+"""Model facade: family dispatch + input specs + loss functions.
+
+``Model(cfg)`` exposes a uniform API over the zoo:
+
+  init(key, quant, dtype)              -> LogicalParam tree
+  loss(params, batch, ctx)             -> (loss, (metrics, report))
+  prefill(params, batch, ctx, cache_len) -> (logits, cache, report)
+  decode(params, cache, tokens, pos, ctx) -> (logits, cache, report)
+  init_cache(batch, cache_len)         -> LogicalParam tree
+  input_specs(shape)                   -> LogicalParam(ShapeDtypeStruct) tree
+
+All batch leaves are LogicalParam-wrapped ShapeDtypeStructs in
+``input_specs`` so the launcher can derive shardings uniformly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import policy
+from repro.layers.common import Ctx
+from repro.models import lm, rwkv, whisper
+from repro.sharding import LogicalParam
+
+IGNORE = -1
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Masked CE over padded vocab. logits [..., Vp] f32-castable."""
+    lf = logits.astype(jnp.float32)
+    mask = (labels >= 0) & (labels < vocab)
+    safe = jnp.clip(labels, 0, lf.shape[-1] - 1)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    ce = (lse - tgt) * mask
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, max_pos: int = 4096):
+        self.cfg = cfg
+        self.max_pos = max_pos  # whisper learned-position table size
+
+    # ------------------------------ init -----------------------------------
+    def init(self, key, quant: bool = False, dtype=jnp.float32):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return whisper.init_whisper(key, cfg, self.max_pos, quant, dtype)
+        if cfg.family == "ssm":
+            return rwkv.init_rwkv(key, cfg, quant, dtype)
+        return lm.init_lm(key, cfg, quant, dtype)
+
+    # ------------------------------ loss ------------------------------------
+    def loss(self, params, batch, ctx: Ctx):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, rep, aux = whisper.whisper_logits(
+                params, batch["frames"], batch["tokens"], ctx, cfg)
+            labels = batch["labels"]
+        elif cfg.family == "ssm":
+            logits, rep, aux = rwkv.rwkv_logits(params, batch["tokens"],
+                                                ctx, cfg)
+            labels = batch["labels"]
+        else:
+            patches = batch.get("patches")
+            logits, rep, aux = lm.lm_logits(params, batch["tokens"], ctx,
+                                            cfg, patches=patches)
+            labels = batch["labels"]
+            prefix = logits.shape[1] - labels.shape[1]
+            if prefix > 0:   # vlm patches / hymba meta tokens: no loss there
+                labels = jnp.concatenate(
+                    [jnp.full(labels.shape[:1] + (prefix,), IGNORE,
+                              labels.dtype), labels], axis=1)
+        loss = cross_entropy(logits, labels, cfg.vocab)
+        loss = loss + 0.01 * aux
+        metrics = {"loss": loss, "aux_loss": aux, **rep.as_metrics()}
+        return loss, (metrics, rep)
+
+    # ---------------------------- serving -----------------------------------
+    def prefill(self, params, batch, ctx: Ctx, cache_len: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return whisper.whisper_prefill(params, batch["frames"],
+                                           batch["tokens"], ctx, cfg,
+                                           cache_len=cache_len)
+        if cfg.family == "ssm":
+            return rwkv.rwkv_prefill(params, batch["tokens"], ctx, cfg)
+        return lm.lm_prefill(params, batch["tokens"], ctx, cfg,
+                             cache_len=cache_len,
+                             patches=batch.get("patches"))
+
+    def decode(self, params, cache, tokens, pos, ctx: Ctx):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return whisper.whisper_decode(params, cache, tokens, pos, ctx,
+                                          cfg)
+        if cfg.family == "ssm":
+            return rwkv.rwkv_decode(params, cache, tokens, pos, ctx, cfg)
+        return lm.lm_decode(params, cache, tokens, pos, ctx, cfg)
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return whisper.init_whisper_cache(cfg, batch, cache_len, dtype)
+        if cfg.family == "ssm":
+            return rwkv.init_rwkv_cache(cfg, batch, cache_len, dtype)
+        return lm.init_lm_cache(cfg, batch, cache_len, dtype)
+
+    # --------------------------- input specs --------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        """LogicalParam(ShapeDtypeStruct) tree for the given shape suite."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+
+        def tok(shp):
+            return LogicalParam(jax.ShapeDtypeStruct(shp, jnp.int32),
+                                ("batch",) + (None,) * (len(shp) - 1))
+
+        if shape.kind == "decode":
+            return {"tokens": tok((B,)), "pos": tok((B,))}
+
+        specs = {}
+        text_len = S
+        if cfg.family == "vlm":
+            text_len = S - cfg.n_patches
+            specs["patches"] = LogicalParam(
+                jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.patch_dim),
+                                     jnp.float32), ("batch", None, None))
+        if cfg.family == "hybrid":
+            text_len = S - cfg.meta_tokens   # meta tokens count toward S
+        if cfg.family == "encdec":
+            specs["frames"] = LogicalParam(
+                jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                     jnp.float32), ("batch", None, None))
+        specs["tokens"] = tok((B, text_len))
+        if shape.kind == "train":
+            specs["labels"] = tok((B, text_len))
+        return specs
+
+
+def build_model(cfg: ArchConfig, max_pos: int = 4096) -> Model:
+    return Model(cfg, max_pos=max_pos)

@@ -1,0 +1,311 @@
+"""Configurable decoder-only LM.
+
+One implementation covers the dense (llama3.2 / internlm2 / qwen3 /
+mistral-large), MoE (llama4-scout / granite-moe), hybrid (hymba: parallel
+attention+mamba heads, meta tokens, SWA+global layers) and VLM
+(llava-next: stub patch features + real projector) families.
+
+Layers are stacked & scanned (single-layer HLO — compile-time and remat
+friendly); every forward threads a FaultReport.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import policy
+from repro.layers import attention as attn
+from repro.layers import mamba as mam
+from repro.layers.common import Ctx
+from repro.layers.embedding import (apply_embed, init_embed, init_qembed)
+from repro.layers.linear import apply_linear, maybe_qlinear_init
+from repro.layers.mlp import init_mlp, mlp
+from repro.layers.moe import init_moe, moe_ffn
+from repro.layers.norms import init_rmsnorm, rmsnorm
+from repro.sharding import LogicalParam, constrain, is_lp, param
+
+HUGE_WINDOW = 1 << 30
+
+
+# ------------------------------- init ---------------------------------------
+
+def init_layer(key, cfg: ArchConfig, quant: bool, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "ln1": init_rmsnorm(d, dtype),
+        "ln2": init_rmsnorm(d, dtype),
+        "attn": attn.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim_, qk_norm=cfg.qk_norm,
+                                    quant=quant, dtype=dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], d, cfg.d_ff, cfg.n_experts, quant=quant,
+                            dtype=dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, gated=cfg.gated_mlp,
+                            quant=quant, dtype=dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = mam.init_mamba(ks[2], d, cfg.d_inner_, cfg.ssm_state,
+                                  quant=quant, dtype=dtype)
+        p["attn_out_norm"] = init_rmsnorm(d, dtype)
+        p["ssm_out_norm"] = init_rmsnorm(d, dtype)
+    return p
+
+
+def _stack_layer_axes(tree):
+    return jax.tree.map(
+        lambda p: LogicalParam(p.value, ("layers",) + p.axes), tree,
+        is_leaf=is_lp)
+
+
+def init_lm(key, cfg: ArchConfig, quant: bool = False, dtype=jnp.float32):
+    k_embed, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    vp = cfg.vocab_padded
+    p = {
+        "embed": (init_qembed(k_embed, vp, cfg.d_model) if quant
+                  else init_embed(k_embed, vp, cfg.d_model, dtype)),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": maybe_qlinear_init(k_head, cfg.d_model, vp,
+                                      ("embed", "vocab"), quant, dtype,
+                                      bias=False),
+    }
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(
+        lambda k: init_layer(k, cfg, quant, dtype))(layer_keys)
+    p["layers"] = _stack_layer_axes(layers)
+    if cfg.meta_tokens:
+        p["meta"] = param(k_extra, (cfg.meta_tokens, cfg.d_model),
+                          (None, "embed"), dtype)
+    if cfg.patch_dim:
+        ks = jax.random.split(k_extra, 2)
+        p["projector"] = {
+            "fc1": maybe_qlinear_init(ks[0], cfg.patch_dim, cfg.d_model,
+                                      ("frontend", "embed"), quant, dtype),
+            "fc2": maybe_qlinear_init(ks[1], cfg.d_model, cfg.d_model,
+                                      ("embed", "embed2"), quant, dtype),
+        }
+    return p
+
+
+def window_schedule(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer attention window ([L] int32; HUGE = full attention)."""
+    ws = []
+    for i in range(cfg.n_layers):
+        if cfg.sliding_window == 0 or cfg.is_global_layer(i):
+            ws.append(HUGE_WINDOW)
+        else:
+            ws.append(cfg.sliding_window)
+    return jnp.asarray(ws, jnp.int32)
+
+
+# ----------------------------- shared pieces --------------------------------
+
+def _prefix_embeds(params, x_text, ctx, cfg: ArchConfig, patches,
+                   reports: list):
+    """Prepend projector(patches) (VLM) and meta tokens (Hymba)."""
+    b = x_text.shape[0]
+    parts = []
+    if cfg.patch_dim and patches is not None:
+        h, r1 = apply_linear(params["projector"]["fc1"],
+                             patches.astype(ctx.compute_dtype), ctx)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(ctx.compute_dtype)
+        h, r2 = apply_linear(params["projector"]["fc2"], h, ctx)
+        reports += [r1, r2]
+        parts.append(h)
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta"].astype(ctx.compute_dtype)[None],
+            (b, cfg.meta_tokens, cfg.d_model))
+        parts.insert(0, meta)
+    parts.append(x_text)
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else x_text
+
+
+def _ffn(layer_p, h, ctx, cfg: ArchConfig):
+    if cfg.family == "moe":
+        return moe_ffn(layer_p["moe"], h, ctx,
+                       n_experts=cfg.n_experts, top_k=cfg.top_k,
+                       capacity_factor=cfg.capacity_factor,
+                       group_size=cfg.moe_group)
+    y, rep = mlp(layer_p["mlp"], h, ctx)
+    return y, jnp.zeros((), jnp.float32), rep
+
+
+# ------------------------------ full-seq forward ----------------------------
+
+def lm_hidden(params, tokens, ctx: Ctx, cfg: ArchConfig, *,
+              patches=None, with_cache: bool = False, cache_len: int = 0):
+    """Embed + all layers. Returns (x [B,S',d], cache|None, report, aux)."""
+    reports: list = []
+    x_text, rep0 = apply_embed(params["embed"], tokens, ctx)
+    reports.append(rep0)
+    x = _prefix_embeds(params, x_text, ctx, cfg, patches, reports)
+    b, s_total, d = x.shape
+    x = constrain(x, ("batch", "seq", None), ctx.rules)
+    positions = jnp.broadcast_to(jnp.arange(s_total, dtype=jnp.int32)[None],
+                                 (b, s_total))
+    windows = window_schedule(cfg)
+
+    def body(carry, xs):
+        x, rep, aux = carry
+        layer_p, window_l = xs
+        h = rmsnorm(layer_p["ln1"], x)
+        if with_cache:
+            a_out, cache_l, r_a = attn.attention_prefill(
+                layer_p["attn"], h, ctx, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                positions=positions, cache_len=cache_len,
+                rope_theta=cfg.rope_theta, use_rope=cfg.use_rope,
+                window=window_l, prefix_global=cfg.meta_tokens,
+                chunk=cfg.attn_chunk)
+        else:
+            a_out, r_a = attn.attention(
+                layer_p["attn"], h, ctx, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                positions=positions, rope_theta=cfg.rope_theta,
+                use_rope=cfg.use_rope, causal=True, window=window_l,
+                prefix_global=cfg.meta_tokens, chunk=cfg.attn_chunk)
+            cache_l = None
+        rep = policy.merge_reports(rep, r_a)
+        if cfg.family == "hybrid":
+            ssm_cache0 = {
+                "conv": jnp.zeros((b, mam.CONV_K - 1, cfg.d_inner_),
+                                  jnp.float32),
+                "h": jnp.zeros((b, cfg.d_inner_, cfg.ssm_state),
+                               jnp.float32),
+            }
+            s_out, ssm_cache, r_s = mam.mamba(
+                layer_p["ssm"], h, ssm_cache0, ctx, d_inner=cfg.d_inner_,
+                n_state=cfg.ssm_state)
+            rep = policy.merge_reports(rep, r_s)
+            mix = 0.5 * (rmsnorm(layer_p["attn_out_norm"], a_out)
+                         + rmsnorm(layer_p["ssm_out_norm"], s_out))
+            x = x + mix
+            if with_cache:
+                cache_l = {"attn": cache_l, "ssm": ssm_cache}
+        else:
+            x = x + a_out
+            if with_cache:
+                cache_l = {"attn": cache_l}
+        h2 = rmsnorm(layer_p["ln2"], x)
+        f_out, aux_l, r_f = _ffn(layer_p, h2, ctx, cfg)
+        x = x + f_out
+        x = constrain(x, ("batch", "seq", None), ctx.rules)
+        rep = policy.merge_reports(rep, r_f)
+        return (x, rep, aux + aux_l), cache_l
+
+    if not with_cache and not ctx.no_remat:
+        body = jax.checkpoint(body)
+    carry0 = (x, policy.merge_reports(*reports), jnp.zeros((), jnp.float32))
+    (x, rep, aux), cache = jax.lax.scan(body, carry0,
+                                        (params["layers"], windows),
+                                        unroll=ctx.unroll_layers)
+    x = rmsnorm(params["final_norm"], x)
+    return x, cache, rep, aux
+
+
+def lm_logits(params, tokens, ctx: Ctx, cfg: ArchConfig, patches=None):
+    """Training forward: full logits [B, S', vocab_padded]."""
+    x, _, rep, aux = lm_hidden(params, tokens, ctx, cfg, patches=patches)
+    logits, r_h = apply_linear(params["lm_head"], x, ctx)
+    logits = constrain(logits, ("batch", "seq", "vocab"), ctx.rules)
+    return logits, policy.merge_reports(rep, r_h), aux
+
+
+def lm_prefill(params, tokens, ctx: Ctx, cfg: ArchConfig, *, cache_len: int,
+               patches=None):
+    """Prefill: last-position logits + populated KV cache."""
+    x, cache, rep, _ = lm_hidden(params, tokens, ctx, cfg, patches=patches,
+                                 with_cache=True, cache_len=cache_len)
+    last = x[:, -1, :]
+    logits, r_h = apply_linear(params["lm_head"], last, ctx)
+    return logits, cache, policy.merge_reports(rep, r_h)
+
+
+# ------------------------------ decode --------------------------------------
+
+def lm_decode(params, cache, tokens, pos, ctx: Ctx, cfg: ArchConfig):
+    """One decode step. tokens [B] int32, pos [B] int32 (absolute, incl. any
+    prefix).  Returns (logits [B, vp], new_cache, report)."""
+    x, rep = apply_embed(params["embed"], tokens, ctx)     # [B, d]
+    windows = window_schedule(cfg)
+
+    def body(carry, xs):
+        x, rep = carry
+        layer_p, layer_cache, window_l = xs
+        h = rmsnorm(layer_p["ln1"], x)
+        a_out, new_attn, r_a = attn.attention_decode(
+            layer_p["attn"], h, layer_cache["attn"], pos, ctx,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+            use_rope=cfg.use_rope, window=window_l,
+            prefix_global=cfg.meta_tokens)
+        rep = policy.merge_reports(rep, r_a)
+        new_cache_l = {"attn": new_attn}
+        if cfg.family == "hybrid":
+            s_out, new_ssm, r_s = mam.mamba(
+                layer_p["ssm"], h[:, None, :], layer_cache["ssm"], ctx,
+                d_inner=cfg.d_inner_, n_state=cfg.ssm_state)
+            rep = policy.merge_reports(rep, r_s)
+            mix = 0.5 * (rmsnorm(layer_p["attn_out_norm"], a_out)
+                         + rmsnorm(layer_p["ssm_out_norm"], s_out[:, 0, :]))
+            x = x + mix
+            new_cache_l["ssm"] = new_ssm
+        else:
+            x = x + a_out
+        h2 = rmsnorm(layer_p["ln2"], x)
+        if cfg.family == "moe":
+            f_out, _, r_f = moe_ffn(layer_p["moe"], h2[:, None, :], ctx,
+                                    n_experts=cfg.n_experts,
+                                    top_k=cfg.top_k,
+                                    capacity_factor=cfg.capacity_factor,
+                                    group_size=cfg.moe_group)
+            f_out = f_out[:, 0, :]
+        else:
+            f_out, r_f = mlp(layer_p["mlp"], h2, ctx)
+        x = x + f_out
+        rep = policy.merge_reports(rep, r_f)
+        return (x, rep), new_cache_l
+
+    (x, rep), new_cache = jax.lax.scan(
+        body, (x, rep), (params["layers"], cache, windows),
+        unroll=ctx.unroll_layers)
+    x = rmsnorm(params["final_norm"], x)
+    logits, r_h = apply_linear(params["lm_head"], x, ctx)
+    return logits, new_cache, policy.merge_reports(rep, r_h)
+
+
+# ------------------------------ cache init ----------------------------------
+
+def init_lm_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                  dtype=jnp.bfloat16):
+    """LogicalParam tree of zeros, stacked [L, ...] for the layer scan."""
+    total = cache_len + cfg.meta_tokens
+    kv = {
+        "k": LogicalParam(
+            jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, total,
+                       cfg.head_dim_), dtype),
+            ("layers", "batch", None, "kv_seq", None)),
+        "v": LogicalParam(
+            jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, total,
+                       cfg.head_dim_), dtype),
+            ("layers", "batch", None, "kv_seq", None)),
+    }
+    cache = {"attn": kv}
+    if cfg.family == "hybrid":
+        cache["ssm"] = {
+            "conv": LogicalParam(
+                jnp.zeros((cfg.n_layers, batch, mam.CONV_K - 1,
+                           cfg.d_inner_), jnp.float32),
+                ("layers", "batch", None, "mlp")),
+            "h": LogicalParam(
+                jnp.zeros((cfg.n_layers, batch, cfg.d_inner_,
+                           cfg.ssm_state), jnp.float32),
+                ("layers", "batch", "mlp", None)),
+        }
+    return cache

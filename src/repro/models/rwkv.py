@@ -1,0 +1,161 @@
+"""RWKV6 (Finch) language model: stacked time-mix + channel-mix blocks.
+
+Decode state is O(1) per layer (matrix-valued S + two shift vectors), which
+is why this arch runs the long_500k cell: the "KV cache" never grows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import policy
+from repro.layers import rwkv6 as rk
+from repro.layers.common import Ctx
+from repro.layers.embedding import apply_embed, init_embed, init_qembed
+from repro.layers.linear import apply_linear, maybe_qlinear_init
+from repro.layers.norms import init_layernorm, layernorm
+from repro.models.lm import _stack_layer_axes
+from repro.sharding import LogicalParam, constrain
+
+
+def _init_layer(key, cfg, quant, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_layernorm(cfg.d_model, dtype),
+        "tm": rk.init_timemix(k1, cfg.d_model, cfg.n_heads, quant=quant,
+                              dtype=dtype),
+        "ln2": init_layernorm(cfg.d_model, dtype),
+        "cm": rk.init_channelmix(k2, cfg.d_model, cfg.d_ff, quant=quant,
+                                 dtype=dtype),
+    }
+
+
+def init_rwkv(key, cfg: ArchConfig, quant: bool = False, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    vp = cfg.vocab_padded
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, quant, dtype))(
+        jax.random.split(k2, cfg.n_layers))
+    return {
+        "embed": (init_qembed(k1, vp, cfg.d_model) if quant
+                  else init_embed(k1, vp, cfg.d_model, dtype)),
+        "ln0": init_layernorm(cfg.d_model, dtype),
+        "layers": _stack_layer_axes(layers),
+        "ln_out": init_layernorm(cfg.d_model, dtype),
+        "head": maybe_qlinear_init(k3, cfg.d_model, vp, ("embed", "vocab"),
+                                   quant, dtype, bias=False),
+    }
+
+
+def _zero_states(cfg: ArchConfig, b: int):
+    dh = cfg.d_model // cfg.n_heads
+    return {
+        "S": jnp.zeros((b, cfg.n_heads, dh, dh), jnp.float32),
+        "x_tm": jnp.zeros((b, cfg.d_model), jnp.float32),
+        "x_cm": jnp.zeros((b, cfg.d_model), jnp.float32),
+    }
+
+
+def _block(layer_p, x, state, ctx, cfg):
+    """x [B,S,d] + per-layer state -> (x', new_state, report)."""
+    h = layernorm(layer_p["ln1"], x)
+    y, x_tm, s_new, r1 = rk.timemix(
+        layer_p["tm"], h, state["x_tm"].astype(h.dtype), state["S"], ctx,
+        n_heads=cfg.n_heads)
+    x = x + y
+    h2 = layernorm(layer_p["ln2"], x)
+    y2, x_cm, r2 = rk.channelmix(layer_p["cm"], h2,
+                                 state["x_cm"].astype(h2.dtype), ctx)
+    x = x + y2
+    new_state = {"S": s_new, "x_tm": x_tm.astype(jnp.float32),
+                 "x_cm": x_cm.astype(jnp.float32)}
+    return x, new_state, policy.merge_reports(r1, r2)
+
+
+def rwkv_hidden(params, tokens, ctx: Ctx, cfg: ArchConfig, states=None,
+                with_states: bool = False):
+    b = tokens.shape[0]
+    x, rep0 = apply_embed(params["embed"], tokens, ctx)
+    x = layernorm(params["ln0"], x)
+    x = constrain(x, ("batch", "seq", None), ctx.rules)
+
+    def body(carry, xs):
+        x, rep = carry
+        if states is None:
+            layer_p = xs
+            st = _zero_states(cfg, b)
+        else:
+            layer_p, st = xs
+        x, new_st, r = _block(layer_p, x, st, ctx, cfg)
+        x = constrain(x, ("batch", "seq", None), ctx.rules)
+        return (x, policy.merge_reports(rep, r)), \
+            (new_st if with_states else None)
+
+    xs = params["layers"] if states is None else (params["layers"], states)
+    step = jax.checkpoint(body) if not with_states else body
+    (x, rep), new_states = jax.lax.scan(step, (x, rep0), xs,
+                                        unroll=ctx.unroll_layers)
+    x = layernorm(params["ln_out"], x)
+    return x, new_states, rep
+
+
+def rwkv_logits(params, tokens, ctx: Ctx, cfg: ArchConfig):
+    x, _, rep = rwkv_hidden(params, tokens, ctx, cfg)
+    logits, r_h = apply_linear(params["head"], x, ctx)
+    logits = constrain(logits, ("batch", "seq", "vocab"), ctx.rules)
+    return logits, policy.merge_reports(rep, r_h), \
+        jnp.zeros((), jnp.float32)
+
+
+def rwkv_prefill(params, tokens, ctx: Ctx, cfg: ArchConfig):
+    """Returns last-token logits + the recurrent state as 'cache'."""
+    x, states, rep = rwkv_hidden(params, tokens, ctx, cfg,
+                                 states=init_rwkv_state_values(cfg,
+                                                               tokens.shape[0]),
+                                 with_states=True)
+    logits, r_h = apply_linear(params["head"], x[:, -1, :], ctx)
+    return logits, states, policy.merge_reports(rep, r_h)
+
+
+def rwkv_decode(params, cache, tokens, pos, ctx: Ctx, cfg: ArchConfig):
+    """One token; cache = stacked per-layer states. pos unused (recurrent)."""
+    del pos
+    b = tokens.shape[0]
+    x, rep = apply_embed(params["embed"], tokens, ctx)
+    x = layernorm(params["ln0"], x[:, None, :])
+
+    def body(carry, xs):
+        x, rep = carry
+        layer_p, st = xs
+        x, new_st, r = _block(layer_p, x, st, ctx, cfg)
+        return (x, policy.merge_reports(rep, r)), new_st
+
+    (x, rep), new_states = jax.lax.scan(body, (x, rep),
+                                        (params["layers"], cache),
+                                        unroll=ctx.unroll_layers)
+    x = layernorm(params["ln_out"], x[:, 0, :])
+    logits, r_h = apply_linear(params["head"], x, ctx)
+    return logits, new_states, policy.merge_reports(rep, r_h)
+
+
+def init_rwkv_state_values(cfg: ArchConfig, batch: int):
+    """Plain-value stacked states [L, ...] (used inside jit)."""
+    dh = cfg.d_model // cfg.n_heads
+    L = cfg.n_layers
+    return {
+        "S": jnp.zeros((L, batch, cfg.n_heads, dh, dh), jnp.float32),
+        "x_tm": jnp.zeros((L, batch, cfg.d_model), jnp.float32),
+        "x_cm": jnp.zeros((L, batch, cfg.d_model), jnp.float32),
+    }
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                    dtype=jnp.bfloat16):
+    """LogicalParam tree; cache_len is irrelevant (O(1) state)."""
+    del cache_len, dtype
+    v = init_rwkv_state_values(cfg, batch)
+    return {
+        "S": LogicalParam(v["S"], ("layers", "batch", "heads_x", None, None)),
+        "x_tm": LogicalParam(v["x_tm"], ("layers", "batch", None)),
+        "x_cm": LogicalParam(v["x_cm"], ("layers", "batch", None)),
+    }

@@ -1,0 +1,245 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend stubbed).
+
+Encoder: precomputed frame embeddings [B, T_enc, d] + sinusoid positions,
+non-causal self-attention, GeLU MLP.  Decoder: learned positions, causal
+self-attention + cross-attention over the encoder memory.  LayerNorm
+everywhere (faithful to Whisper), no RoPE.
+
+``max_pos`` sizes the decoder's learned position table; the assigned shape
+suite drives it to 32k/4k (beyond the real model's 448 — synthetic, noted
+in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import policy
+from repro.layers import attention as attn
+from repro.layers.common import Ctx
+from repro.layers.embedding import apply_embed, init_embed, init_qembed
+from repro.layers.linear import apply_linear, maybe_qlinear_init
+from repro.layers.mlp import init_mlp, mlp
+from repro.layers.norms import init_layernorm, layernorm
+from repro.layers.rope import sinusoid_positions
+from repro.models.lm import _stack_layer_axes
+from repro.sharding import LogicalParam, constrain, param
+
+
+def _init_enc_layer(key, cfg, quant, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_layernorm(cfg.d_model, dtype),
+        "attn": attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim_,
+                                    quant=quant, dtype=dtype, bias=True),
+        "ln2": init_layernorm(cfg.d_model, dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=False,
+                        quant=quant, dtype=dtype, bias=True),
+    }
+
+
+def _init_dec_layer(key, cfg, quant, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_layernorm(cfg.d_model, dtype),
+        "self": attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim_,
+                                    quant=quant, dtype=dtype, bias=True),
+        "ln2": init_layernorm(cfg.d_model, dtype),
+        "cross": attn.init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim_,
+                                     quant=quant, dtype=dtype, bias=True),
+        "ln3": init_layernorm(cfg.d_model, dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, gated=False,
+                        quant=quant, dtype=dtype, bias=True),
+    }
+
+
+def init_whisper(key, cfg: ArchConfig, max_pos: int, quant: bool = False,
+                 dtype=jnp.float32):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    vp = cfg.vocab_padded
+    enc_layers = jax.vmap(
+        lambda k: _init_enc_layer(k, cfg, quant, dtype))(
+        jax.random.split(k1, cfg.enc_layers))
+    dec_layers = jax.vmap(
+        lambda k: _init_dec_layer(k, cfg, quant, dtype))(
+        jax.random.split(k2, cfg.n_layers))
+    return {
+        "enc": {"layers": _stack_layer_axes(enc_layers),
+                "ln_post": init_layernorm(cfg.d_model, dtype)},
+        "dec": {
+            "embed": (init_qembed(k3, vp, cfg.d_model) if quant
+                      else init_embed(k3, vp, cfg.d_model, dtype)),
+            "pos": param(k4, (max_pos, cfg.d_model), (None, "embed"), dtype),
+            "layers": _stack_layer_axes(dec_layers),
+            "ln": init_layernorm(cfg.d_model, dtype),
+            "head": maybe_qlinear_init(k5, cfg.d_model, vp,
+                                       ("embed", "vocab"), quant, dtype,
+                                       bias=False),
+        },
+    }
+
+
+def encode(params, frames, ctx: Ctx, cfg: ArchConfig):
+    """frames [B, T, d] (stub frontend output) -> (memory [B,T,d], report)."""
+    b, t, d = frames.shape
+    x = frames.astype(ctx.compute_dtype) + \
+        sinusoid_positions(t, d).astype(ctx.compute_dtype)[None]
+    x = constrain(x, ("batch", "seq", None), ctx.rules)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(carry, layer_p):
+        x, rep = carry
+        h = layernorm(layer_p["ln1"], x)
+        a, r1 = attn.attention(layer_p["attn"], h, ctx, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                               positions=positions, use_rope=False,
+                               causal=False, chunk=cfg.attn_chunk)
+        x = x + a
+        h2 = layernorm(layer_p["ln2"], x)
+        f, r2 = mlp(layer_p["mlp"], h2, ctx)
+        x = x + f
+        return (x, policy.merge_reports(rep, r1, r2)), None
+
+    (x, rep), _ = jax.lax.scan(jax.checkpoint(body),
+                               (x, policy.empty_report()),
+                               params["enc"]["layers"],
+                               unroll=ctx.unroll_layers)
+    return layernorm(params["enc"]["ln_post"], x), rep
+
+
+def _dec_embed(params, tokens, positions, ctx):
+    x, rep = apply_embed(params["dec"]["embed"], tokens, ctx)
+    pos_tab = params["dec"]["pos"].astype(ctx.compute_dtype)
+    return x + pos_tab[positions], rep
+
+
+def decode_train(params, tokens, memory, ctx: Ctx, cfg: ArchConfig,
+                 with_cache: bool = False, cache_len: int = 0):
+    """Teacher-forced decoder pass. Returns (x, cache|None, report)."""
+    b, s = tokens.shape
+    t_enc = memory.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    mem_pos = jnp.broadcast_to(jnp.arange(t_enc, dtype=jnp.int32)[None],
+                               (b, t_enc))
+    x, rep0 = _dec_embed(params, tokens, positions, ctx)
+    x = constrain(x, ("batch", "seq", None), ctx.rules)
+
+    def body(carry, layer_p):
+        x, rep = carry
+        h = layernorm(layer_p["ln1"], x)
+        if with_cache:
+            a, kv, r1 = attn.attention_prefill(
+                layer_p["self"], h, ctx, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                positions=positions, cache_len=cache_len, use_rope=False,
+                chunk=cfg.attn_chunk)
+        else:
+            a, r1 = attn.attention(layer_p["self"], h, ctx,
+                                   n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                   head_dim=cfg.head_dim_,
+                                   positions=positions, use_rope=False,
+                                   causal=True, chunk=cfg.attn_chunk)
+            kv = None
+        x = x + a
+        h2 = layernorm(layer_p["ln2"], x)
+        c, r2 = attn.attention(layer_p["cross"], h2, ctx,
+                               n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                               head_dim=cfg.head_dim_, positions=positions,
+                               use_rope=False, causal=False, x_kv=memory,
+                               kv_positions=mem_pos, chunk=cfg.attn_chunk)
+        x = x + c
+        h3 = layernorm(layer_p["ln3"], x)
+        f, r3 = mlp(layer_p["mlp"], h3, ctx)
+        x = x + f
+        cache_l = None
+        if with_cache:
+            # static cross K/V for decode steps
+            ck, rk = apply_linear(layer_p["cross"]["wk"], memory, ctx)
+            cv, rv = apply_linear(layer_p["cross"]["wv"], memory, ctx)
+            ck = ck.reshape(b, t_enc, cfg.n_kv_heads,
+                            cfg.head_dim_).transpose(0, 2, 1, 3)
+            cv = cv.reshape(b, t_enc, cfg.n_kv_heads,
+                            cfg.head_dim_).transpose(0, 2, 1, 3)
+            cache_l = {"self": kv, "cross": {"k": ck, "v": cv}}
+            rep = policy.merge_reports(rep, rk, rv)
+        return (x, policy.merge_reports(rep, r1, r2, r3)), cache_l
+
+    step = body if with_cache else jax.checkpoint(body)
+    (x, rep), cache = jax.lax.scan(step, (x, rep0), params["dec"]["layers"],
+                                   unroll=ctx.unroll_layers)
+    x = layernorm(params["dec"]["ln"], x)
+    return x, cache, rep
+
+
+def whisper_logits(params, frames, tokens, ctx: Ctx, cfg: ArchConfig):
+    memory, r_enc = encode(params, frames, ctx, cfg)
+    x, _, r_dec = decode_train(params, tokens, memory, ctx, cfg)
+    logits, r_h = apply_linear(params["dec"]["head"], x, ctx)
+    logits = constrain(logits, ("batch", "seq", "vocab"), ctx.rules)
+    return logits, policy.merge_reports(r_enc, r_dec, r_h), \
+        jnp.zeros((), jnp.float32)
+
+
+def whisper_prefill(params, frames, tokens, ctx: Ctx, cfg: ArchConfig, *,
+                    cache_len: int):
+    memory, r_enc = encode(params, frames, ctx, cfg)
+    x, cache, r_dec = decode_train(params, tokens, memory, ctx, cfg,
+                                   with_cache=True, cache_len=cache_len)
+    logits, r_h = apply_linear(params["dec"]["head"], x[:, -1, :], ctx)
+    return logits, cache, policy.merge_reports(r_enc, r_dec, r_h)
+
+
+def whisper_decode(params, cache, tokens, pos, ctx: Ctx, cfg: ArchConfig):
+    """One decoder token against self- and (static) cross-caches."""
+    b = tokens.shape[0]
+    x, rep = apply_embed(params["dec"]["embed"], tokens, ctx)
+    x = x + params["dec"]["pos"].astype(ctx.compute_dtype)[pos]
+
+    def body(carry, xs):
+        x, rep = carry
+        layer_p, layer_cache = xs
+        h = layernorm(layer_p["ln1"], x)
+        a, new_self, r1 = attn.attention_decode(
+            layer_p["self"], h, layer_cache["self"], pos, ctx,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, use_rope=False)
+        x = x + a
+        h2 = layernorm(layer_p["ln2"], x)
+        c, _, r2 = attn.attention_decode(
+            layer_p["cross"], h2, layer_cache["cross"], pos, ctx,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, use_rope=False, cross=True)
+        x = x + c
+        h3 = layernorm(layer_p["ln3"], x)
+        f, r3 = mlp(layer_p["mlp"], h3[:, None, :], ctx)
+        x = x + f[:, 0, :]
+        new_cache = {"self": new_self, "cross": layer_cache["cross"]}
+        return (x, policy.merge_reports(rep, r1, r2, r3)), new_cache
+
+    (x, rep), new_cache = jax.lax.scan(body, (x, rep),
+                                       (params["dec"]["layers"], cache),
+                                       unroll=ctx.unroll_layers)
+    x = layernorm(params["dec"]["ln"], x)
+    logits, r_h = apply_linear(params["dec"]["head"], x, ctx)
+    return logits, new_cache, policy.merge_reports(rep, r_h)
+
+
+def init_whisper_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                       dtype=jnp.bfloat16):
+    def kv(seq, axes):
+        return {
+            "k": LogicalParam(jnp.zeros(
+                (cfg.n_layers, batch, cfg.n_kv_heads, seq, cfg.head_dim_),
+                dtype), axes),
+            "v": LogicalParam(jnp.zeros(
+                (cfg.n_layers, batch, cfg.n_kv_heads, seq, cfg.head_dim_),
+                dtype), axes),
+        }
+    return {
+        "self": kv(cache_len, ("layers", "batch", None, "kv_seq", None)),
+        "cross": kv(cfg.enc_seq, ("layers", "batch", None, None, None)),
+    }

@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update, global_norm, clip_by_global_norm
+from repro.optim.schedule import warmup_cosine, constant_lr
+
+__all__ = ["adamw_init", "adamw_update", "global_norm",
+           "clip_by_global_norm", "warmup_cosine", "constant_lr"]

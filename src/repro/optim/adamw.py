@@ -1,0 +1,77 @@
+"""AdamW + gradient clipping, from scratch (no optax).
+
+Moments are f32 regardless of param dtype (bf16-safe), sharded like the
+parameters (the launcher derives moment shardings from the param tree, so
+ZeRO-style partitioning falls out of the FSDP rules for free).
+
+Integer / packed-int8 leaves (the ABFT serving weights, EB tables, rowsum
+checksums) are non-trainable: they get zero-size moment placeholders and are
+passed through untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _trainable(x) -> bool:
+    return jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def adamw_init(params):
+    def mom(p):
+        if _trainable(p):
+            return jnp.zeros(p.shape, jnp.float32)
+        return jnp.zeros((0,), jnp.float32)
+    return {
+        "m": jax.tree.map(mom, params),
+        "v": jax.tree.map(mom, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, lr, *, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(g, m, v, p):
+        if not _trainable(p):
+            return p, m, v
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * gf
+        v_new = b2 * v + (1.0 - b2) * gf * gf
+        mh = m_new / bc1
+        vh = v_new / bc2
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree) if _trainable(x)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+
+    def clip(g):
+        return (g.astype(jnp.float32) * scale).astype(g.dtype) \
+            if _trainable(g) else g
+    return jax.tree.map(clip, grads), gn

@@ -1,0 +1,17 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak: float, warmup: int, total: int,
+                  floor: float = 0.0):
+    s = step.astype(jnp.float32)
+    warm = peak * s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant_lr(step, *, peak: float, **_):
+    return jnp.full_like(step, peak, dtype=jnp.float32)

@@ -1,0 +1,25 @@
+"""Affine quantization substrate (paper §III-A).
+
+Representation follows the paper: a real tensor ``x`` is represented by an
+integer tensor ``x_I`` plus floating-point ``(alpha, beta)`` such that
+``x ≈ alpha * x_I + beta``.
+"""
+from repro.quant.qtensor import (
+    QTensor,
+    quantize_tensor,
+    quantize_rows,
+    quantize_channels,
+    dequantize,
+    qgemm_f32,
+    requantize,
+)
+
+__all__ = [
+    "QTensor",
+    "quantize_tensor",
+    "quantize_rows",
+    "quantize_channels",
+    "dequantize",
+    "qgemm_f32",
+    "requantize",
+]

@@ -1,0 +1,156 @@
+"""Quantized tensors and the Eq. (1) quantized GEMM pipeline.
+
+Paper convention (§III-A): ``x ≈ alpha * x_I + beta`` where ``x_I`` is an
+8-bit integer.  Activations (matrix A) are quantized to *unsigned* 8-bit with
+a per-row dynamic range; weights (matrix B) to *signed* 8-bit, symmetric
+(beta = 0) per output channel, which is the FBGEMM/DLRM deployment default.
+
+The quantized matrix product (Eq. 1) is::
+
+    AB ≈ aA*aB * (A_I @ B_I)
+       + aA*bB * (A_I @ e) e^T
+       + aB*bA * e (e^T @ B_I)
+       + k*bA*bB * e e^T
+
+i.e. the int32 product ``C_temp = A_I @ B_I`` plus rank-1 corrections.
+ABFT (repro.core.abft_gemm) verifies ``C_temp`` *before* requantization
+(§IV-B: requantization is non-linear, checksums cannot survive it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+UINT8_MAX = 255
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """An integer tensor with affine dequantization parameters.
+
+    ``values`` has an integer dtype; ``alpha``/``beta`` broadcast against the
+    value tensor along ``axis`` (None => per-tensor scalars).
+    """
+
+    values: jax.Array          # int8 / uint8 (stored as int8 with unsigned flag)
+    alpha: jax.Array           # f32, scalar or per-row/per-channel
+    beta: jax.Array            # f32, same shape as alpha
+    axis: Optional[int] = None  # axis the (alpha, beta) pairs index, or None
+
+    def tree_flatten(self):
+        return (self.values, self.alpha, self.beta), (self.axis,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, alpha, beta = children
+        return cls(values, alpha, beta, axis=aux[0])
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+def _expand(param: jax.Array, ndim: int, axis: Optional[int]) -> jax.Array:
+    """Broadcast a per-axis parameter vector against an ndim tensor."""
+    if axis is None:
+        return param
+    shape = [1] * ndim
+    shape[axis] = -1
+    return param.reshape(shape)
+
+
+def quantize_tensor(x: jax.Array, *, unsigned: bool = False) -> QTensor:
+    """Per-tensor affine quantization of ``x`` into 8 bits."""
+    return _quantize(x, axis=None, unsigned=unsigned)
+
+
+def quantize_rows(x: jax.Array, *, unsigned: bool = True) -> QTensor:
+    """Per-row dynamic quantization (activation matrices; paper's A)."""
+    return _quantize(x, axis=0, unsigned=unsigned)
+
+
+def quantize_channels(w: jax.Array, *, unsigned: bool = False) -> QTensor:
+    """Per-output-channel (column) symmetric quantization (weights; paper's B)."""
+    # Symmetric: beta = 0 keeps the rank-1 correction terms cheap and the
+    # int32 accumulator centered.
+    amax = jnp.max(jnp.abs(w), axis=0)
+    alpha = jnp.maximum(amax, 1e-12) / INT8_MAX
+    q = jnp.clip(jnp.round(w / alpha[None, :]), INT8_MIN, INT8_MAX).astype(jnp.int8)
+    return QTensor(q, alpha.astype(jnp.float32),
+                   jnp.zeros_like(alpha, dtype=jnp.float32), axis=1)
+
+
+def _quantize(x: jax.Array, *, axis: Optional[int], unsigned: bool) -> QTensor:
+    reduce_axes = tuple(i for i in range(x.ndim) if axis is None or i != axis)
+    xmin = jnp.min(x, axis=reduce_axes)
+    xmax = jnp.max(x, axis=reduce_axes)
+    lo, hi = (0, UINT8_MAX) if unsigned else (INT8_MIN, INT8_MAX)
+    span = jnp.maximum(xmax - xmin, 1e-12)
+    alpha = span / (hi - lo)
+    beta = xmin - lo * alpha
+    xe = x
+    a = _expand(alpha, x.ndim, axis)
+    b = _expand(beta, x.ndim, axis)
+    q = jnp.clip(jnp.round((xe - b) / a), lo, hi)
+    # uint8 stored as int8 bit-pattern free; keep uint8 dtype for clarity.
+    dtype = jnp.uint8 if unsigned else jnp.int8
+    return QTensor(q.astype(dtype), alpha.astype(jnp.float32),
+                   beta.astype(jnp.float32), axis=axis)
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    a = _expand(q.alpha, q.values.ndim, q.axis)
+    b = _expand(q.beta, q.values.ndim, q.axis)
+    return a * q.values.astype(jnp.float32) + b
+
+
+def int_matmul(a_q: jax.Array, b_q: jax.Array) -> jax.Array:
+    """``C_temp = A_I @ B_I`` in int32 (the MXU int8 path on TPU)."""
+    # int8 operands directly (no 4x int32 staging copies; §Perf)
+    return jax.lax.dot_general(
+        a_q, b_q, (((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def qgemm_f32(a: QTensor, b: QTensor,
+              c_temp: Optional[jax.Array] = None) -> jax.Array:
+    """Full Eq. (1) pipeline: int32 product + rank-1 corrections -> f32.
+
+    ``c_temp`` may be supplied when the caller already computed the int32
+    product (e.g. through the ABFT-verified path) so the correction terms
+    reuse it.
+    """
+    m, k = a.values.shape
+    n = b.values.shape[1]
+    if c_temp is None:
+        c_temp = int_matmul(a.values, b.values)
+    a_alpha = a.alpha if a.axis == 0 else jnp.broadcast_to(a.alpha, (m,))
+    a_beta = a.beta if a.axis == 0 else jnp.broadcast_to(a.beta, (m,))
+    b_alpha = b.alpha if b.axis == 1 else jnp.broadcast_to(b.alpha, (n,))
+    b_beta = b.beta if b.axis == 1 else jnp.broadcast_to(b.beta, (n,))
+
+    out = (a_alpha[:, None] * b_alpha[None, :]) * c_temp.astype(jnp.float32)
+    # + aA*bB * (A_I @ e_k) e_n^T   (row sums of A)
+    a_rows = jnp.sum(a.values.astype(jnp.int32), axis=1).astype(jnp.float32)
+    out = out + (a_alpha * a_rows)[:, None] * b_beta[None, :]
+    # + aB*bA * e_m (e_k^T @ B_I)   (col sums of B)
+    b_cols = jnp.sum(b.values.astype(jnp.int32), axis=0).astype(jnp.float32)
+    out = out + a_beta[:, None] * (b_alpha * b_cols)[None, :]
+    # + k*bA*bB
+    out = out + k * a_beta[:, None] * b_beta[None, :]
+    return out
+
+
+def requantize(x: jax.Array, *, unsigned: bool = False) -> QTensor:
+    """Requantization ``Q`` of a float matrix into 8 bits (Fig. 1 last stage)."""
+    return quantize_rows(x, unsigned=unsigned)

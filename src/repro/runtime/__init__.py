@@ -1,0 +1,10 @@
+from repro.runtime.compression import (  # noqa: F401
+    CompressionState,
+    compress_grads,
+    decompress_grads,
+    init_compression,
+    checked_psum,
+)
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import plan_remesh, remesh_state  # noqa: F401
+from repro.runtime.loop import TrainLoop, LoopConfig  # noqa: F401

@@ -1,0 +1,138 @@
+"""int8 gradient compression with error feedback + checksum-verified
+all-reduce — the paper's quantized-operator + ABFT recipe applied to the
+data-parallel collective (beyond paper, DESIGN.md §5).
+
+Scheme per leaf:
+  1. residual-corrected gradient g' = g + e  (error feedback)
+  2. per-leaf symmetric int8 quantization: q = round(g' / s), s = max|g'|/127
+  3. all-reduce the int8 payload **in int32** (sums of <=127-magnitude int8
+     over <= 2^24 replicas cannot overflow) and all-reduce the scales;
+  4. verify: the mod-(2^31-1) value-checksum of an integer sum equals the
+     mod-sum of the per-replica checksums (additivity) — so one extra scalar
+     psum per leaf detects a corrupted reduction without re-sending data;
+  5. e <- g' - dequant(q)  (local residual for the next step).
+
+Detection-only + policy, exactly like the GEMM ABFT: on mismatch the loop's
+policy decides (log / recompute the step / restore from checkpoint).
+
+All functions are shard_map/pjit-friendly: they take an ``axis_name``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# 2^13-1 (Mersenne prime). Residues < 8191 sum exactly in int32 across
+# chunks of 262k elements and across 262k replicas — no int64 needed (JAX
+# x64 is off in production configs).
+MOD = 8191
+
+
+class CompressionState(NamedTuple):
+    error: dict   # per-leaf f32 residuals (error feedback memory)
+
+
+def init_compression(params) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                           params))
+
+
+def _quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _mod_checksum(q_i32: jax.Array, mod: int = MOD) -> jax.Array:
+    """Value checksum of an int32 tensor, additive under summation.
+
+    Residues of a sum == sum of residues (mod M). Chunked reduction keeps
+    every int32 partial sum exact (chunk * mod < 2^31), so the checksum is
+    bit-exact for any leaf size without int64.
+    """
+    r = q_i32.reshape(-1) % mod            # non-negative residues < mod
+    chunk = (2 ** 31 - 1) // mod           # exact-accumulation bound
+    while r.size > chunk:
+        pad = (-r.size) % chunk
+        r = jnp.pad(r, (0, pad))
+        r = jnp.sum(r.reshape(-1, chunk), axis=1) % mod
+    return (jnp.sum(r) % mod).astype(jnp.int32)
+
+
+def compress_grads(grads, state: CompressionState):
+    """-> (payload {q:int8, scale:f32, checksum:int64}, new_state)."""
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, state.error)
+    qs = jax.tree.map(_quantize_leaf, corrected)
+    q = jax.tree.map(lambda t: t[0], qs,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    scale = jax.tree.map(lambda t: t[1], qs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_error = jax.tree.map(
+        lambda c, qq, s: c - qq.astype(jnp.float32) * s, corrected, q, scale)
+    checksum = jax.tree.map(
+        lambda qq: _mod_checksum(qq.astype(jnp.int32)), q)
+    payload = {"q": q, "scale": scale, "checksum": checksum}
+    return payload, CompressionState(error=new_error)
+
+
+def verify_payload(payload: dict) -> jax.Array:
+    """Recompute checksums of a (possibly transported) payload; -> #mismatches.
+
+    Host-to-host transport (RDMA, spilled buffers) is exactly where silent
+    corruption was observed at scale [Dixit et al. 2021]; this is the local
+    receive-side check when the collective is staged manually.
+    """
+    got = jax.tree.map(
+        lambda q: _mod_checksum(q.astype(jnp.int32)), payload["q"])
+    errs = jax.tree.map(lambda e, g: (e != g).astype(jnp.int32),
+                        payload["checksum"], got)
+    return jax.tree.reduce(lambda a, b: a + b, errs,
+                           jnp.zeros((), jnp.int32))
+
+
+def checked_psum(payload: dict, axis_name: str):
+    """All-reduce the int8 payload with ABFT verification.
+
+    Returns (summed_q int32 tree, mean_scale tree, err_count int32 scalar).
+    """
+    q32 = jax.tree.map(lambda q: q.astype(jnp.int32), payload["q"])
+    summed = jax.lax.psum(q32, axis_name)
+    scale_sum = jax.lax.psum(payload["scale"], axis_name)
+    # additivity check: checksum(psum(q)) == psum(checksum(q)) mod M
+    expected = jax.tree.map(
+        lambda c: jax.lax.psum(c % MOD, axis_name) % MOD,
+        payload["checksum"])
+    got = jax.tree.map(_mod_checksum, summed)
+    errs = jax.tree.map(
+        lambda e, g: (e != g).astype(jnp.int32), expected, got)
+    err_count = jax.tree.reduce(lambda a, b: a + b, errs,
+                                jnp.zeros((), jnp.int32))
+    return summed, scale_sum, err_count
+
+
+def decompress_grads(summed_q, scale_sum, n_replicas: int):
+    """Mean gradient: (Σ_r q_r) * (Σ_r s_r / R) / R ≈ mean(g).
+
+    Each replica quantized with its own scale; using the mean scale on the
+    summed payload is exact when scales agree and first-order otherwise —
+    the error-feedback residual absorbs the difference next step.
+    """
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * (s / n_replicas) / n_replicas,
+        summed_q, scale_sum)
+
+
+def compressed_allreduce(grads, state: CompressionState, axis_name: str,
+                         n_replicas: int):
+    """One-call fused path: compress -> checked psum -> decompress.
+
+    -> (mean_grads f32, new_state, err_count)."""
+    payload, new_state = compress_grads(grads, state)
+    summed, scale_sum, errs = checked_psum(payload, axis_name)
+    mean = decompress_grads(summed, scale_sum, n_replicas)
+    return mean, new_state, errs

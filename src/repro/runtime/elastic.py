@@ -1,0 +1,71 @@
+"""Elastic re-mesh: shrink/grow the data axis and re-shard live state.
+
+Failure story at scale (DESIGN.md §5): a host dies -> the job restarts on
+the surviving N-k hosts (or a standby pool swaps in). The *model* axes must
+keep their size (TP/EP shardings bake into the weights' divisibility); the
+*data* (and pod) axes are elastic. ``plan_remesh`` computes the largest
+valid data axis for the surviving device count; ``remesh_state`` re-places
+a state pytree (from a checkpoint restore or live donation) onto the new
+mesh with shardings re-derived from the same logical rules.
+
+The batch contract: global batch stays fixed (per-replica batch grows), so
+training dynamics and the data stream (seeded by step) are unchanged — an
+elastic event is invisible in the loss curve modulo one repeated step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: tuple
+    new_shape: tuple
+    axes: tuple
+    dropped_devices: int
+
+    @property
+    def data_parallel(self) -> int:
+        sizes = dict(zip(self.axes, self.new_shape))
+        return sizes.get("data", 1) * sizes.get("pod", 1)
+
+
+def plan_remesh(n_devices: int, *, model_parallel: int = 16,
+                axes=("data", "model"),
+                old_shape: Optional[tuple] = None) -> RemeshPlan:
+    """Largest (data, model) mesh with fixed model axis that fits
+    ``n_devices``. Raises if fewer than one model group survives."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel="
+            f"{model_parallel}; a standby pool or smaller TP is required")
+    data = n_devices // model_parallel
+    new_shape = (data, model_parallel)
+    used = data * model_parallel
+    return RemeshPlan(old_shape or new_shape, new_shape, tuple(axes),
+                      n_devices - used)
+
+
+def make_mesh_from_plan(plan: RemeshPlan):
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(plan.new_shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(plan.new_shape)
+    return Mesh(devices, plan.axes)
+
+
+def remesh_state(state, lp_tree, rules: dict, mesh):
+    """Re-place ``state`` onto ``mesh`` using logical-axis ``rules``.
+
+    ``lp_tree`` is the LogicalParam tree (axes metadata); ``state`` is the
+    matching value tree (params or full train state leaf-aligned subtree).
+    """
+    import jax
+    from repro.sharding import shardings_of
+
+    sh = shardings_of(lp_tree, rules, mesh)
+    return jax.tree.map(jax.device_put, state, sh)

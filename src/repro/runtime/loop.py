@@ -1,0 +1,138 @@
+"""Fault-tolerant training loop.
+
+Composes the substrate into the driver a cluster job actually runs:
+
+    loop = TrainLoop(model, ctx, mesh, rules, cfg)
+    loop.run(steps)
+
+Per step:
+  1. next batch from the seeded pipeline (pure fn of step — restart-safe),
+  2. jitted train step (grad accum, AdamW, ABFT reports in metrics),
+  3. **detect -> act**: if the step's FaultReport shows errors, policy:
+       - ``log``: record and continue (transient, detection-only — paper's
+         default for serving);
+       - ``recompute``: re-run the same step from the pre-step state (the
+         paper's "error striking twice is very rare" argument — one retry);
+       - ``restore``: reload last checkpoint (persistent corruption);
+  4. straggler telemetry,
+  5. async checksummed checkpoint every ``save_every``.
+
+Crash-restart: ``run`` resumes from the newest committed checkpoint; the
+data pipeline regenerates the exact stream from the step index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.straggler import StragglerMonitor
+
+log = logging.getLogger("repro.loop")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    save_every: int = 100
+    keep_last: int = 3
+    fault_policy: str = "recompute"   # log | recompute | restore
+    max_recomputes_per_step: int = 1
+    straggler_threshold: float = 2.0
+    log_every: int = 10
+
+
+class TrainLoop:
+    """Drives (state, batch) -> (state, metrics) with fault handling."""
+
+    def __init__(self, step_fn: Callable, dataset, *, cfg: LoopConfig,
+                 shardings=None, metrics_hook: Optional[Callable] = None):
+        self.step_fn = step_fn
+        self.dataset = dataset
+        self.cfg = cfg
+        self.shardings = shardings
+        self.metrics_hook = metrics_hook
+        self.ckpt = CheckpointManager(cfg.ckpt_dir,
+                                      keep_last=cfg.keep_last,
+                                      save_every=cfg.save_every)
+        self.straggler = StragglerMonitor(threshold=cfg.straggler_threshold)
+        self.stats = {"recomputes": 0, "restores": 0, "faulty_steps": 0}
+
+    # ------------------------------------------------------------------
+    def _errors_in(self, metrics: Dict[str, Any]) -> int:
+        total = 0
+        for k in ("abft/gemm_errors", "abft/eb_errors", "comm/errors"):
+            if k in metrics:
+                total += int(np.asarray(jax.device_get(metrics[k])))
+        return total
+
+    def _put_batch(self, batch):
+        if self.shardings is None:
+            return batch
+        from repro.data import shard_batch
+        return shard_batch(batch, self.shardings)
+
+    # ------------------------------------------------------------------
+    def run(self, state, n_steps: int, *, start_step: Optional[int] = None,
+            resume: bool = True):
+        """Run to ``n_steps`` (absolute). Returns (state, last_metrics)."""
+        step = 0 if start_step is None else start_step
+        if resume:
+            restored = self.ckpt.restore_latest(jax.device_get(state))
+            if restored is not None:
+                snap, step = restored
+                state = jax.tree.map(
+                    lambda cur, new: jax.device_put(
+                        np.asarray(new),
+                        getattr(cur, "sharding", None) or jax.devices()[0]),
+                    state, snap)
+                log.info("resumed from checkpoint at step %d", step)
+
+        metrics = {}
+        while step < n_steps:
+            batch = self._put_batch(self.dataset.batch_at(step))
+            self.straggler.step_start()
+            pre_state = state
+            state, metrics = self.step_fn(state, batch)
+
+            errs = self._errors_in(metrics)
+            if errs:
+                self.stats["faulty_steps"] += 1
+                if self.cfg.fault_policy == "recompute":
+                    for _ in range(self.cfg.max_recomputes_per_step):
+                        self.stats["recomputes"] += 1
+                        state, metrics = self.step_fn(pre_state, batch)
+                        if self._errors_in(metrics) == 0:
+                            break
+                    else:
+                        log.warning(
+                            "step %d still faulty after recompute", step)
+                elif self.cfg.fault_policy == "restore":
+                    restored = self.ckpt.restore_latest(
+                        jax.device_get(state))
+                    if restored is not None:
+                        snap, step = restored
+                        state = jax.tree.map(
+                            lambda cur, new: jax.device_put(
+                                np.asarray(new),
+                                getattr(cur, "sharding", None)
+                                or jax.devices()[0]),
+                            state, snap)
+                        self.stats["restores"] += 1
+                        continue
+                # "log": fall through
+
+            self.straggler.step_end(step)
+            step += 1
+            self.ckpt.maybe_save(step, state)
+            if self.metrics_hook and step % self.cfg.log_every == 0:
+                self.metrics_hook(step, jax.device_get(metrics))
+
+        self.ckpt.maybe_save(step, state, force=True)
+        self.ckpt.wait()
+        return state, metrics

@@ -1,0 +1,18 @@
+from repro.sharding.logical import (
+    LogicalParam,
+    is_lp,
+    param,
+    values_of,
+    spec_for,
+    specs_of,
+    shardings_of,
+    like_shardings,
+    constrain,
+)
+from repro.sharding.rules import Rules, train_rules, serve_rules, batch_axes
+
+__all__ = [
+    "LogicalParam", "is_lp", "param", "values_of",
+    "spec_for", "specs_of", "shardings_of", "like_shardings", "constrain",
+    "Rules", "train_rules", "serve_rules", "batch_axes",
+]

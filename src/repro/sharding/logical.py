@@ -1,0 +1,166 @@
+"""Logical-axis sharding (MaxText-style, minimal).
+
+Every parameter (and cache buffer) carries a tuple of *logical* axis names —
+one per dimension — via :class:`LogicalParam`, a pytree node whose axes are
+**static treedef metadata**.  That makes ``jax.eval_shape(init)`` work: the
+dry-run derives full sharding trees for 100B+ parameter models without ever
+allocating them.
+
+A :class:`Rules` mapping translates logical names to mesh axes per run mode
+(train vs serve, single- vs multi-pod).  Specs are derived shape-aware: a
+mesh axis that does not divide the dimension, or that is already consumed by
+an earlier dimension of the same tensor, falls back to replication (never a
+compile error).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@jax.tree_util.register_pytree_node_class
+class LogicalParam:
+    """array (or ShapeDtypeStruct) + logical axes (static, one per dim)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value: Any, axes: Sequence[Optional[str]]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"LogicalParam(shape={shape}, axes={self.axes})"
+
+
+def is_lp(x) -> bool:
+    return isinstance(x, LogicalParam)
+
+
+def param(key, shape, axes, dtype, scale: float = 0.02,
+          init: str = "normal") -> LogicalParam:
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "normal":
+        v = jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype)
+    elif init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        raise ValueError(init)
+    return LogicalParam(v, tuple(axes))
+
+
+def values_of(tree):
+    """LogicalParam tree -> plain value tree (same dict structure)."""
+    return jax.tree.map(lambda p: p.value if is_lp(p) else p, tree,
+                        is_leaf=is_lp)
+
+
+def split_tree(tree):
+    return values_of(tree), tree  # values + (the LP tree doubles as axes)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             rules: dict, mesh_shape: dict) -> P:
+    """Shape-aware PartitionSpec: divisibility + no-mesh-axis-reuse."""
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        mapped = rules.get(name) if name is not None else None
+        if mapped is None:
+            parts.append(None)
+            continue
+        mesh_axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        mesh_axes = tuple(a for a in mesh_axes
+                          if a not in used and a in mesh_shape)
+        size = 1
+        keep = []
+        for a in mesh_axes:
+            if dim % (size * mesh_shape[a]) == 0:
+                keep.append(a)
+                size *= mesh_shape[a]
+        if not keep:
+            parts.append(None)
+        else:
+            used.update(keep)
+            parts.append(tuple(keep) if len(keep) > 1 else keep[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def specs_of(lp_tree, rules: dict, mesh: Mesh):
+    """LogicalParam tree -> PartitionSpec tree (same structure, P leaves)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda p: spec_for(p.value.shape, p.axes, rules, mesh_shape),
+        lp_tree, is_leaf=is_lp)
+
+
+def shardings_of(lp_tree, rules: dict, mesh: Mesh):
+    specs = specs_of(lp_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def like_shardings(values_tree, spec, mesh: Mesh):
+    """Uniform sharding for a whole tree (e.g. replicated scalars)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, spec), values_tree)
+
+
+# -------------------- in-function sharding constraints ----------------------
+
+def _context_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover
+        return None
+
+
+def _manual_axes() -> set:
+    """Mesh axes currently under manual (shard_map) control."""
+    try:
+        from jax.sharding import get_abstract_mesh
+        am = get_abstract_mesh()
+        if am is None or am.empty:
+            return set()
+        return {name for name, t in zip(am.axis_names, am.axis_types)
+                if str(t) == "Manual"}
+    except Exception:  # pragma: no cover
+        return set()
+
+
+def constrain(x, axes: Sequence[Optional[str]], rules: Optional[dict]):
+    """with_sharding_constraint by logical axes.
+
+    No-op when no rules are given or no mesh is active (smoke tests run
+    un-meshed on one device).  Inside a partial-manual shard_map, axes that
+    are Manual (e.g. the deferred-sync data axis) are dropped from the
+    spec — constraints only apply to the remaining auto axes.
+    """
+    if rules is None:
+        return x
+    mesh = _context_mesh()
+    if mesh is None:
+        return x
+    manual = _manual_axes()
+    mesh_shape = {name: size
+                  for name, size in zip(mesh.axis_names, mesh.devices.shape)
+                  if name not in manual}
+    spec = spec_for(x.shape, axes, rules, mesh_shape)
+    if manual:
+        return jax.lax.with_sharding_constraint(x, spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,108 @@
+"""int8 ABFT KV cache (beyond-paper, EXPERIMENTS HC3): quantization
+fidelity, exact checksum detection, and attention-off-int8 correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.abft_kvcache import (QuantKV, attend_quantized,
+                                     dequantize_kv, quantize_kv_rows,
+                                     update_kv_row, verify_kv)
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.key(0), (2, 4, 32, 64)) * 3.0
+    kv = quantize_kv_rows(x)
+    back = dequantize_kv(kv, jnp.float32)
+    span = (np.asarray(x).max(-1) - np.asarray(x).min(-1))
+    # affine int8: max error ~ span/255/2 per element
+    err = np.abs(np.asarray(back) - np.asarray(x)).max(-1)
+    assert (err <= span / 255.0 * 0.51 + 1e-6).all()
+
+
+def test_checksum_clean_and_detects_flip():
+    x = jax.random.normal(jax.random.key(1), (1, 2, 16, 32))
+    kv = quantize_kv_rows(x)
+    _, errs = verify_kv(kv)
+    assert int(errs) == 0
+    # flip one bit in one cached int8 element
+    q = np.asarray(kv.q).copy()
+    q[0, 1, 7, 3] ^= 0x10
+    bad = QuantKV(jnp.asarray(q), kv.alpha, kv.beta, kv.rowsum)
+    err_rows, errs = verify_kv(bad)
+    assert int(errs) == 1
+    assert bool(err_rows[0, 1, 7])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 7))
+def test_checksum_detects_any_bitflip_property(seed, bit):
+    """Every single-bit flip in the int8 cache is detected (exact integer
+    sums — the analogue of the paper's 100% C-error result)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 1, 8, 16)), jnp.float32)
+    kv = quantize_kv_rows(x)
+    q = np.asarray(kv.q).copy()
+    r, c = rng.integers(8), rng.integers(16)
+    q[0, 0, r, c] = np.int8(np.bitwise_xor(
+        q[0, 0, r, c], np.int8(np.left_shift(1, bit))))
+    changed = q[0, 0, r, c] != np.asarray(kv.q)[0, 0, r, c]
+    bad = QuantKV(jnp.asarray(q), kv.alpha, kv.beta, kv.rowsum)
+    _, errs = verify_kv(bad)
+    assert int(errs) == (1 if changed else 0)
+
+
+def test_decode_update_then_verify():
+    b, kvh, s, dh = 2, 2, 8, 16
+    kv = quantize_kv_rows(jnp.zeros((b, kvh, s, dh)))
+    new = jax.random.normal(jax.random.key(3), (b, kvh, dh))
+    pos = jnp.asarray([2, 5], jnp.int32)
+    kv2 = update_kv_row(kv, jnp.arange(b), pos, new)
+    _, errs = verify_kv(kv2)
+    assert int(errs) == 0
+    np.testing.assert_allclose(
+        np.asarray(dequantize_kv(kv2, jnp.float32))[0, :, 2],
+        np.asarray(new)[0], atol=0.02)
+
+
+def test_attention_matches_bf16_reference():
+    """Attention off the int8 cache ≈ attention off the bf16 cache."""
+    b, n_heads, n_kv, s, dh = 2, 8, 2, 32, 16
+    k1, k2, k3 = jax.random.split(jax.random.key(4), 3)
+    k_cache = jax.random.normal(k1, (b, n_kv, s, dh))
+    v_cache = jax.random.normal(k2, (b, n_kv, s, dh))
+    q = jax.random.normal(k3, (b, n_heads, dh))
+    pos = jnp.asarray([s - 1, s // 2], jnp.int32)
+
+    kv_k, kv_v = quantize_kv_rows(k_cache), quantize_kv_rows(v_cache)
+    out, errs = attend_quantized(q, kv_k, kv_v, pos,
+                                 n_heads=n_heads, n_kv=n_kv)
+    assert int(errs) == 0
+
+    # reference: plain f32 attention on the unquantized cache
+    g = n_heads // n_kv
+    qg = q.reshape(b, n_kv, g, dh)
+    sc = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache) * dh ** -0.5
+    valid = jnp.arange(s)[None, None, None, :] <= pos[:, None, None, None]
+    sc = jnp.where(valid, sc, -1e30)
+    ref = jnp.einsum("bkgs,bksd->bkgd", jax.nn.softmax(sc, -1),
+                     v_cache).reshape(b, n_heads, dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=0.05, rtol=0.05)
+
+
+def test_attention_flags_corrupted_cache():
+    b, n_heads, n_kv, s, dh = 1, 4, 2, 16, 8
+    kv_k = quantize_kv_rows(jax.random.normal(jax.random.key(5),
+                                              (b, n_kv, s, dh)))
+    kv_v = quantize_kv_rows(jax.random.normal(jax.random.key(6),
+                                              (b, n_kv, s, dh)))
+    q = jax.random.normal(jax.random.key(7), (b, n_heads, dh))
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    qk = np.asarray(kv_k.q).copy()
+    qk[0, 0, 3, 1] ^= 0x40
+    kv_bad = QuantKV(jnp.asarray(qk), kv_k.alpha, kv_k.beta, kv_k.rowsum)
+    _, errs = attend_quantized(q, kv_bad, kv_v, pos,
+                               n_heads=n_heads, n_kv=n_kv)
+    assert int(errs) == 1

@@ -1,0 +1,146 @@
+"""Validation of the trip-aware HLO cost analyzer (launch.costs) — the
+instrument behind every §Roofline / §Perf number."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.costs import analyze_hlo_text, parse_hlo
+
+
+def _analyze(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo_text(compiled.as_text()), compiled
+
+
+def test_loop_free_matches_xla_cost_analysis():
+    def g(a, b):
+        return jnp.tanh(a @ b)
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    mine, compiled = _analyze(g, a, b)
+    xla = compiled.cost_analysis()
+    assert mine["flops"] == pytest.approx(2 * 128 * 256 * 512, rel=0.02)
+    assert mine["bytes"] == pytest.approx(xla["bytes accessed"], rel=0.05)
+    assert not mine["flags"]
+
+
+@pytest.mark.parametrize("L", [4, 8, 16])
+def test_scan_trip_multiplication(L):
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    mine, compiled = _analyze(f, x, ws)
+    # XLA counts the while body once; the analyzer must count L times.
+    assert mine["flops"] == pytest.approx(2 * 64 ** 3 * L, rel=0.02)
+    assert compiled.cost_analysis()["flops"] < mine["flops"]
+    assert not [f_ for f_ in mine["flags"] if "while" in f_]
+
+
+def test_nested_scan_trip_product():
+    def h(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return jnp.sum(y)
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    mine, _ = _analyze(h, x, ws)
+    assert mine["flops"] == pytest.approx(2 * 64 ** 3 * 8 * 4, rel=0.02)
+
+
+def test_grad_with_remat_counts_recompute():
+    L = 8
+
+    def tr(x, ws):
+        @jax.checkpoint
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+
+        def loss(ws):
+            y, _ = jax.lax.scan(body, x, ws)
+            return jnp.sum(y)
+        return jax.grad(loss)(ws)
+
+    mine, _ = _analyze(tr, jnp.ones((64, 64)), jnp.ones((L, 64, 64)))
+    # fwd L dots + per-layer (remat fwd 1 + bwd 2) = 4L dots total
+    assert mine["flops"] == pytest.approx(2 * 64 ** 3 * L * 4, rel=0.05)
+
+
+def test_int8_dot_no_staging_copies():
+    """The §Perf HC3 fix: int8 operands must reach the dot directly."""
+    from repro.kernels.ref import int8_dot
+
+    a = jax.ShapeDtypeStruct((64, 512), jnp.int8)
+    b = jax.ShapeDtypeStruct((512, 1024), jnp.int8)
+    mine, _ = _analyze(int8_dot, a, b)
+    staged = 64 * 512 * 4 + 512 * 1024 * 4     # int32 copies (the bug)
+    direct = 64 * 512 + 512 * 1024 + 64 * 1024 * 4
+    assert mine["bytes"] < direct + staged / 2, (
+        "int32 staging copies are back")
+
+
+def test_collective_accounting_sharded():
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.costs import analyze_hlo_text
+        mesh = jax.make_mesh((8,), ("model",))
+        def f(x, w):
+            y = x @ w
+            return jax.lax.with_sharding_constraint(
+                y, NamedSharding(mesh, P(None, None)))
+        xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        ws = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        with mesh:
+            c = jax.jit(f, in_shardings=(
+                NamedSharding(mesh, P()),
+                NamedSharding(mesh, P(None, "model"))),
+                out_shardings=NamedSharding(mesh, P())).lower(xs, ws)
+        r = analyze_hlo_text(c.compile().as_text(), n_partitions=8)
+        total = sum(v["count"] for v in r["collectives"].values())
+        assert total >= 1, r["collectives"]
+        assert r["collective_link_bytes"] > 0
+        print("OK")
+    """)
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "OK" in r.stdout, r.stderr[-1500:]
+
+
+def test_parse_hlo_handles_tuple_params():
+    txt = """HloModule m
+
+%cond (arg: (s32[], f32[4,4])) -> pred[] {
+  %arg = (s32[], f32[4,4]{1,0}) parameter(0)
+  %gte = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  ROOT %x = f32[4,4]{1,0} parameter(0)
+}
+"""
+    comps = parse_hlo(txt)
+    assert "cond" in comps and "__entry__" in comps
+    from repro.launch.costs import _trip_count
+    assert _trip_count(comps["cond"]) == 7

@@ -1,0 +1,151 @@
+"""Pallas kernels vs. pure-jnp oracles — shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abft_gemm import encode_weight_checksum, pack_encoded_b
+from repro.core.inject import flip_bit
+from repro.kernels import ref as kref
+from repro.kernels.abft_embeddingbag import abft_eb_pallas
+from repro.kernels.abft_qgemm import abft_qgemm_pallas
+from repro.kernels.quantize_rows import quantize_rows_pallas
+from repro.kernels import ops
+
+
+# ---------------------------- abft_qgemm -----------------------------------
+
+QGEMM_SHAPES = [
+    # (m, k, n) — DLRM-ish skinny, tile-aligned, ragged, LLM-wide
+    (1, 64, 64),
+    (8, 128, 128),
+    (16, 256, 512),
+    (5, 100, 77),
+    (130, 70, 300),
+    (2, 800, 3200),
+]
+
+
+@pytest.mark.parametrize("m,k,n", QGEMM_SHAPES)
+def test_qgemm_kernel_matches_ref(rng, m, k, n):
+    a = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    bp = pack_encoded_b(b)
+    c_ref, err_ref = kref.abft_qgemm_ref(a, bp)
+    c, err = abft_qgemm_pallas(a, bp, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+    np.testing.assert_array_equal(np.asarray(err), np.asarray(err_ref))
+    assert int(err.sum()) == 0
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (64, 256, 128),
+                                      (128, 64, 64), (256, 128, 256)])
+def test_qgemm_kernel_block_shapes(rng, bm, bn, bk):
+    m, k, n = 48, 160, 200
+    a = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    bp = pack_encoded_b(b)
+    c_ref, _ = kref.abft_qgemm_ref(a, bp)
+    c, err = abft_qgemm_pallas(a, bp, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+    assert int(err.sum()) == 0
+
+
+def test_qgemm_kernel_detects_corrupted_weights(rng):
+    m, k, n = 8, 64, 96
+    a = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    checksum = encode_weight_checksum(b)          # clean checksum
+    detected = 0
+    for s in range(20):
+        b_bad = flip_bit(b, jnp.asarray(s * 41 % (k * n)),
+                         jnp.asarray(s % 8))
+        bp = pack_encoded_b(b_bad, checksum)      # checksum NOT recomputed
+        _, err = abft_qgemm_pallas(a, bp, interpret=True)
+        detected += int(err.sum()) > 0
+    assert detected == 20  # P[miss] = (3/256)^8 ~ 1e-16 per trial
+
+
+def test_qgemm_ops_dispatch_xla_path(rng):
+    a = jnp.asarray(rng.integers(-128, 128, size=(4, 32)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(32, 16)), jnp.int8)
+    bp = pack_encoded_b(b)
+    c1, e1 = ops.abft_qgemm(a, bp, use_pallas=False)
+    c2, e2 = ops.abft_qgemm(a, bp, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+# ---------------------------- abft_embeddingbag ----------------------------
+
+EB_SHAPES = [
+    # (rows, d, bags, pool)
+    (256, 32, 4, 10),
+    (1024, 64, 10, 100),
+    (512, 128, 2, 7),
+    (100, 16, 1, 1),
+]
+
+
+@pytest.mark.parametrize("rows,d,bags,pool", EB_SHAPES)
+def test_eb_kernel_matches_ref(rng, rows, d, bags, pool):
+    t = jnp.asarray(rng.integers(-128, 128, size=(rows, d)), jnp.int8)
+    al = jnp.asarray(rng.uniform(0.001, 0.1, size=rows), jnp.float32)
+    be = jnp.asarray(rng.uniform(-0.5, 0.5, size=rows), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, rows, size=(bags, pool)), jnp.int32)
+    r_ref, rsum_ref = kref.abft_eb_ref(t, al, be, idx)
+    r, rsum = abft_eb_pallas(t, al, be, idx, interpret=True)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref), rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rsum), np.asarray(rsum_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_eb_kernel_padding_and_weights(rng):
+    t = jnp.asarray(rng.integers(-128, 128, size=(64, 32)), jnp.int8)
+    al = jnp.asarray(rng.uniform(0.01, 0.1, size=64), jnp.float32)
+    be = jnp.asarray(rng.uniform(-0.1, 0.1, size=64), jnp.float32)
+    idx = jnp.asarray([[3, 9, -1, -1], [5, -1, -1, -1]], jnp.int32)
+    w = jnp.asarray([[1.0, 2.0, 9.9, 9.9], [0.5, 9.9, 9.9, 9.9]], jnp.float32)
+    r_ref, _ = kref.abft_eb_ref(t, al, be, idx, w)
+    r, _ = abft_eb_pallas(t, al, be, idx, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_eb_ops_end_to_end_detection(rng):
+    from repro.core.abft_embedding import table_rowsums
+    t = jnp.asarray(rng.integers(-128, 128, size=(128, 64)), jnp.int8)
+    al = jnp.asarray(rng.uniform(0.01, 0.1, size=128), jnp.float32)
+    be = jnp.asarray(rng.uniform(-0.1, 0.1, size=128), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 128, size=(4, 20)), jnp.int32)
+    cs = table_rowsums(t)
+    out = ops.abft_embedding_bag(t, al, be, idx, cs, interpret=True)
+    assert int(out.err_count) == 0
+    # corrupt a *read* row's high bit => Eq. 5 must trip
+    row = int(idx[0, 0])
+    t_bad = t.at[row, 5].set(t[row, 5] ^ np.int8(np.uint8(0x80).view(np.int8)))
+    out_bad = ops.abft_embedding_bag(t_bad, al, be, idx, cs, interpret=True)
+    assert int(out_bad.err_count) >= 1
+
+
+# ---------------------------- quantize_rows --------------------------------
+
+@pytest.mark.parametrize("m,n", [(4, 64), (128, 128), (65, 300), (1, 12288)])
+def test_quantize_rows_matches_ref(rng, m, n):
+    x = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    q_ref, a_ref, b_ref = kref.quantize_rows_ref(x)
+    q, a, b = quantize_rows_pallas(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(b_ref), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_rows_dtypes(rng, dtype):
+    x = jnp.asarray(rng.normal(size=(8, 256)), dtype)
+    q, a, b = quantize_rows_pallas(x, interpret=True)
+    recon = np.asarray(a)[:, None] * np.asarray(q, np.float32) + \
+        np.asarray(b)[:, None]
+    np.testing.assert_allclose(recon, np.asarray(x, np.float32), atol=0.02)

@@ -1,0 +1,80 @@
+"""Fault report plumbing, policies, injection utilities, checksums."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy
+from repro.core.checksum import tensor_checksum, tree_checksum, verify_tree
+from repro.core.inject import flip_bit, random_bitflip, random_value
+
+
+def test_flip_bit_int8_roundtrip():
+    x = jnp.asarray([1, -5, 100], jnp.int8)
+    y = flip_bit(x, jnp.asarray(1), jnp.asarray(3))
+    z = flip_bit(y, jnp.asarray(1), jnp.asarray(3))
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(x))
+    assert int(y[1]) != -5
+
+
+def test_flip_bit_f32():
+    x = jnp.asarray([1.0, 2.0], jnp.float32)
+    y = flip_bit(x, jnp.asarray(0), jnp.asarray(31))  # sign bit
+    assert float(y[0]) == -1.0
+
+
+def test_random_bitflip_changes_exactly_one_element():
+    x = jnp.zeros((64,), jnp.int32)
+    y = random_bitflip(jax.random.PRNGKey(0), x)
+    assert int((y != x).sum()) == 1
+    # the change is a power of two (single-bit model)
+    delta = abs(int(np.asarray(y - x).sum()))
+    assert delta & (delta - 1) == 0
+
+
+def test_random_value_changes_at_most_one():
+    x = jnp.zeros((32,), jnp.int8)
+    y = random_value(jax.random.PRNGKey(1), x)
+    assert int((y != x).sum()) <= 1
+
+
+def test_report_merge_and_metrics():
+    r1 = policy.gemm_report(jnp.asarray(2, jnp.int32))
+    r2 = policy.eb_report(jnp.asarray(1, jnp.int32))
+    m = policy.merge_reports(r1, r2, policy.empty_report())
+    assert int(m.total_errors()) == 3
+    assert int(m.as_metrics()["abft/gemm_checks"]) == 1
+
+
+def test_report_is_pytree_scannable():
+    def body(carry, _):
+        return policy.merge_reports(carry, policy.gemm_report(
+            jnp.asarray(1, jnp.int32))), None
+
+    final, _ = jax.lax.scan(body, policy.empty_report(), jnp.arange(5))
+    assert int(final.gemm_errors) == 5
+
+
+def test_with_recompute_counts_retry():
+    calls = {"n": 0}
+
+    def op():
+        calls["n"] += 1
+        return jnp.zeros((2,)), jnp.asarray(1, jnp.int32)  # always "errors"
+
+    out, err, retries = policy.with_recompute(op)()
+    assert int(retries) == 1
+
+
+def test_tensor_checksum_detects_flip():
+    x = jnp.asarray(np.arange(100, dtype=np.float32))
+    before = int(tensor_checksum(x))
+    y = flip_bit(x, jnp.asarray(7), jnp.asarray(13))
+    assert int(tensor_checksum(y)) != before
+
+
+def test_tree_checksum_verify():
+    tree = {"w": jnp.ones((4, 4)), "b": jnp.arange(3, dtype=jnp.int32)}
+    cs = tree_checksum(tree)
+    assert verify_tree(tree, cs)
+    bad = {"w": tree["w"].at[0, 0].set(2.0), "b": tree["b"]}
+    assert not verify_tree(bad, cs)

@@ -1,0 +1,62 @@
+"""Quantization substrate: Eq. (1) pipeline correctness."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant import (
+    dequantize,
+    qgemm_f32,
+    quantize_channels,
+    quantize_rows,
+    quantize_tensor,
+)
+from repro.quant.qtensor import int_matmul
+
+
+def test_quantize_dequantize_roundtrip(rng):
+    x = rng.normal(size=(16, 32)).astype(np.float32)
+    q = quantize_tensor(x)
+    err = np.abs(dequantize(q) - x).max()
+    span = x.max() - x.min()
+    assert err <= span / 255.0 + 1e-6  # half-ulp of the quantization grid
+
+
+def test_rowwise_tighter_than_tensorwise(rng):
+    # Rows with wildly different dynamic ranges: per-row must win.
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+    x[0] *= 100.0
+    qt = quantize_tensor(x)
+    qr = quantize_rows(x)
+    err_t = np.abs(dequantize(qt) - x)[1:].max()
+    err_r = np.abs(dequantize(qr) - x)[1:].max()
+    assert err_r < err_t
+
+
+def test_unsigned_rows_dtype(rng):
+    x = rng.normal(size=(4, 8)).astype(np.float32)
+    q = quantize_rows(x, unsigned=True)
+    assert q.values.dtype == jnp.uint8
+    assert q.axis == 0
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 16, 8), (1, 64, 32), (17, 33, 5)])
+def test_qgemm_matches_float_gemm(rng, m, k, n):
+    """Eq. (1): quantized product approximates the real product."""
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    aq = quantize_rows(a, unsigned=True)
+    bq = quantize_channels(b)
+    got = np.asarray(qgemm_f32(aq, bq))
+    want = a @ b
+    # int8 x int8 error budget: ~k * (a_step*|b| + b_step*|a|)
+    scale = np.abs(a).max() * np.abs(b).max() * k
+    assert np.abs(got - want).max() <= 0.02 * scale + 1e-4
+
+
+def test_int_matmul_int32_accumulation(rng):
+    a = rng.integers(0, 256, size=(8, 300)).astype(np.uint8)
+    b = rng.integers(-128, 128, size=(300, 16)).astype(np.int8)
+    got = np.asarray(int_matmul(jnp.asarray(a), jnp.asarray(b)))
+    want = a.astype(np.int64) @ b.astype(np.int64)
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, want.astype(np.int32))

@@ -1,0 +1,118 @@
+"""Chunked matmul-form WKV6 == per-token recurrence (hillclimb #1 oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.layers.rwkv6 import LOG_W_MIN, wkv_chunked, wkv_recurrent
+
+
+def _inputs(key, b, s, h, dh, *, heavy_decay=False):
+    ks = jax.random.split(key, 6)
+    rh = jax.random.normal(ks[0], (b, s, h, dh))
+    kh = jax.random.normal(ks[1], (b, s, h, dh))
+    vh = jax.random.normal(ks[2], (b, s, h, dh))
+    lo = LOG_W_MIN if heavy_decay else -1.0
+    lwh = jax.random.uniform(ks[3], (b, s, h, dh), minval=lo, maxval=0.0)
+    u = jax.random.normal(ks[4], (h, dh)) * 0.5
+    s0 = jax.random.normal(ks[5], (b, h, dh, dh)) * 0.1
+    return rh, kh, vh, lwh, u, s0
+
+
+def test_chunk_over_envelope_rejected():
+    rh, kh, vh, lwh, u, s0 = _inputs(jax.random.key(0), 1, 64, 1, 4)
+    with pytest.raises(AssertionError, match="envelope"):
+        wkv_chunked(rh, kh, vh, lwh, u, s0, chunk=32)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("heavy", [False, True])
+def test_chunked_matches_recurrent(chunk, heavy):
+    rh, kh, vh, lwh, u, s0 = _inputs(jax.random.key(0), 2, 64, 3, 8,
+                                     heavy_decay=heavy)
+    y_ref, s_ref = wkv_recurrent(rh, kh, vh, lwh, u, s0)
+    y_chk, s_chk = wkv_chunked(rh, kh, vh, lwh, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_grads_match():
+    rh, kh, vh, lwh, u, s0 = _inputs(jax.random.key(1), 1, 32, 2, 8)
+
+    def loss(fn, args):
+        y, s = fn(*args, u, s0)
+        return jnp.sum(y ** 2) + jnp.sum(s ** 2)
+
+    g_ref = jax.grad(lambda a: loss(wkv_recurrent, a))((rh, kh, vh, lwh))
+    g_chk = jax.grad(
+        lambda a: loss(lambda *x: wkv_chunked(*x, chunk=8), a))(
+        (rh, kh, vh, lwh))
+    for a, b in zip(g_ref, g_chk):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=5e-3, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([8, 16]),
+       st.sampled_from([16, 48, 64]))
+def test_chunked_matches_property(seed, chunk, s):
+    if s % chunk:
+        s = chunk * max(1, s // chunk)
+    rh, kh, vh, lwh, u, s0 = _inputs(jax.random.key(seed), 1, s, 2, 4,
+                                     heavy_decay=(seed % 2 == 0))
+    y_ref, s_ref = wkv_recurrent(rh, kh, vh, lwh, u, s0)
+    y_chk, s_chk = wkv_chunked(rh, kh, vh, lwh, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_bf16_operands_close():
+    """The §Perf bf16-matmul variant stays within bf16 tolerance of the
+    f32 per-token oracle (accumulation is f32 either way)."""
+    rh, kh, vh, lwh, u, s0 = _inputs(jax.random.key(3), 2, 64, 2, 8)
+    y_ref, s_ref = wkv_recurrent(rh, kh, vh, lwh, u, s0)
+    y_b, s_b = wkv_chunked(rh, kh, vh, lwh, u, s0, chunk=16,
+                           mm_dtype=jnp.bfloat16)
+    # bf16 has ~3 decimal digits; errors compound over 64 tokens
+    np.testing.assert_allclose(np.asarray(y_b), np.asarray(y_ref),
+                               rtol=0.15, atol=0.15)
+    np.testing.assert_allclose(np.asarray(s_b), np.asarray(s_ref),
+                               rtol=0.15, atol=0.15)
+
+
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_pallas_kernel_matches_oracle(chunk):
+    """kernels/wkv6_chunked (interpret mode) == per-token oracle."""
+    from repro.kernels.wkv6_chunked import wkv_chunked_pallas
+
+    rh, kh, vh, lwh, u, s0 = _inputs(jax.random.key(5), 2, 64, 3, 8,
+                                     heavy_decay=True)
+    y_ref, s_ref = wkv_recurrent(rh, kh, vh, lwh, u, s0)
+    y_k, s_k = wkv_chunked_pallas(rh, kh, vh, lwh, u, s0, chunk=chunk,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_no_overflow_at_worst_case_decay():
+    """All-min decay for a full chunk: exponents hit C·|LOG_W_MIN| — must
+    stay finite (the f32-safety bound the clamp guarantees)."""
+    b, s, h, dh = 1, 32, 1, 4
+    rh = jnp.ones((b, s, h, dh))
+    kh = jnp.ones((b, s, h, dh))
+    vh = jnp.ones((b, s, h, dh))
+    lwh = jnp.full((b, s, h, dh), LOG_W_MIN)
+    u = jnp.ones((h, dh))
+    s0 = jnp.ones((b, h, dh, dh))
+    y, st_ = wkv_chunked(rh, kh, vh, lwh, u, s0, chunk=16)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(st_)).all()
+    y_ref, _ = wkv_recurrent(rh, kh, vh, lwh, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4)
