@@ -1,52 +1,29 @@
 """Shared benchmark utilities: timing, CSV emit, DLRM shape set."""
 from __future__ import annotations
 
-import time
-from typing import Callable, List, Tuple
+from typing import Callable, List
 
 import jax
-import numpy as np
 
-# ---------------------------------------------------------------------------
-# The paper's Fig. 5 evaluates 28 DLRM GEMM shapes (m, n, k) — "peculiar
-# matrix sizes": small m (batch), large n/k (layer widths).  The figure axis
-# lists shapes from production DLRM MLP stacks; we reconstruct the set from
-# the DLRM bottom (13-512-256-128) and top (479-1024-1024-512-256-1) MLPs,
-# the paper's quoted (1, 800, 3200) point, and FBGEMM benchmark shapes.
-# ---------------------------------------------------------------------------
-GEMM_SHAPES: List[Tuple[int, int, int]] = [
-    # bottom MLP, batch 1..256
-    (1, 512, 13), (1, 256, 512), (1, 128, 256),
-    (20, 512, 13), (20, 256, 512), (20, 128, 256),
-    (100, 512, 13), (100, 256, 512), (100, 128, 256),
-    (256, 512, 13), (256, 256, 512), (256, 128, 256),
-    # top MLP, batch 1..256
-    (1, 1024, 479), (1, 1024, 1024), (1, 512, 1024), (1, 256, 512),
-    (20, 1024, 479), (20, 1024, 1024), (20, 512, 1024),
-    (100, 1024, 479), (100, 1024, 1024), (100, 512, 1024),
-    (256, 1024, 479), (256, 1024, 1024),
-    # wide serving projections (paper's fast case (1, 800, 3200) included)
-    (1, 800, 3200), (10, 800, 3200), (64, 800, 3200), (100, 800, 3200),
-]
+# The paper's 28 Fig. 5 DLRM GEMM shapes — canonical definition moved to
+# the campaign subsystem (repro.campaign.spec), re-exported here for the
+# overhead benchmarks.
+from repro.campaign.spec import DLRM_GEMM_SHAPES as GEMM_SHAPES  # noqa: E402,F401
+
 assert len(GEMM_SHAPES) == 28
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10,
             min_time_s: float = 0.2) -> float:
-    """Median wall seconds per call of a jitted fn (blocks on outputs)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    total = 0.0
-    while total < min_time_s or len(times) < iters:
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        dt = time.perf_counter() - t0
-        times.append(dt)
-        total += dt
-        if len(times) >= 100:
-            break
-    return float(np.median(times))
+    """Median wall seconds per call of a jitted fn (blocks on outputs).
+
+    Delegates to the campaign subsystem's helper so benchmarks/ tables and
+    campaign overhead cells share one timing methodology.
+    """
+    from repro.campaign.timing import median_time
+
+    return median_time(fn, *args, warmup=warmup, iters=iters,
+                       min_time_s=min_time_s)
 
 
 def modelled_cost(fn: Callable, *args) -> dict:

@@ -1,98 +1,57 @@
 """Table II reproduction: detection accuracy with simulated errors in GEMM.
 
-Paper campaign: for each of the 28 Fig. 5 shapes, 100 runs with a random
-bit flip in B *after* its checksum was computed (amortized-encode serving
-model — the flip is a memory error the checksum must catch), 100 runs with
-a flip in the int32 intermediate C, and 100 error-free runs.
-2800 samples per column, reproduced here with vmapped injection campaigns.
+Thin wrapper over the resilience-campaign engine (repro.campaign): one
+spec sweeps (gemm_packed × B bit flips) and (gemm_c × C bit flips) over
+the 28 Fig. 5 shapes at 100 runs each, with per-cell clean runs counting
+false positives.  All inject→run→count loops live in the engine.
 
 Paper results: B-errors 2663/2800 (95.11%), C-errors 2800/2800 (100%),
 false positives 0/2800.  Analytic bound for B (§IV-C1): ≥ 1-(3/256)^m.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
 from benchmarks.common import GEMM_SHAPES, Csv
-from repro.core import abft_gemm as ag
-from repro.core.inject import random_bitflip
+from repro.campaign import CampaignSpec, run_specs
 
 RUNS_PER_SHAPE = 100
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3))
-def _campaign_b(key, m, n, k):
-    """Bit flip in B after encoding; count detected runs."""
-    ka, kb, kf = jax.random.split(key, 3)
-    a = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)
-    b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
-    checksum = ag.encode_weight_checksum(b)        # encode the clean B
-
-    def one(kk):
-        b_bad = random_bitflip(kk, b)
-        out = ag.abft_qgemm(a, b_bad, checksum=checksum)
-        changed = jnp.any(b_bad != b)              # flip may be masked by
-        detected = out.err_count > 0               # clip-range symmetry: no
-        return detected | ~changed                 # corruption -> "detected"
-
-    keys = jax.random.split(kf, RUNS_PER_SHAPE)
-    return jnp.sum(jax.vmap(one)(keys).astype(jnp.int32))
-
-
-@functools.partial(jax.jit, static_argnums=(1, 2, 3))
-def _campaign_c(key, m, n, k):
-    """Bit flip in the int32 C_temp before verification."""
-    ka, kb, kf = jax.random.split(key, 3)
-    a = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)
-    b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
-    checksum = ag.encode_weight_checksum(b)
-    b_packed = ag.pack_encoded_b(b, checksum)
-    c_full = jax.lax.dot_general(
-        a.astype(jnp.int32), b_packed.astype(jnp.int32),
-        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
-    c, check_col = c_full[:, :n], c_full[:, n]
-
-    def one(kk):
-        c_bad = random_bitflip(kk, c)
-        _, err = ag.verify_rows(c_bad, check_col)
-        return err > 0
-
-    keys = jax.random.split(kf, RUNS_PER_SHAPE)
-    return jnp.sum(jax.vmap(one)(keys).astype(jnp.int32))
-
-
-@functools.partial(jax.jit, static_argnums=(1, 2, 3))
-def _campaign_clean(key, m, n, k):
-    """Error-free runs: count FALSE positives."""
-    ka, kb = jax.random.split(key)
-    a = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)
-    b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
-    out = ag.abft_qgemm(a, b)
-    return (out.err_count > 0).astype(jnp.int32) * RUNS_PER_SHAPE
+def build_spec(*, quick: bool = False, seed: int = 1000) -> CampaignSpec:
+    shapes = tuple(GEMM_SHAPES[::4] if quick else GEMM_SHAPES)
+    return CampaignSpec(
+        name="table2-gemm",
+        targets=("gemm_packed", "gemm_c"),
+        fault_models=("bitflip",),
+        bit_bands=("all",),
+        shapes=shapes,
+        dtypes=("int8", "int32"),
+        samples=RUNS_PER_SHAPE,
+        seed=seed)
 
 
 def run(csv: Csv, *, quick: bool = False):
-    shapes = GEMM_SHAPES[::4] if quick else GEMM_SHAPES
-    tot_b = tot_c = tot_fp = 0
-    n_runs = 0
-    for i, (m, n, k) in enumerate(shapes):
-        key = jax.random.key(1000 + i)
-        det_b = int(_campaign_b(key, m, n, k))
-        det_c = int(_campaign_c(key, m, n, k))
-        fp = int(_campaign_clean(key, m, n, k))
+    spec = build_spec(quick=quick)
+    results, _ = run_specs([spec])
+    by_shape: dict = {}
+    for r in results:
+        by_shape.setdefault(r.plan.shape, {})[r.plan.target] = r.metrics
+
+    tot_b = tot_c = tot_fp = n_runs = 0
+    for shape, cells in by_shape.items():
+        m, n, k = shape
+        mb, mc = cells["gemm_packed"], cells["gemm_c"]
+        det_b = mb.effective_detected
+        det_c = mc.effective_detected
+        fp = mb.false_positives + mc.false_positives
         tot_b += det_b
         tot_c += det_c
         tot_fp += fp
-        n_runs += RUNS_PER_SHAPE
-        bound = 1.0 - (3.0 / 256.0) ** m
+        n_runs += mb.samples
         csv.row("gemm_detect", f"{m}x{n}x{k}", det_b, det_c, fp,
-                RUNS_PER_SHAPE, f"{bound*100:.2f}%")
+                mb.samples, f"{(mb.analytic_bound or 0)*100:.2f}%")
     csv.row("gemm_detect_TOTAL", "all", tot_b, tot_c, tot_fp, n_runs,
             f"B:{tot_b/n_runs*100:.2f}% C:{tot_c/n_runs*100:.2f}% "
-            f"FP:{tot_fp/n_runs*100:.2f}% "
+            f"FP:{tot_fp/(2*n_runs)*100:.2f}% "
             f"(paper: 95.11% / 100% / 0%)")
     return tot_b, tot_c, tot_fp, n_runs
 

@@ -88,9 +88,7 @@ print("4) the same, inside a transformer (int8+ABFT serving path)")
 print("=" * 64)
 
 from repro.configs.registry import get_arch          # noqa: E402
-import sys, os                                       # noqa: E402
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
-from helpers import reduce_cfg                       # noqa: E402
+from repro.configs.reduce import reduce_cfg          # noqa: E402
 from repro.layers.common import Ctx                  # noqa: E402
 from repro.models.base import build_model            # noqa: E402
 from repro.sharding import values_of                 # noqa: E402

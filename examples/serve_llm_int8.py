@@ -9,16 +9,12 @@ weight and the per-step ABFT report shows detection from that step on
 (a memory fault in B persists until the weight is re-fetched — §IV-A1).
 """
 import argparse
-import os
-import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
-from helpers import reduce_cfg                       # noqa: E402
-
+from repro.configs.reduce import reduce_cfg          # noqa: E402
 from repro.configs.registry import get_arch          # noqa: E402
 from repro.core.inject import flip_bit_in_leaf       # noqa: E402
 from repro.launch.steps import (make_decode_step,    # noqa: E402

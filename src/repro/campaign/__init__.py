@@ -1,0 +1,39 @@
+"""Resilience-campaign subsystem: declarative fault-injection sweeps.
+
+One engine owns every detection experiment: a :class:`CampaignSpec` names
+a grid over (injectable target × fault model × bit band × shape × dtype ×
+samples); the executor vmaps thousands of trials per cell (pmap across
+host devices); artifacts land as ``BENCH_campaign_*.json`` + markdown so
+resilience results persist and compare across PRs.
+
+    python -m repro.campaign --quick
+    python -m repro.campaign --grid paper --seed 7 --device-count 8
+
+Library use::
+
+    from repro.campaign import CampaignSpec, run_campaign
+    spec = CampaignSpec(name="my-sweep", targets=("gemm_packed",),
+                        bit_bands=("significant",), samples=1000)
+    result = run_campaign("my-sweep", [spec], out_dir=".")
+"""
+from repro.campaign.artifacts import (cell_metrics, find_cells,
+                                      load_artifact, markdown_table,
+                                      write_artifacts)
+from repro.campaign.executor import (CellResult, run_campaign, run_cell,
+                                     run_specs)
+from repro.campaign.metrics import CellMetrics, compute_metrics, \
+    wilson_interval
+from repro.campaign.spec import (CampaignSpec, CellPlan, DLRM_GEMM_SHAPES,
+                                 cell_seed, expand)
+from repro.campaign.targets import (InjectableTarget, TARGETS, apply_fault,
+                                    get_target, register_target)
+
+__all__ = [
+    "CampaignSpec", "CellPlan", "expand", "cell_seed", "DLRM_GEMM_SHAPES",
+    "InjectableTarget", "TARGETS", "register_target", "get_target",
+    "apply_fault",
+    "CellMetrics", "compute_metrics", "wilson_interval",
+    "CellResult", "run_cell", "run_specs", "run_campaign",
+    "load_artifact", "write_artifacts", "markdown_table", "cell_metrics",
+    "find_cells",
+]

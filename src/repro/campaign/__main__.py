@@ -1,0 +1,70 @@
+"""``python -m repro.campaign`` — run a resilience campaign.
+
+Examples::
+
+    python -m repro.campaign --quick
+    python -m repro.campaign --grid paper --seed 7
+    python -m repro.campaign --grid full --device-count 8 --out bench/
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.campaign",
+        description="Declarative fault-injection sweeps with batched "
+                    "execution and JSON artifacts.")
+    ap.add_argument("--quick", action="store_true",
+                    help="shorthand for --grid quick (the CI smoke grid)")
+    ap.add_argument("--grid", default=None,
+                    choices=["quick", "paper", "soak", "full"],
+                    help="named grid to run (see repro.campaign.grids)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--samples", type=int, default=0,
+                    help="override the quick grid's GEMM sample count")
+    ap.add_argument("--out", default=".",
+                    help="artifact directory (default: cwd)")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="trials per compiled vmap chunk")
+    ap.add_argument("--device-count", type=int, default=0,
+                    help="fake host devices (XLA_FLAGS) to pmap across")
+    args = ap.parse_args(argv)
+
+    if args.device_count:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.device_count}"
+        ).strip()
+
+    # jax import happens after XLA_FLAGS is set
+    from repro.campaign.executor import CHUNK, run_campaign
+    from repro.campaign.grids import (GRIDS, paper_specs, quick_specs)
+
+    grid = args.grid or ("quick" if args.quick else None)
+    if grid is None:
+        ap.error("pick a grid: --quick or --grid {quick,paper,soak,full}")
+    if grid == "quick":
+        specs = quick_specs(seed=args.seed, samples=args.samples or 600)
+    elif grid == "paper":
+        specs = paper_specs(seed=args.seed, quick=args.quick)
+    else:
+        specs = GRIDS[grid](seed=args.seed)
+
+    result = run_campaign(grid, specs, out_dir=args.out,
+                          chunk=args.chunk or CHUNK,
+                          verbose=lambda s: print(s, flush=True))
+
+    from repro.campaign.artifacts import markdown_table
+    print()
+    print(markdown_table(result))
+    print(f"artifact: {os.path.join(args.out, 'BENCH_campaign_' + grid)}"
+          f".json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,136 @@
+"""Campaign artifacts: ``BENCH_campaign_<name>.json`` + markdown summary.
+
+The JSON artifact is the cross-PR comparison record: it embeds the specs,
+every cell's plan + metrics, the skipped-cell log, and environment
+metadata.  ``load_artifact`` round-trips it (tests assert spec/metrics
+equality), and ``markdown_table`` renders the human summary the CLI prints
+and CI uploads.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+from typing import List, Optional
+
+from repro.campaign.metrics import CellMetrics
+from repro.campaign.spec import CampaignSpec, CellPlan
+
+SCHEMA_VERSION = 1
+
+
+def environment_info() -> dict:
+    import jax
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+
+
+def campaign_to_dict(name: str, specs: List[CampaignSpec],
+                     cells: List[dict], skipped: List[dict],
+                     wall_s: float, seed: int) -> dict:
+    """``cells`` entries: {"plan": CellPlan, "metrics": CellMetrics,
+    "seconds": float}."""
+    return {
+        "schema": SCHEMA_VERSION,
+        "campaign": name,
+        "seed": seed,
+        "env": environment_info(),
+        "wall_seconds": wall_s,
+        "specs": [s.to_dict() for s in specs],
+        "skipped": skipped,
+        "cells": [{
+            "cell_id": c["plan"].cell_id,
+            "plan": c["plan"].to_dict(),
+            "metrics": c["metrics"].to_dict(),
+            "seconds": c["seconds"],
+        } for c in cells],
+    }
+
+
+def write_artifacts(result: dict, out_dir: str = ".") -> tuple:
+    """Write JSON + markdown; returns (json_path, md_path).
+
+    Filenames are deterministic per campaign name so CI artifact diffs and
+    cross-PR comparisons line up run-over-run.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    base = f"BENCH_campaign_{result['campaign']}"
+    json_path = os.path.join(out_dir, base + ".json")
+    md_path = os.path.join(out_dir, base + ".md")
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    with open(md_path, "w") as f:
+        f.write(markdown_table(result))
+    return json_path, md_path
+
+
+def load_artifact(path: str) -> dict:
+    with open(path) as f:
+        result = json.load(f)
+    if result.get("schema") != SCHEMA_VERSION:
+        raise ValueError(
+            f"artifact schema {result.get('schema')} != {SCHEMA_VERSION}")
+    return result
+
+
+def cell_metrics(result: dict, cell_id: str) -> CellMetrics:
+    for c in result["cells"]:
+        if c["cell_id"] == cell_id:
+            return CellMetrics.from_dict(c["metrics"])
+    raise KeyError(f"no cell {cell_id!r} in artifact "
+                   f"{result.get('campaign')!r}")
+
+
+def find_cells(result: dict, **field_values) -> List[dict]:
+    """Filter cells by plan fields, e.g. ``target="gemm_packed",
+    fault_model="bitflip"``."""
+    out = []
+    for c in result["cells"]:
+        if all(c["plan"].get(k) == v for k, v in field_values.items()):
+            out.append(c)
+    return out
+
+
+def _fmt_pct(x: Optional[float]) -> str:
+    return "—" if x is None else f"{100.0 * x:.2f}%"
+
+
+def markdown_table(result: dict) -> str:
+    lines = [
+        f"# Resilience campaign `{result['campaign']}`",
+        "",
+        f"seed {result['seed']} · {result['env']['backend']} "
+        f"×{result['env']['device_count']} · jax {result['env']['jax']} · "
+        f"{result['wall_seconds']:.1f}s wall",
+        "",
+        "| cell | n | detect | escape | FP | bound | overhead |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in result["cells"]:
+        m = c["metrics"]
+        lines.append(
+            "| `{cid}` | {n} | {det} | {esc} | {fp} | {bound} | {ov} |"
+            .format(
+                cid=c["cell_id"], n=m["samples"],
+                det=_fmt_pct(m["detection_rate"]),
+                esc=_fmt_pct(m["escape_rate"]),
+                fp=_fmt_pct(m["fp_rate"]),
+                bound=_fmt_pct(m.get("analytic_bound")),
+                ov=_fmt_pct(m.get("overhead"))))
+    if result.get("skipped"):
+        lines += ["", f"Skipped cells: {len(result['skipped'])}", ""]
+        for s in result["skipped"]:
+            lines.append(f"- `{s['cell_id']}`: {s['reason']}")
+    lines.append("")
+    return "\n".join(lines)
+
+
+__all__ = ["campaign_to_dict", "write_artifacts", "load_artifact",
+           "cell_metrics", "find_cells", "markdown_table",
+           "environment_info", "SCHEMA_VERSION", "CellPlan"]

@@ -1,0 +1,157 @@
+"""Batched campaign executor.
+
+One cell = thousands of (inject → run → count) trials.  The ad-hoc
+benchmark scripts this subsystem replaces ran Python loops per scenario;
+here every cell is ONE jitted ``vmap`` over a key batch (chunked to bound
+memory), and with multiple host devices the chunks are ``pmap``'d so a
+`--device-count 8` sweep runs eight chunks abreast.
+
+The executor is target-agnostic: it only sees the three pure functions a
+target registers (build / trial / clean) plus optional overhead thunks it
+times with a median-of-iters wall clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.campaign.metrics import CellMetrics, compute_metrics
+from repro.campaign.spec import CampaignSpec, CellPlan, expand
+from repro.campaign.targets import get_target
+
+#: default trials per compiled vmap chunk — bounds per-chunk memory for
+#: targets that materialize a corrupted copy of their state per trial.
+CHUNK = 256
+
+
+@dataclasses.dataclass
+class CellResult:
+    plan: CellPlan
+    metrics: CellMetrics
+    seconds: float
+
+
+def _chunked_counts(fn: Callable, keys: jax.Array, chunk: int,
+                    n_outputs: int) -> np.ndarray:
+    """Run ``fn(key) -> bool tuple`` over all keys; returns summed counts
+    [n_outputs] (plus, for 2-output trial fns, the AND of both flags as a
+    third count).  Chunks share at most two jit caches (full chunk +
+    remainder); multi-device hosts split each chunk across devices with
+    pmap(vmap(...)).
+    """
+    devs = jax.local_devices()
+    ndev = len(devs)
+
+    def batch(ks):
+        outs = jax.vmap(fn)(ks)
+        outs = outs if isinstance(outs, tuple) else (outs,)
+        counts = [jnp.sum(o.astype(jnp.int32)) for o in outs]
+        if len(outs) == 2:
+            counts.append(jnp.sum((outs[0] & outs[1]).astype(jnp.int32)))
+        return jnp.stack(counts)
+
+    jbatch = jax.jit(batch)
+    pbatch = jax.pmap(batch) if ndev > 1 else None
+
+    total = np.zeros(n_outputs + (1 if n_outputs == 2 else 0), np.int64)
+    i, n = 0, keys.shape[0]
+    while i < n:
+        take = min(chunk * max(ndev, 1), n - i)
+        ks = keys[i:i + take]
+        if pbatch is not None and take % ndev == 0 and take >= ndev:
+            counts = pbatch(ks.reshape((ndev, take // ndev)
+                                       + ks.shape[1:])).sum(axis=0)
+        else:
+            counts = jbatch(ks)
+        total += np.asarray(counts, np.int64)
+        i += take
+    return total
+
+
+def _median_time(fn: Callable) -> float:
+    from repro.campaign.timing import median_time
+    return median_time(jax.jit(fn))
+
+
+def run_cell(plan: CellPlan, *, chunk: int = CHUNK) -> CellResult:
+    target = get_target(plan.target)
+    t0 = time.perf_counter()
+    key = jax.random.key(plan.seed)
+    k_build, k_trial, k_clean = jax.random.split(key, 3)
+
+    state = target.build(plan, k_build)
+
+    trial_counts = _chunked_counts(
+        lambda k: target.trial(state, plan, k),
+        jax.random.split(k_trial, plan.samples), chunk, 2)
+    detected, corrupted, det_and_cor = (int(c) for c in trial_counts)
+
+    false_positives = 0
+    if plan.clean_samples > 0:
+        clean_counts = _chunked_counts(
+            lambda k: target.clean(state, plan, k),
+            jax.random.split(k_clean, plan.clean_samples), chunk, 1)
+        false_positives = int(clean_counts[0])
+
+    protected_s = unprotected_s = None
+    if plan.measure_overhead and target.overhead is not None:
+        pair = target.overhead(state, plan)
+        if pair is not None:
+            prot, unprot = pair
+            protected_s = _median_time(prot)
+            unprotected_s = _median_time(unprot)
+
+    metrics = compute_metrics(
+        samples=plan.samples, detected=detected, corrupted=corrupted,
+        detected_and_corrupted=det_and_cor,
+        clean_samples=plan.clean_samples,
+        false_positives=false_positives,
+        analytic_bound=target.analytic_bound(plan),
+        protected_s=protected_s, unprotected_s=unprotected_s)
+    return CellResult(plan=plan, metrics=metrics,
+                      seconds=time.perf_counter() - t0)
+
+
+def run_specs(specs: Sequence[CampaignSpec], *, chunk: int = CHUNK,
+              verbose: Optional[Callable[[str], None]] = None
+              ) -> Tuple[List[CellResult], List[dict]]:
+    """Expand and execute a list of specs; returns (results, skipped)."""
+    results: List[CellResult] = []
+    skipped: List[dict] = []
+    for spec in specs:
+        plans, skips = expand(spec)
+        skipped.extend(skips)
+        for plan in plans:
+            r = run_cell(plan, chunk=chunk)
+            results.append(r)
+            if verbose:
+                m = r.metrics
+                verbose(f"[{r.plan.cell_id}] n={m.samples} "
+                        f"detect={m.detection_rate:.4f} "
+                        f"escape={m.escape_rate:.4f} fp={m.fp_rate:.4f} "
+                        f"({r.seconds:.1f}s)")
+    return results, skipped
+
+
+def run_campaign(name: str, specs: Sequence[CampaignSpec], *,
+                 out_dir: Optional[str] = None, chunk: int = CHUNK,
+                 verbose: Optional[Callable[[str], None]] = None) -> dict:
+    """Execute specs, assemble the artifact dict, optionally write it."""
+    from repro.campaign.artifacts import campaign_to_dict, write_artifacts
+
+    t0 = time.perf_counter()
+    results, skipped = run_specs(specs, chunk=chunk, verbose=verbose)
+    result = campaign_to_dict(
+        name, list(specs),
+        [{"plan": r.plan, "metrics": r.metrics, "seconds": r.seconds}
+         for r in results],
+        skipped, wall_s=time.perf_counter() - t0,
+        seed=specs[0].seed if specs else 0)
+    if out_dir is not None:
+        write_artifacts(result, out_dir)
+    return result

@@ -1,0 +1,98 @@
+"""Named campaign grids.
+
+``quick``  — the CI smoke: every target class exercised, minutes on CPU,
+             sample counts sized so the GEMM bit-flip cell is statistically
+             comparable (±2%) to the §IV-C analytic bound.
+``paper``  — the paper's Tables II + III campaigns at full shape coverage.
+``soak``   — the full-model decode-step sweep across fault models/bands.
+``full``   — everything above plus the beyond-paper KV-cache cells.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.campaign.spec import CampaignSpec, DLRM_GEMM_SHAPES
+
+
+def quick_specs(seed: int = 0, samples: int = 600) -> List[CampaignSpec]:
+    return [
+        CampaignSpec(
+            name="quick-gemm",
+            targets=("gemm_packed", "gemm_c"),
+            fault_models=("bitflip", "random_value"),
+            bit_bands=("all",),
+            shapes=((1, 256, 512), (20, 256, 512)),
+            dtypes=("int8", "int32"),
+            samples=max(samples, 500), seed=seed,
+            measure_overhead=True),
+        CampaignSpec(
+            name="quick-eb",
+            targets=("embedding_bag",),
+            fault_models=("bitflip",),
+            bit_bands=("significant", "low"),
+            samples=500, seed=seed, measure_overhead=True),
+        CampaignSpec(
+            name="quick-kv",
+            targets=("kv_cache",),
+            fault_models=("bitflip",),
+            bit_bands=("all",),
+            dtypes=("int8", "float32"),
+            samples=200, seed=seed),
+        CampaignSpec(
+            name="quick-soak",
+            targets=("decode_step",),
+            fault_models=("bitflip",),
+            bit_bands=("significant",),
+            samples=8, clean_samples=4, seed=seed),
+    ]
+
+
+def paper_specs(seed: int = 0, quick: bool = False) -> List[CampaignSpec]:
+    """Tables II (GEMM, 28 DLRM shapes × B/C errors × clean) and III
+    (EmbeddingBag high/low bands + clean)."""
+    shapes = tuple(DLRM_GEMM_SHAPES[::4] if quick else DLRM_GEMM_SHAPES)
+    return [
+        CampaignSpec(
+            name="paper-gemm",
+            targets=("gemm_packed", "gemm_c"),
+            fault_models=("bitflip",),
+            bit_bands=("all",),
+            shapes=shapes,
+            dtypes=("int8", "int32"),
+            samples=100, seed=seed),
+        CampaignSpec(
+            name="paper-eb",
+            targets=("embedding_bag",),
+            fault_models=("bitflip",),
+            bit_bands=("significant", "low"),
+            samples=200, clean_samples=400, seed=seed),
+    ]
+
+
+def soak_specs(seed: int = 0) -> List[CampaignSpec]:
+    return [CampaignSpec(
+        name="soak",
+        targets=("decode_step",),
+        fault_models=("bitflip", "random_value"),
+        bit_bands=("all", "significant", "low"),
+        samples=16, clean_samples=8, seed=seed,
+        measure_overhead=True)]
+
+
+def full_specs(seed: int = 0) -> List[CampaignSpec]:
+    kv = CampaignSpec(
+        name="kv-sweep",
+        targets=("kv_cache",),
+        fault_models=("bitflip", "random_value"),
+        bit_bands=("all", "low", "significant", "exponent"),
+        dtypes=("int8", "float32"),
+        samples=400, seed=seed, measure_overhead=True)
+    return paper_specs(seed) + [kv] + soak_specs(seed)
+
+
+GRIDS: Dict[str, object] = {
+    "quick": quick_specs,
+    "paper": paper_specs,
+    "soak": soak_specs,
+    "full": full_specs,
+}

@@ -1,0 +1,95 @@
+"""Per-cell campaign metrics.
+
+Counting conventions (matching the paper's tables and the fault-injection
+literature):
+
+* ``detection_rate``   — detected OR masked, over all faulty trials: a
+  fault that provably did not corrupt anything (``corrupted == False``)
+  counts as handled, exactly as in benchmarks/ Table II reproduction;
+* ``raw_detection_rate`` — flag actually raised, over all faulty trials;
+* ``escape_rate``      — corrupted AND undetected (the SDC column);
+* ``fp_rate``          — flags on clean runs;
+* ``overhead``         — protected/unprotected wall-time ratio minus 1;
+* ``ci95``             — Wilson interval on the effective detection rate
+  (campaign cells run at modest sample counts; the interval keeps
+  cross-PR comparisons honest).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+def wilson_interval(k: int, n: int, z: float = 1.96) -> Tuple[float, float]:
+    """95% Wilson score interval for k successes out of n."""
+    if n == 0:
+        return (0.0, 1.0)
+    p = k / n
+    denom = 1.0 + z * z / n
+    center = (p + z * z / (2 * n)) / denom
+    half = (z / denom) * math.sqrt(p * (1 - p) / n + z * z / (4 * n * n))
+    return (max(0.0, center - half), min(1.0, center + half))
+
+
+@dataclasses.dataclass(frozen=True)
+class CellMetrics:
+    samples: int
+    corrupted: int
+    detected: int             # flag raised on faulty trials
+    effective_detected: int   # detected | masked (fault didn't corrupt)
+    escapes: int              # corrupted & undetected — the SDC count
+    clean_samples: int
+    false_positives: int
+    detection_rate: float
+    raw_detection_rate: float
+    escape_rate: float
+    fp_rate: float
+    ci95: Tuple[float, float]
+    analytic_bound: Optional[float] = None
+    overhead: Optional[float] = None
+    protected_s: Optional[float] = None
+    unprotected_s: Optional[float] = None
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ci95"] = list(self.ci95)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CellMetrics":
+        d = dict(d)
+        d["ci95"] = tuple(d["ci95"])
+        return cls(**d)
+
+
+def compute_metrics(*, samples: int, detected: int, corrupted: int,
+                    detected_and_corrupted: int, clean_samples: int,
+                    false_positives: int,
+                    analytic_bound: Optional[float] = None,
+                    protected_s: Optional[float] = None,
+                    unprotected_s: Optional[float] = None) -> CellMetrics:
+    # |detected ∪ masked| = samples - |corrupted ∩ undetected|
+    escapes = corrupted - detected_and_corrupted
+    effective = samples - escapes
+    overhead = None
+    if protected_s is not None and unprotected_s and unprotected_s > 0:
+        overhead = protected_s / unprotected_s - 1.0
+    return CellMetrics(
+        samples=samples,
+        corrupted=corrupted,
+        detected=detected,
+        effective_detected=effective,
+        escapes=escapes,
+        clean_samples=clean_samples,
+        false_positives=false_positives,
+        detection_rate=effective / samples if samples else 0.0,
+        raw_detection_rate=detected / samples if samples else 0.0,
+        escape_rate=escapes / samples if samples else 0.0,
+        fp_rate=(false_positives / clean_samples) if clean_samples else 0.0,
+        ci95=wilson_interval(effective, samples),
+        analytic_bound=analytic_bound,
+        overhead=overhead,
+        protected_s=protected_s,
+        unprotected_s=unprotected_s,
+    )

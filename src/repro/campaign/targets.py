@@ -1,0 +1,443 @@
+"""Registry of injectable targets.
+
+A target owns the three pure functions a campaign cell needs:
+
+* ``build(plan, key)``  — materialize the operand state for one cell
+  (tables, weights, precomputed checksums, model params...);
+* ``trial(state, plan, key)`` — inject one fault, run the protected op,
+  return ``(detected, corrupted)`` booleans.  ``corrupted`` is the target's
+  ground truth for "did the fault matter" (bits changed for operator
+  targets; observable output changed for the full-model soak), which is
+  what separates *masked* faults from *SDC escapes* in the metrics;
+* ``clean(state, plan, key)`` — run fault-free, return the (false-positive)
+  flag.
+
+All three are jit/vmap-safe; the executor vmaps ``trial``/``clean`` over
+key batches and pmaps the batches across host devices.  ``overhead``
+optionally returns (protected, unprotected) thunks the executor times to
+produce the per-cell overhead column.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.campaign.spec import CellPlan, DLRM_GEMM_SHAPES
+from repro.core import abft_embedding as ae
+from repro.core import abft_gemm as ag
+from repro.core import abft_kvcache as kv
+from repro.core.inject import (bit_band, random_bitflip, random_bitflips,
+                               random_value)
+
+
+def apply_fault(key: jax.Array, x: jax.Array, plan: CellPlan) -> jax.Array:
+    """The spec'd fault model applied to one array."""
+    if plan.fault_model == "bitflip":
+        rng = bit_band(x.dtype, plan.bit_band)
+        if plan.flips == 1:
+            return random_bitflip(key, x, bit_range=rng)
+        return random_bitflips(key, x, plan.flips, bit_range=rng)
+    if plan.fault_model == "random_value":
+        return random_value(key, x)
+    raise ValueError(f"unknown fault model {plan.fault_model!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class InjectableTarget:
+    name: str
+    build: Callable[[CellPlan, jax.Array], Any]
+    trial: Callable[[Any, CellPlan, jax.Array],
+                    Tuple[jax.Array, jax.Array]]
+    clean: Callable[[Any, CellPlan, jax.Array], jax.Array]
+    default_shapes: Tuple[Tuple[int, ...], ...]
+    shape_arity: int
+    dtypes: Tuple[str, ...] = ("int8",)
+    fault_models: Tuple[str, ...] = ("bitflip", "random_value")
+    bands: Tuple[str, ...] = ("all", "low", "significant", "sign")
+    analytic_bound: Callable[[CellPlan], Optional[float]] = lambda p: None
+    overhead: Optional[Callable[[Any, CellPlan],
+                                Tuple[Callable, Callable]]] = None
+    #: False for targets whose trial injects into a single element —
+    #: expand() skips flips_per_trial > 1 plans for them
+    multi_flip: bool = True
+
+
+TARGETS: dict = {}
+
+
+def register_target(target: InjectableTarget) -> InjectableTarget:
+    TARGETS[target.name] = target
+    return target
+
+
+def get_target(name: str) -> InjectableTarget:
+    if name not in TARGETS:
+        raise KeyError(
+            f"unknown target {name!r}; registered: {sorted(TARGETS)}")
+    return TARGETS[name]
+
+
+# ---------------------------------------------------------------------------
+# GEMM targets — paper Table II.  Serving model: B's checksum is encoded
+# once from the CLEAN weights; the injected flip is a memory error the
+# amortized checksum must catch (§IV-A1).
+# ---------------------------------------------------------------------------
+
+def _gemm_build(plan: CellPlan, key: jax.Array):
+    m, n, k = plan.shape
+    ka, kb = jax.random.split(key)
+    a = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)
+    b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
+    return {"a": a, "b": b, "checksum": ag.encode_weight_checksum(b)}
+
+
+def _gemm_b_trial(state, plan: CellPlan, key: jax.Array):
+    b_bad = apply_fault(key, state["b"], plan)
+    out = ag.abft_qgemm(state["a"], b_bad, checksum=state["checksum"])
+    return out.err_count > 0, jnp.any(b_bad != state["b"])
+
+
+def _gemm_clean(state, plan: CellPlan, key: jax.Array):
+    del key
+    out = ag.abft_qgemm(state["a"], state["b"],
+                        checksum=state["checksum"])
+    return out.err_count > 0
+
+
+def _gemm_bound(plan: CellPlan):
+    m = plan.shape[0]
+    if plan.fault_model == "bitflip" and plan.flips == 1 \
+            and plan.bit_band == "all":
+        return ag.detect_prob_b_bitflip(m)
+    if plan.fault_model == "random_value":
+        return ag.detect_prob_b_random(m)
+    return None
+
+
+def _gemm_overhead(state, plan: CellPlan):
+    a, b = state["a"], state["b"]
+    b_packed = ag.pack_encoded_b(b, state["checksum"])
+
+    def protected():
+        return ag.abft_qgemm_packed(a, b_packed).c
+
+    def unprotected():
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+
+    return protected, unprotected
+
+
+register_target(InjectableTarget(
+    name="gemm_packed",
+    build=_gemm_build, trial=_gemm_b_trial, clean=_gemm_clean,
+    default_shapes=((20, 256, 512),), shape_arity=3,
+    analytic_bound=_gemm_bound, overhead=_gemm_overhead))
+
+
+def _gemm_unfused_trial(state, plan: CellPlan, key: jax.Array):
+    # BLAS-2 verification path (§IV-A3 step ③), amortized clean encode
+    b_bad = apply_fault(key, state["b"], plan)
+    c = jax.lax.dot_general(state["a"], b_bad, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+    check_col = jax.lax.dot_general(
+        state["a"], state["checksum"], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    _, err = ag.verify_rows(c, check_col)
+    return err > 0, jnp.any(b_bad != state["b"])
+
+
+def _gemm_unfused_overhead(state, plan: CellPlan):
+    a, b = state["a"], state["b"]
+
+    def protected():
+        return ag.abft_qgemm_unfused(a, b).c
+
+    def unprotected():
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+
+    return protected, unprotected
+
+
+register_target(InjectableTarget(
+    name="gemm_unfused",
+    build=_gemm_build, trial=_gemm_unfused_trial, clean=_gemm_clean,
+    default_shapes=((20, 256, 512),), shape_arity=3,
+    analytic_bound=_gemm_bound, overhead=_gemm_unfused_overhead))
+
+
+def _gemm_c_build(plan: CellPlan, key: jax.Array):
+    """Precompute the clean int32 C and its checksum column once per cell;
+    trials corrupt C (the accumulator-resident intermediate, §IV-C2)."""
+    m, n, k = plan.shape
+    st = _gemm_build(plan, key)
+    b_packed = ag.pack_encoded_b(st["b"], st["checksum"])
+    c_full = jax.lax.dot_general(
+        st["a"], b_packed, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return {"c": c_full[:, :n], "check_col": c_full[:, n]}
+
+
+def _gemm_c_trial(state, plan: CellPlan, key: jax.Array):
+    c_bad = apply_fault(key, state["c"], plan)
+    _, err = ag.verify_rows(c_bad, state["check_col"])
+    return err > 0, jnp.any(c_bad != state["c"])
+
+
+def _gemm_c_clean(state, plan: CellPlan, key: jax.Array):
+    del key
+    _, err = ag.verify_rows(state["c"], state["check_col"])
+    return err > 0
+
+
+def _gemm_c_bound(plan: CellPlan):
+    if plan.fault_model == "bitflip":
+        return 1.0          # 2^k mod 127 != 0 for every k: always caught
+    return ag.detect_prob_c_random()
+
+
+register_target(InjectableTarget(
+    name="gemm_c",
+    build=_gemm_c_build, trial=_gemm_c_trial, clean=_gemm_c_clean,
+    default_shapes=((20, 256, 512),), shape_arity=3,
+    dtypes=("int32",), analytic_bound=_gemm_c_bound))
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag target — paper Table III.  The flip strikes a random element
+# among the rows a bag accesses (an untouched-row flip is invisible by
+# construction).  α/β follow the trained-table regime of
+# benchmarks/eb_detection.py: α ~ U(0.01, 0.02), β ~ U(0.3, 0.7), so the
+# low-bit band straddles the round-off bound exactly as in the paper.
+# ---------------------------------------------------------------------------
+
+def _eb_build(plan: CellPlan, key: jax.Array):
+    rows, dim, _, _ = plan.shape
+    kt, ka, kb = jax.random.split(key, 3)
+    table = jax.random.randint(kt, (rows, dim), -128, 128, jnp.int8)
+    alphas = jax.random.uniform(ka, (rows,), jnp.float32, 1e-2, 2e-2)
+    betas = jax.random.uniform(kb, (rows,), jnp.float32, 0.3, 0.7)
+    return {"table": table, "alphas": alphas, "betas": betas,
+            "rowsums": ae.table_rowsums(table)}
+
+
+def _eb_trial(state, plan: CellPlan, key: jax.Array):
+    rows, dim, bags, pool = plan.shape
+    table = state["table"]
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    idx = jax.random.randint(k1, (bags, pool), 0, rows, jnp.int32)
+    b = jax.random.randint(k2, (), 0, bags)
+    p = jax.random.randint(k2, (), 0, pool)
+    row = idx[b, p]
+    col = jax.random.randint(k3, (), 0, dim)
+    elem = table[row, col]
+    bad = apply_fault(k4, elem[None], plan)[0]
+    table_bad = table.at[row, col].set(bad)
+    out = ae.abft_embedding_bag(table_bad, state["alphas"],
+                                state["betas"], idx, state["rowsums"])
+    return out.err_count > 0, bad != elem
+
+
+def _eb_clean(state, plan: CellPlan, key: jax.Array):
+    rows, dim, bags, pool = plan.shape
+    idx = jax.random.randint(key, (bags, pool), 0, rows, jnp.int32)
+    out = ae.abft_embedding_bag(state["table"], state["alphas"],
+                                state["betas"], idx, state["rowsums"])
+    return out.err_count > 0
+
+
+def _eb_overhead(state, plan: CellPlan):
+    rows, dim, bags, pool = plan.shape
+    idx = jax.random.randint(jax.random.key(0), (bags, pool), 0, rows,
+                             jnp.int32)
+    t, a, b = state["table"], state["alphas"], state["betas"]
+    rs = state["rowsums"]
+
+    def protected():
+        return ae.abft_embedding_bag(t, a, b, idx, rs).r
+
+    def unprotected():
+        return ae.embedding_bag(t, a, b, idx)
+
+    return protected, unprotected
+
+
+register_target(InjectableTarget(
+    name="embedding_bag",
+    build=_eb_build, trial=_eb_trial, clean=_eb_clean,
+    default_shapes=((10_000, 128, 10, 100),), shape_arity=4,
+    overhead=_eb_overhead, multi_flip=False))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache target (beyond-paper: core.abft_kvcache).  dtype selects the
+# victim: int8 = the quantized cache payload (exact integer checksum — the
+# detector's home turf), float32 = the α dequant scales, which the rowsum
+# does NOT cover — a deliberate coverage-gap cell whose escape rate
+# quantifies what an attacker of the scales gets away with.
+# ---------------------------------------------------------------------------
+
+def _kv_build(plan: CellPlan, key: jax.Array):
+    b, heads, s, dh = plan.shape
+    x = jax.random.normal(key, (b, heads, s, dh), jnp.float32)
+    return {"kv": kv.quantize_kv_rows(x)}
+
+
+def _kv_trial(state, plan: CellPlan, key: jax.Array):
+    q = state["kv"]
+    if plan.dtype == "float32":
+        alpha_bad = apply_fault(key, q.alpha, plan)
+        bad = kv.QuantKV(q.q, alpha_bad, q.beta, q.rowsum)
+        changed = jnp.any(alpha_bad != q.alpha)
+    else:
+        q_bad = apply_fault(key, q.q, plan)
+        bad = kv.QuantKV(q_bad, q.alpha, q.beta, q.rowsum)
+        changed = jnp.any(q_bad != q.q)
+    _, err = kv.verify_kv(bad)
+    return err > 0, changed
+
+
+def _kv_clean(state, plan: CellPlan, key: jax.Array):
+    del key
+    _, err = kv.verify_kv(state["kv"])
+    return err > 0
+
+
+def _kv_bound(plan: CellPlan):
+    if plan.dtype == "int8" and plan.fault_model == "bitflip":
+        return 1.0          # exact integer rowsum: any payload flip caught
+    if plan.dtype == "float32":
+        return 0.0          # scales are outside the checksum: by design
+    return None
+
+
+def _kv_overhead(state, plan: CellPlan):
+    q = state["kv"]
+
+    def protected():
+        _, err = kv.verify_kv(q)
+        return kv.dequantize_kv(q), err
+
+    def unprotected():
+        return kv.dequantize_kv(q)
+
+    return protected, unprotected
+
+
+register_target(InjectableTarget(
+    name="kv_cache",
+    build=_kv_build, trial=_kv_trial, clean=_kv_clean,
+    default_shapes=((2, 2, 128, 64),), shape_arity=4,
+    dtypes=("int8", "float32"),
+    bands=("all", "low", "significant", "sign", "exponent", "mantissa",
+           "high_mantissa"),
+    analytic_bound=_kv_bound, overhead=_kv_overhead))
+
+
+# ---------------------------------------------------------------------------
+# Full-model decode-step soak (launch.steps + a reduced registry arch).
+# One trial = flip bits in the largest int8 weight leaf, run one decode
+# step, read the step's ABFT counters.  ``corrupted`` is the OBSERVABLE
+# output change (next token differs from the clean baseline), so the cell's
+# categories line up with the fault-injection literature: detected /
+# masked / SDC escape.
+# ---------------------------------------------------------------------------
+
+DECODE_ARCH = "llama3.2-1b"
+
+
+def _decode_build(plan: CellPlan, key: jax.Array):
+    import numpy as np
+
+    from repro.configs import reduce_cfg
+    from repro.configs.registry import get_arch
+    from repro.launch.steps import make_decode_step, make_prefill_step
+    from repro.layers.common import Ctx
+    from repro.models.base import build_model
+    from repro.sharding import values_of
+
+    batch, prompt_len = plan.shape
+    cfg = reduce_cfg(get_arch(DECODE_ARCH))
+    cache_len = prompt_len + cfg.meta_tokens + 8
+    model = build_model(cfg, max_pos=cache_len + 8)
+    ctx = Ctx(quant=True, abft=True, compute_dtype=jnp.bfloat16)
+    params = values_of(
+        jax.jit(lambda k: model.init(k, quant=True))(key))
+
+    rng = np.random.default_rng(plan.seed)
+    batch_in = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)}
+    prefill = jax.jit(make_prefill_step(model, ctx, cache_len=cache_len))
+    tok, cache, _ = prefill(params, batch_in)
+    pos = jnp.full((batch,), prompt_len + cfg.meta_tokens, jnp.int32)
+
+    decode = make_decode_step(model, ctx)
+    clean_tok, _, _ = decode(params, cache, tok, pos)
+
+    # victim: the largest int8 leaf (a packed, ABFT-protected weight)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    int8 = [(i, l) for i, l in enumerate(leaves) if l.dtype == jnp.int8]
+    pool = int8 if int8 else list(enumerate(leaves))
+    victim_idx = max(pool, key=lambda il: il[1].size)[0]
+
+    state = {"leaves": leaves, "treedef": treedef,
+             "victim_idx": victim_idx, "cache": cache, "tok": tok,
+             "pos": pos, "decode": decode, "clean_tok": clean_tok}
+    if plan.measure_overhead:
+        ctx_off = Ctx(quant=True, abft=False, compute_dtype=jnp.bfloat16)
+        state["decode_off"] = make_decode_step(model, ctx_off)
+        state["params"] = params
+    return state
+
+
+def _decode_trial(state, plan: CellPlan, key: jax.Array):
+    leaves = list(state["leaves"])
+    victim = leaves[state["victim_idx"]]
+    leaves[state["victim_idx"]] = apply_fault(key, victim, plan)
+    params = jax.tree_util.tree_unflatten(state["treedef"], leaves)
+    tok, _, metrics = state["decode"](params, state["cache"],
+                                      state["tok"], state["pos"])
+    errs = metrics.get("abft/gemm_errors", 0) \
+        + metrics.get("abft/eb_errors", 0)
+    return jnp.asarray(errs) > 0, jnp.any(tok != state["clean_tok"])
+
+
+def _decode_clean(state, plan: CellPlan, key: jax.Array):
+    del key
+    params = jax.tree_util.tree_unflatten(state["treedef"],
+                                          state["leaves"])
+    _, _, metrics = state["decode"](params, state["cache"], state["tok"],
+                                    state["pos"])
+    errs = metrics.get("abft/gemm_errors", 0) \
+        + metrics.get("abft/eb_errors", 0)
+    return jnp.asarray(errs) > 0
+
+
+def _decode_overhead(state, plan: CellPlan):
+    if "decode_off" not in state:
+        return None
+    params, cache = state["params"], state["cache"]
+    tok, pos = state["tok"], state["pos"]
+
+    def protected():
+        return state["decode"](params, cache, tok, pos)[0]
+
+    def unprotected():
+        return state["decode_off"](params, cache, tok, pos)[0]
+
+    return protected, unprotected
+
+
+register_target(InjectableTarget(
+    name="decode_step",
+    build=_decode_build, trial=_decode_trial, clean=_decode_clean,
+    default_shapes=((2, 16),), shape_arity=2,
+    overhead=_decode_overhead))
+
+
+__all__ = ["InjectableTarget", "TARGETS", "register_target", "get_target",
+           "apply_fault", "DLRM_GEMM_SHAPES", "DECODE_ARCH"]

@@ -1,0 +1,30 @@
+"""Shared wall-clock timing helper (campaign overhead cells and the
+benchmarks/ overhead tables use the same methodology)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def median_time(fn: Callable, *args, warmup: int = 2, iters: int = 10,
+                min_time_s: float = 0.2) -> float:
+    """Median wall seconds per call (blocks on outputs).
+
+    ``fn`` should already be jitted (or cheap to trace); timing covers
+    dispatch + execution, which is what an inference server pays.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times, total = [], 0.0
+    while total < min_time_s or len(times) < iters:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        total += dt
+        if len(times) >= 100:
+            break
+    return float(np.median(times))

@@ -1,5 +1,6 @@
 from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.configs.reduce import reduce_cfg, small_arch
 from repro.configs.registry import get_arch, list_archs, ARCHS
 
 __all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "get_arch", "list_archs",
-           "ARCHS"]
+           "ARCHS", "reduce_cfg", "small_arch"]

@@ -1,0 +1,52 @@
+"""Reduced-size config builders (smoke tests, --smoke serving, campaign
+decode soaks).
+
+Lives in the package (not tests/) so runtime entry points — serve --smoke,
+``repro.campaign``'s full-model soak target — can build a tiny model of any
+registered architecture without reaching into the test tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import ARCHS
+
+
+def reduce_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Shrink an assigned architecture to smoke-test size, preserving its
+    family and structural quirks (GQA ratio, qk_norm, MoE top-k, SWA, meta
+    tokens, frontend stubs...)."""
+    kw = dict(
+        n_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab=97,            # deliberately unaligned: exercises vocab padding
+        head_dim=16,
+        attn_chunk=8,
+        train_accum=1,
+    )
+    if cfg.n_heads:
+        kw["n_heads"] = 4
+        kw["n_kv_heads"] = 2 if cfg.n_kv_heads < cfg.n_heads else 4
+    if cfg.family == "moe":
+        kw["n_experts"] = 4
+        kw["top_k"] = min(cfg.top_k, 2)
+        kw["moe_group"] = 16
+    if cfg.family == "hybrid":
+        kw["ssm_state"] = 4
+        kw["d_inner"] = 128
+        kw["sliding_window"] = 8
+        kw["global_layer_every"] = 2
+        kw["meta_tokens"] = 4
+    if cfg.family == "encdec":
+        kw["enc_layers"] = 2
+        kw["enc_seq"] = 12
+    if cfg.family == "vlm":
+        kw["patch_dim"] = 24
+        kw["n_patches"] = 6
+    return dataclasses.replace(cfg, **kw)
+
+
+def small_arch(name: str) -> ArchConfig:
+    return reduce_cfg(ARCHS[name])

@@ -129,18 +129,40 @@ def abft_qgemm_unfused(a_q: jax.Array, b_q: jax.Array,
     return AbftGemmOut(c, err_rows, err_count)
 
 
-def correct_single_error(c: jax.Array, err_rows: jax.Array,
-                         col_check: jax.Array) -> jax.Array:
-    """Single-error correction (paper §IV intro; provided for completeness).
+def encode_activation_checksum(a_q: jax.Array) -> jax.Array:
+    """Column-side encoding: exact int32 column sums of A ([m, k] -> [k]).
 
-    Requires both row and column encodings; we implement the row-side repair
-    used when an upstream column checksum pinpoints column j.  The framework's
-    default policy is detect->recompute (§I), so this is optional equipment.
+    ``encode_activation_checksum(a) @ B`` equals the exact column sums of
+    ``C = A @ B`` — the second encoding axis single-error correction needs
+    (the row side stays the mod-127 checksum of Alg. 1).
     """
-    # Detection-only framework: recompute is the sanctioned path.  The repair
-    # here fixes row i / column j when exactly one of each is flagged.
-    raise NotImplementedError(
-        "detection-only by design; use policy='recompute' (see core.policy)")
+    return jnp.sum(a_q.astype(jnp.int32), axis=0)
+
+
+def correct_single_error(c: jax.Array, err_rows: jax.Array,
+                         col_check: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Single-error correction (paper §IV intro): row/column checksum
+    repair of one flagged cell.
+
+    The mod-127 row check localizes the corrupted row i (``err_rows``);
+    ``col_check`` — the EXACT expected int32 column sums of C, i.e.
+    ``encode_activation_checksum(a) @ b`` (amortizable per batch) —
+    localizes the column j AND yields the additive error magnitude, so
+    ``C[i, j]`` is repaired in place.  Applies only when exactly one row
+    and one column are flagged (the single-error model); anything else is
+    left untouched for the recompute path.
+
+    Returns ``(corrected_c, applied)`` where ``applied`` is a bool scalar.
+    """
+    delta = col_check.astype(jnp.int32) - jnp.sum(c, axis=0)
+    j = jnp.argmax(jnp.abs(delta))
+    i = jnp.argmax(err_rows)
+    one_row = jnp.sum(err_rows.astype(jnp.int32)) == 1
+    one_col = jnp.sum((delta != 0).astype(jnp.int32)) == 1
+    applied = one_row & one_col
+    fix = jnp.where(applied, delta[j], 0)
+    return c.at[i, j].add(fix), applied
 
 
 # ---------------------------------------------------------------------------

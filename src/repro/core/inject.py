@@ -1,12 +1,18 @@
-"""Fault injection — the paper's two fault models (§IV-C, §VI-B).
+"""Fault injection — the paper's two fault models (§IV-C, §VI-B) plus the
+significant-bit-band model of Ma et al. 2023 (robustness of recommendation
+systems against hardware errors).
 
 Model 1: *random single-bit flip* — flip one random bit of one random element.
 Model 2: *random data fluctuation* — replace one element with a uniform random
 value of its dtype's range.
+Model 3: *bit-band flip* — model 1 restricted to a named band of bit
+positions (exponent / high-mantissa / significant / low / sign), expressing
+"where in the word does the flip land" sweeps per dtype.
 
 Injectors are pure functions (value in, corrupted value out) so they compose
-with jit/vmap; benchmark harnesses vmap over keys to run the paper's
-2800-sample campaigns in one call.
+with jit/vmap; campaign harnesses (:mod:`repro.campaign`) vmap over keys to
+run thousand-sample sweeps in one call, and :func:`random_bitflips` injects
+several independent flips per trial for multi-error scenarios.
 """
 from __future__ import annotations
 
@@ -18,6 +24,52 @@ import jax.numpy as jnp
 
 def _uint_dtype(dtype) -> jnp.dtype:
     return {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}[jnp.dtype(dtype).itemsize]
+
+
+# ---------------------------------------------------------------------------
+# Named bit bands (model 3).  [lo, hi) positions, LSB = 0, per dtype.
+#
+# For floats the interesting split is exponent vs mantissa (an exponent flip
+# rescales by 2^±2^k — the "significant" corruption Ma et al. show dominates
+# accuracy loss); for quantized ints it is high vs low nibble (the paper's
+# Table III splits EmbeddingBag results exactly this way).
+# ---------------------------------------------------------------------------
+BIT_BANDS: dict[str, dict[str, tuple[int, int]]] = {
+    "int8": {"all": (0, 8), "low": (0, 4), "significant": (4, 8),
+             "sign": (7, 8)},
+    "uint8": {"all": (0, 8), "low": (0, 4), "significant": (4, 8)},
+    "int32": {"all": (0, 32), "low": (0, 16), "significant": (16, 32),
+              "sign": (31, 32)},
+    "float32": {"all": (0, 32), "low": (0, 12), "mantissa": (0, 23),
+                "high_mantissa": (12, 23), "exponent": (23, 31),
+                "significant": (20, 31), "sign": (31, 32)},
+    "bfloat16": {"all": (0, 16), "mantissa": (0, 7),
+                 "exponent": (7, 15), "significant": (4, 15),
+                 "sign": (15, 16)},
+    "float16": {"all": (0, 16), "mantissa": (0, 10),
+                "exponent": (10, 15), "significant": (7, 15),
+                "sign": (15, 16)},
+}
+
+
+def bit_band(dtype, band: str) -> tuple[int, int]:
+    """Resolve a named band to [lo, hi) bit positions for ``dtype``.
+
+    Unknown dtypes fall back to ("all" = full word, "significant" /
+    "low" = upper / lower half) so campaigns stay runnable on any dtype.
+    """
+    name = jnp.dtype(dtype).name
+    nbits = jnp.dtype(dtype).itemsize * 8
+    bands = BIT_BANDS.get(name)
+    if bands is not None and band in bands:
+        return bands[band]
+    if band == "all":
+        return (0, nbits)
+    if band == "low":
+        return (0, nbits // 2)
+    if band == "significant":
+        return (nbits // 2, nbits)
+    raise KeyError(f"no bit band {band!r} for dtype {name}")
 
 
 def flip_bit(x: jax.Array, flat_index: jax.Array, bit: jax.Array) -> jax.Array:
@@ -38,6 +90,59 @@ def random_bitflip(key: jax.Array, x: jax.Array,
     idx = jax.random.randint(k1, (), 0, x.size)
     bit = jax.random.randint(k2, (), lo, hi)
     return flip_bit(x, idx, bit)
+
+
+def random_bitflip_band(key: jax.Array, x: jax.Array,
+                        band: str = "all") -> jax.Array:
+    """Fault model 3: model 1 restricted to the named ``band`` of ``x``'s
+    dtype (see :data:`BIT_BANDS`) — e.g. ``"significant"`` flips only
+    exponent/high bits, the errors Ma et al. show actually move model
+    output."""
+    return random_bitflip(key, x, bit_range=bit_band(x.dtype, band))
+
+
+def _distinct_indices(key: jax.Array, n: int, k: int) -> jax.Array:
+    """k distinct uniform indices in [0, n) via Floyd's algorithm — O(k^2)
+    work, vs the O(n log n) full permutation ``jax.random.choice(...,
+    replace=False)`` performs (n can be millions of elements for GEMM
+    weight campaigns, k is a handful of flips)."""
+    sel0 = jnp.full((k,), -1, jnp.int32)
+
+    def body(t, sel):
+        i = n - k + t
+        j = jax.random.randint(jax.random.fold_in(key, t), (), 0, i + 1)
+        dup = jnp.any(sel == j)
+        return sel.at[t].set(jnp.where(dup, i, j).astype(jnp.int32))
+
+    return jax.lax.fori_loop(0, k, body, sel0)
+
+
+def random_bitflips(key: jax.Array, x: jax.Array, n_flips: int,
+                    bit_range: tuple[int, int] | None = None) -> jax.Array:
+    """Batched multi-element injection: ``n_flips`` independent single-bit
+    flips at element positions drawn without replacement (distinct victims,
+    so k flips == k corrupted elements and campaigns can count escapes
+    exactly).  ``n_flips`` is static; O(n_flips^2) index draws + one
+    fori_loop of scatters, jit/vmap-safe."""
+    if n_flips < 1:
+        raise ValueError("n_flips must be >= 1")
+    if n_flips > x.size:
+        raise ValueError(f"n_flips={n_flips} exceeds {x.size} elements")
+    nbits = jnp.dtype(x.dtype).itemsize * 8
+    lo, hi = bit_range if bit_range is not None else (0, nbits)
+    k_idx, k_bit = jax.random.split(key)
+    idxs = _distinct_indices(k_idx, x.size, n_flips)
+    bits = jax.random.randint(k_bit, (n_flips,), lo, hi)
+
+    udtype = _uint_dtype(x.dtype)
+    flat = jax.lax.bitcast_convert_type(x.reshape(-1), udtype)
+
+    def body(i, f):
+        mask = jnp.asarray(1, udtype) << bits[i].astype(udtype)
+        return f.at[idxs[i]].set(f[idxs[i]] ^ mask)
+
+    flat = jax.lax.fori_loop(0, n_flips, body, flat)
+    return jax.lax.bitcast_convert_type(flat, x.dtype).reshape(x.shape)
 
 
 def random_value(key: jax.Array, x: jax.Array) -> jax.Array:

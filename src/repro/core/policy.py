@@ -9,8 +9,14 @@ when ``report.total_errors() > 0``:
 - ``recompute`` — re-run the op under ``lax.cond`` (paper §I: an error that
                   strikes twice is vanishingly rare, so one deterministic
                   retry clears transient faults; retries are counted)
-- ``abort``     — raise via ``checkify``-style debug check at the host level
-                  (used by serving: fail the request, not the server)
+- ``correct``   — repair the single flagged cell in place via the row +
+                  column checksums (abft_gemm.correct_single_error); multi
+                  error results fall through with their error count intact
+- ``abort``     — raise via a host callback (used by serving: fail the
+                  request, not the server)
+
+``POLICIES`` maps the names to wrappers; ``apply_policy(name, op)`` is the
+string-driven entry point configs/serving use.
 """
 from __future__ import annotations
 
@@ -98,3 +104,83 @@ def with_recompute(op: Callable, max_retries: int = 1):
         return out, err, retries
 
     return wrapped
+
+
+def with_log(op: Callable):
+    """Policy ``log``: pass-through with zero retries (uniform arity with
+    the other policies: ``op() -> (out, err)`` becomes
+    ``(out, err, retries)``)."""
+    def wrapped(*args, **kwargs):
+        out, err = op(*args, **kwargs)
+        return out, err, jnp.zeros((), jnp.int32)
+
+    return wrapped
+
+
+def with_correct(op: Callable):
+    """Policy ``correct``: single-error repair via row+column checksums.
+
+    ``op() -> (c, err_rows, err_count, col_check)`` where ``col_check`` is
+    the exact expected int32 column-sum vector
+    (:func:`repro.core.abft_gemm.encode_activation_checksum` of A, times
+    B).  A successfully repaired result reports zero residual errors; a
+    multi-error result keeps its count so an outer recompute/abort layer
+    still sees it.  Returns ``(c, err_count, corrections)``.
+    """
+    from repro.core.abft_gemm import correct_single_error
+
+    def wrapped(*args, **kwargs):
+        c, err_rows, err_count, col_check = op(*args, **kwargs)
+        corrected, applied = correct_single_error(c, err_rows, col_check)
+        residual = jnp.where(applied, 0, err_count).astype(jnp.int32)
+        return corrected, residual, applied.astype(jnp.int32)
+
+    return wrapped
+
+
+class FaultAbort(RuntimeError):
+    """Raised host-side by policy ``abort`` when an op reports errors."""
+
+
+def is_fault_abort(exc: BaseException) -> bool:
+    """True for a :class:`FaultAbort` OR the runtime error jit wraps it in.
+
+    Inside jit, jax surfaces callback exceptions as ``XlaRuntimeError``
+    (the FaultAbort text is preserved in the message); request boundaries
+    should gate on this predicate rather than ``except FaultAbort``.
+    """
+    return isinstance(exc, FaultAbort) or "FaultAbort" in repr(exc)
+
+
+def with_abort(op: Callable):
+    """Policy ``abort``: host-level raise when ``err > 0`` (serving: fail
+    the REQUEST, never the server).  Eager callers catch
+    :class:`FaultAbort`; jitted callers get it re-wrapped by the runtime,
+    so request boundaries use :func:`is_fault_abort` on the caught
+    exception."""
+    def _check(err):
+        if int(err) > 0:
+            raise FaultAbort(f"ABFT detected {int(err)} corrupted op(s)")
+
+    def wrapped(*args, **kwargs):
+        out, err = op(*args, **kwargs)
+        jax.debug.callback(_check, err)
+        return out, err, jnp.zeros((), jnp.int32)
+
+    return wrapped
+
+
+#: name -> wrapper; ``correct`` expects the 4-tuple GEMM contract (see
+#: :func:`with_correct`), the rest wrap any ``op() -> (out, err)``.
+POLICIES = {
+    "log": with_log,
+    "recompute": with_recompute,
+    "correct": with_correct,
+    "abort": with_abort,
+}
+
+
+def apply_policy(name: str, op: Callable, **kwargs):
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(POLICIES)}")
+    return POLICIES[name](op, **kwargs)

@@ -32,6 +32,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.abft_gemm import LANE, MOD
 
+# jax < 0.5 names this TPUCompilerParams; newer releases dropped the prefix.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(a_ref, bp_ref, c_ref, err_ref, acc_ref, rowsum_ref, *,
             n_tiles: int, k_tiles: int, mod: int):
@@ -131,7 +135,7 @@ def abft_qgemm_pallas(a_q: jax.Array, b_packed: jax.Array, *,
             pltpu.VMEM((bm, bn), jnp.int32),
             pltpu.VMEM((bm,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(a_pad, bp_pad)

@@ -106,6 +106,7 @@ class Computation:
     name: str
     ops: List[Op]
     shapes: Dict[str, str]   # op name -> result type string
+    byname: Dict[str, Op] = dataclasses.field(default_factory=dict)
 
 
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*[({]")
@@ -165,10 +166,13 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
             continue
         name, type_str, opcode, rest = m.groups()
         operands, attrs = _split_operands(rest)
-        op = Op(name, type_str, opcode, [o.lstrip("%") for o in operands],
-                attrs)
+        # Depending on the XLA version, operands print bare ("%name") or
+        # type-prefixed ("f32[64,64]{1,0} %name"); keep the trailing token.
+        names = [o.split()[-1].lstrip("%") if o else o for o in operands]
+        op = Op(name, type_str, opcode, names, attrs)
         cur.ops.append(op)
         cur.shapes[name] = type_str
+        cur.byname[name] = op
     if cur is not None:
         comps[cur.name] = cur
     if entry is not None:
@@ -299,7 +303,12 @@ class HloCostModel:
                     if di < len(dims):
                         k *= dims[di]
             c.flops = 2.0 * out_elems * k
-            c.bytes = in_bytes + out_bytes
+            # operand bytes at the PRE-staging dtype: the CPU backend
+            # converts int8/bf16 dot operands to s32/f32 first, the TPU
+            # target (MXU) consumes them natively — follow convert chains
+            # back to the source so int8 dots are charged int8 traffic.
+            c.bytes = sum(self._source_bytes(comp, o)
+                          for o in op.operands) + out_bytes
             return c
 
         if base == "convolution":
@@ -365,6 +374,8 @@ class HloCostModel:
         if base == "call":
             m = _TO_APPLY_RE.search(op.attrs)
             if m and m.group(1) in self.comps:
+                if self._is_pure_convert(self.comps[m.group(1)]):
+                    return c      # dtype-staging call: free (see `convert`)
                 c.add(self.comp_cost(m.group(1)))
             c.bytes = in_bytes + out_bytes
             return c
@@ -422,6 +433,24 @@ class HloCostModel:
         c.bytes = in_bytes + out_bytes
         c.flags.append(f"unknown-op:{base}")
         return c
+
+    def _source_bytes(self, comp: Computation, name: str,
+                      depth: int = 0) -> int:
+        """Bytes of ``name`` at its pre-staging dtype (follows convert /
+        pure-convert call/fusion producers, bounded depth)."""
+        op = comp.byname.get(name)
+        if op is not None and depth < 8 and op.operands:
+            if op.opcode in ("convert", "copy", "bitcast", "reshape"):
+                return self._source_bytes(comp, op.operands[0], depth + 1)
+            if op.opcode in ("call", "fusion"):
+                rex = _TO_APPLY_RE if op.opcode == "call" else _CALLS_RE
+                m = rex.search(op.attrs)
+                if (m and m.group(1) in self.comps
+                        and self._is_pure_convert(self.comps[m.group(1)])):
+                    return self._source_bytes(comp, op.operands[0],
+                                              depth + 1)
+        t = comp.shapes.get(name)
+        return _shape_elems_bytes(t)[1] if t else 0
 
     def _is_pure_convert(self, comp: Computation) -> bool:
         real = [op for op in comp.ops

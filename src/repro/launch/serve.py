@@ -50,10 +50,7 @@ def main():
 
     cfg = get_arch(args.arch)
     if args.smoke:
-        import sys
-        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
-                                        "..", "..", "..", "tests"))
-        from helpers import reduce_cfg
+        from repro.configs import reduce_cfg
         cfg = reduce_cfg(cfg)
 
     cache_len = args.prompt_len + args.decode_tokens + cfg.meta_tokens + 8

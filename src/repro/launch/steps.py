@@ -94,8 +94,6 @@ def make_train_step_deferred(model: Model, ctx: Ctx, mesh, *,
     (init via :func:`init_comm_state`); pass ``comm=None`` trees when
     ``compress=False``.
     """
-    from functools import partial
-
     from jax.sharding import PartitionSpec as P
 
     from repro.runtime.compression import (checked_psum, compress_grads,
@@ -168,12 +166,12 @@ def make_train_step_deferred(model: Model, ctx: Ctx, mesh, *,
         metrics.update({"grad_norm": gnorm, "lr": lr, "loss_final": loss})
         return new_state, comm, _reduce_metrics(metrics)
 
-    return partial(
-        jax.shard_map, mesh=mesh,
+    from repro.sharding import shard_map
+    return shard_map(
+        step, mesh=mesh,
         in_specs=(P(), P(axis), P(axis)),
         out_specs=(P(), P(axis), P()),
-        check_vma=False,
-        axis_names=set(data_axes))(step)
+        manual_axes=set(data_axes))
 
 
 def make_train_step_zero1(model: Model, ctx: Ctx, mesh, *,
@@ -195,8 +193,6 @@ def make_train_step_zero1(model: Model, ctx: Ctx, mesh, *,
              "opt": {"master","m","v": f32 [D/N] flat shards}, "step"}.
     Returns the shard_map'd (state, batch) -> (state, metrics).
     """
-    from functools import partial
-
     import numpy as np
     from jax.flatten_util import ravel_pytree
     from jax.sharding import PartitionSpec as P
@@ -288,12 +284,12 @@ def make_train_step_zero1(model: Model, ctx: Ctx, mesh, *,
 
     batch_spec = P(axis)
     state_spec = {"params": P(), "opt": P(axis), "step": P()}
-    return partial(
-        jax.shard_map, mesh=mesh,
+    from repro.sharding import shard_map
+    return shard_map(
+        step, mesh=mesh,
         in_specs=(state_spec, batch_spec),
         out_specs=(state_spec, P()),
-        check_vma=False,
-        axis_names=set(axes))(step)
+        manual_axes=set(axes))
 
 
 def zero1_state_sds(model: Model, mesh, axes=("data", "model")):

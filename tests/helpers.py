@@ -1,46 +1,54 @@
-"""Shared test utilities: reduced-config builders."""
-import dataclasses
+"""Shared test utilities: reduced-config re-exports + optional hypothesis.
 
-import jax.numpy as jnp
+``reduce_cfg`` / ``small_arch`` live in :mod:`repro.configs.reduce` (runtime
+entry points use them too); they are re-exported here for the test modules.
 
-from repro.configs import ARCHS
-from repro.configs.base import ArchConfig
+``given`` / ``settings`` / ``st`` come from hypothesis when it is installed.
+When it is not (the bare CI container), a tiny deterministic shim runs each
+property test over ``max_examples`` seeded random draws — weaker than real
+hypothesis (no shrinking, no database) but the properties still execute
+instead of the whole module failing at collection.
+"""
+from repro.configs.reduce import reduce_cfg, small_arch  # noqa: F401
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    import random
 
-def reduce_cfg(cfg: ArchConfig) -> ArchConfig:
-    """Shrink an assigned architecture to smoke-test size, preserving its
-    family and structural quirks (GQA ratio, qk_norm, MoE top-k, SWA, meta
-    tokens, frontend stubs...)."""
-    kw = dict(
-        n_layers=2,
-        d_model=64,
-        d_ff=128,
-        vocab=97,            # deliberately unaligned: exercises vocab padding
-        head_dim=16,
-        attn_chunk=8,
-        train_accum=1,
-    )
-    if cfg.n_heads:
-        kw["n_heads"] = 4
-        kw["n_kv_heads"] = 2 if cfg.n_kv_heads < cfg.n_heads else 4
-    if cfg.family == "moe":
-        kw["n_experts"] = 4
-        kw["top_k"] = min(cfg.top_k, 2)
-        kw["moe_group"] = 16
-    if cfg.family == "hybrid":
-        kw["ssm_state"] = 4
-        kw["d_inner"] = 128
-        kw["sliding_window"] = 8
-        kw["global_layer_every"] = 2
-        kw["meta_tokens"] = 4
-    if cfg.family == "encdec":
-        kw["enc_layers"] = 2
-        kw["enc_seq"] = 12
-    if cfg.family == "vlm":
-        kw["patch_dim"] = 24
-        kw["n_patches"] = 6
-    return dataclasses.replace(cfg, **kw)
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
 
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
-def small_arch(name: str) -> ArchConfig:
-    return reduce_cfg(ARCHS[name])
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: rng.choice(elems))
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_shim_max_examples", 20)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    fn(*[s.draw(rng) for s in strategies])
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._shim_max_examples = getattr(
+                fn, "_shim_max_examples", 20)
+            return wrapper
+        return deco

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers import given, settings, st
 
 from repro.core import abft_embedding as ae
 from repro.core.inject import random_bitflip
@@ -25,7 +24,8 @@ def test_eb_matches_dense_reference(rng):
     for bag in range(4):
         for i in np.asarray(idx[bag]):
             want[bag] += np.asarray(a)[i] * np.asarray(t)[i] + np.asarray(b)[i]
-    np.testing.assert_allclose(np.asarray(r), want, rtol=1e-5)
+    # atol floor: jnp and the python loop accumulate in different orders
+    np.testing.assert_allclose(np.asarray(r), want, rtol=1e-5, atol=1e-5)
 
 
 def test_eb_padding_ignored(rng):

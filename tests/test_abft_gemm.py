@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from helpers import given, settings, st
 
 from repro.core import abft_gemm as ag
 from repro.core.inject import flip_bit, random_bitflip, random_value

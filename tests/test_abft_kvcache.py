@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.core.abft_kvcache import (QuantKV, attend_quantized,
                                      dequantize_kv, quantize_kv_rows,

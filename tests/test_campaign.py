@@ -1,0 +1,213 @@
+"""Resilience-campaign subsystem: spec→plan expansion, metrics math,
+artifact round-trip, and a small end-to-end cell per target family."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.campaign import (CampaignSpec, CellMetrics, TARGETS, cell_seed,
+                            compute_metrics, expand, find_cells,
+                            load_artifact, markdown_table, run_campaign,
+                            run_cell, wilson_interval)
+from repro.campaign.spec import DLRM_GEMM_SHAPES
+
+
+# ----------------------------- spec -> plans --------------------------------
+
+def test_expand_cartesian_product_and_seeds():
+    spec = CampaignSpec(
+        name="t", targets=("gemm_packed",),
+        fault_models=("bitflip", "random_value"),
+        bit_bands=("all", "significant"),
+        shapes=((4, 64, 128), (8, 64, 128)),
+        samples=10, seed=3)
+    plans, skipped = expand(spec)
+    # random_value has no bands -> (bitflip × 2 bands + random_value × all)
+    # × 2 shapes
+    assert len(plans) == 6
+    assert len({p.cell_id for p in plans}) == 6
+    assert len(skipped) == 2        # random_value × significant × 2 shapes
+    for p in plans:
+        assert p.seed == cell_seed(3, p.cell_id)
+    # stable across re-expansion
+    plans2, _ = expand(spec)
+    assert [p.cell_id for p in plans] == [p2.cell_id for p2 in plans2]
+    assert [p.seed for p in plans] == [p2.seed for p2 in plans2]
+
+
+def test_expand_skips_wrong_arity_and_dtype():
+    spec = CampaignSpec(
+        name="t", targets=("gemm_packed", "embedding_bag"),
+        shapes=((4, 64, 128),),          # gemm arity only
+        dtypes=("int8", "int32"),
+        samples=5)
+    plans, skipped = expand(spec)
+    assert [p.target for p in plans] == ["gemm_packed"]
+    reasons = " | ".join(s["reason"] for s in skipped)
+    assert "arity" in reasons and "dtype" in reasons
+
+
+def test_expand_default_shapes_and_clean_samples():
+    spec = CampaignSpec(name="t", targets=("kv_cache",), samples=7)
+    plans, _ = expand(spec)
+    assert plans[0].shape == TARGETS["kv_cache"].default_shapes[0]
+    assert plans[0].clean_samples == 7        # None -> samples
+    spec2 = CampaignSpec(name="t", targets=("kv_cache",), samples=7,
+                         clean_samples=0)
+    assert expand(spec2)[0][0].clean_samples == 0
+
+
+def test_expand_skips_band_undefined_for_dtype():
+    # kv_cache supports the exponent band (float32 scales) but int8 has
+    # no exponent bits — the int8 × exponent cell must skip, not crash
+    spec = CampaignSpec(name="t", targets=("kv_cache",),
+                        bit_bands=("all", "exponent"),
+                        dtypes=("int8", "float32"), samples=5)
+    plans, skipped = expand(spec)
+    ids = {p.cell_id for p in plans}
+    assert any("/exponent/" in i and "float32" in i for i in ids)
+    assert not any("/exponent/" in i and "int8" in i for i in ids)
+    assert any("undefined for dtype int8" in s["reason"] for s in skipped)
+
+
+def test_expand_skips_multi_flip_for_single_element_targets():
+    spec = CampaignSpec(name="t", targets=("embedding_bag",),
+                        samples=5, flips_per_trial=2)
+    plans, skipped = expand(spec)
+    assert plans == []
+    assert any("single element" in s["reason"] for s in skipped)
+
+
+def test_full_grid_expands_clean():
+    from repro.campaign.grids import GRIDS
+    for name, build in GRIDS.items():
+        for spec in build(seed=0):
+            expand(spec)       # no KeyError/ValueError on any shipped grid
+
+
+def test_expand_unknown_target_raises():
+    with pytest.raises(KeyError, match="unknown target"):
+        expand(CampaignSpec(name="t", targets=("nope",), samples=1))
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        CampaignSpec(name="t", targets=("gemm_packed",), samples=0)
+    with pytest.raises(ValueError):
+        CampaignSpec(name="t", targets=("gemm_packed",), samples=1,
+                     flips_per_trial=0)
+
+
+def test_dlrm_shape_set_is_paper_sized():
+    assert len(DLRM_GEMM_SHAPES) == 28
+    assert (1, 800, 3200) in DLRM_GEMM_SHAPES
+
+
+# ------------------------------- metrics ------------------------------------
+
+def test_metrics_math():
+    m = compute_metrics(samples=100, detected=90, corrupted=95,
+                        detected_and_corrupted=88, clean_samples=50,
+                        false_positives=2)
+    # escapes: corrupted but undetected
+    assert m.escapes == 95 - 88 == 7
+    # effective: everything except escapes (masked counts as handled)
+    assert m.effective_detected == 93
+    assert m.detection_rate == pytest.approx(0.93)
+    assert m.raw_detection_rate == pytest.approx(0.90)
+    assert m.escape_rate == pytest.approx(0.07)
+    assert m.fp_rate == pytest.approx(0.04)
+    lo, hi = m.ci95
+    assert lo < 0.93 < hi
+
+
+def test_metrics_overhead_ratio():
+    m = compute_metrics(samples=1, detected=1, corrupted=1,
+                        detected_and_corrupted=1, clean_samples=0,
+                        false_positives=0, protected_s=1.2,
+                        unprotected_s=1.0)
+    assert m.overhead == pytest.approx(0.2)
+    assert m.fp_rate == 0.0
+
+
+def test_wilson_interval_basics():
+    lo, hi = wilson_interval(0, 0)
+    assert (lo, hi) == (0.0, 1.0)
+    lo, hi = wilson_interval(100, 100)
+    assert hi == pytest.approx(1.0) and lo > 0.95
+    lo50, hi50 = wilson_interval(50, 100)
+    assert lo50 < 0.5 < hi50
+
+
+# ------------------------- end-to-end + artifacts ---------------------------
+
+def _tiny_specs():
+    return [
+        CampaignSpec(name="t-gemm", targets=("gemm_packed",),
+                     shapes=((4, 32, 64),), samples=64, seed=5),
+        CampaignSpec(name="t-kv", targets=("kv_cache",),
+                     shapes=((1, 1, 32, 32),), dtypes=("int8",),
+                     samples=32, seed=5),
+    ]
+
+
+def test_run_campaign_end_to_end_and_roundtrip(tmp_path):
+    result = run_campaign("unit", _tiny_specs(), out_dir=str(tmp_path))
+
+    gemm = find_cells(result, target="gemm_packed")[0]
+    m = CellMetrics.from_dict(gemm["metrics"])
+    # m=4: analytic bound 1-(3/256)^4 ~ 0.99999998
+    assert m.detection_rate > 0.95
+    assert m.fp_rate == 0.0
+    assert m.analytic_bound == pytest.approx(1.0, abs=1e-6)
+
+    kvc = find_cells(result, target="kv_cache")[0]
+    mk = CellMetrics.from_dict(kvc["metrics"])
+    assert mk.detection_rate == 1.0 and mk.escapes == 0
+
+    # JSON artifact round-trip
+    path = tmp_path / "BENCH_campaign_unit.json"
+    assert path.exists()
+    loaded = load_artifact(str(path))
+    assert loaded == json.loads(json.dumps(result))  # JSON-clean
+    assert [c["cell_id"] for c in loaded["cells"]] \
+        == [c["cell_id"] for c in result["cells"]]
+    for orig, back in zip(result["cells"], loaded["cells"]):
+        assert CellMetrics.from_dict(back["metrics"]) \
+            == CellMetrics.from_dict(orig["metrics"])
+    assert CampaignSpec.from_dict(loaded["specs"][0]) == _tiny_specs()[0]
+
+    md = markdown_table(loaded)
+    assert "gemm_packed/bitflip" in md and "| cell |" in md
+    assert (tmp_path / "BENCH_campaign_unit.md").exists()
+
+
+def test_run_cell_deterministic_for_fixed_seed():
+    spec = CampaignSpec(name="t", targets=("gemm_packed",),
+                        shapes=((2, 32, 64),), samples=40, seed=9)
+    plan = expand(spec)[0][0]
+    m1 = run_cell(plan).metrics
+    m2 = run_cell(plan).metrics
+    assert m1 == m2
+
+
+def test_eb_cell_significant_band():
+    spec = CampaignSpec(name="t", targets=("embedding_bag",),
+                        bit_bands=("significant",),
+                        shapes=((2_000, 64, 4, 20),), samples=60, seed=2)
+    plan = expand(spec)[0][0]
+    m = run_cell(plan, chunk=30).metrics
+    assert m.detection_rate >= 0.95
+    assert m.fp_rate <= 0.1
+
+
+def test_multi_flip_plan_runs():
+    spec = CampaignSpec(name="t", targets=("gemm_packed",),
+                        shapes=((4, 32, 64),), samples=32,
+                        flips_per_trial=3, seed=11)
+    plan = expand(spec)[0][0]
+    assert plan.flips == 3
+    m = run_cell(plan).metrics
+    assert m.corrupted == 32              # 3 distinct victims always change
+    assert m.detection_rate > 0.95

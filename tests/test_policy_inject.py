@@ -2,10 +2,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core import abft_gemm as ag
 from repro.core import policy
 from repro.core.checksum import tensor_checksum, tree_checksum, verify_tree
-from repro.core.inject import flip_bit, random_bitflip, random_value
+from repro.core.inject import (bit_band, flip_bit, random_bitflip,
+                               random_bitflip_band, random_bitflips,
+                               random_value)
 
 
 def test_flip_bit_int8_roundtrip():
@@ -63,6 +67,153 @@ def test_with_recompute_counts_retry():
 
     out, err, retries = policy.with_recompute(op)()
     assert int(retries) == 1
+
+
+def test_with_recompute_clean_op_never_retries():
+    def op():
+        return jnp.ones((3,)), jnp.asarray(0, jnp.int32)
+
+    out, err, retries = policy.with_recompute(op, max_retries=3)()
+    assert int(retries) == 0 and int(err) == 0
+
+
+def test_with_recompute_max_retries_accounting():
+    def op():
+        return jnp.zeros((2,)), jnp.asarray(2, jnp.int32)  # persistent
+
+    out, err, retries = policy.with_recompute(op, max_retries=3)()
+    assert int(retries) == 3          # every round re-fires and is counted
+    assert int(err) == 2              # deterministic sim: error persists
+
+
+# ------------------------- bit bands / multi-flip ----------------------------
+
+def test_bit_band_lookup_and_fallback():
+    assert bit_band(jnp.int8, "significant") == (4, 8)
+    assert bit_band(jnp.float32, "exponent") == (23, 31)
+    assert bit_band(jnp.int16, "all") == (0, 16)        # fallback dtype
+    assert bit_band(jnp.int16, "low") == (0, 8)
+    with pytest.raises(KeyError):
+        bit_band(jnp.int16, "exponent")
+
+
+def test_random_bitflip_band_respects_band():
+    x = jnp.zeros((128,), jnp.int8)
+    for i in range(20):
+        y = random_bitflip_band(jax.random.key(i), x, "significant")
+        delta = abs(int(np.asarray(y, np.int32).sum()))
+        # magnitudes of upper-nibble flips: 16/32/64/128
+        assert delta in (16, 32, 64, 128)
+
+
+def test_random_bitflips_changes_exactly_n_distinct_elements():
+    x = jnp.zeros((256,), jnp.int8)
+    for n in (1, 4, 9):
+        y = random_bitflips(jax.random.key(n), x, n)
+        assert int((y != x).sum()) == n
+
+
+def test_random_bitflips_vmaps():
+    x = jnp.zeros((64,), jnp.int32)
+    keys = jax.random.split(jax.random.key(0), 50)
+    ys = jax.vmap(lambda k: random_bitflips(k, x, 2))(keys)
+    assert np.all(np.asarray((ys != x[None]).sum(axis=-1)) == 2)
+
+
+def test_random_bitflips_rejects_zero():
+    with pytest.raises(ValueError):
+        random_bitflips(jax.random.key(0), jnp.zeros((4,), jnp.int8), 0)
+
+
+# --------------------- correction + policy registry --------------------------
+
+def _gemm_fixture():
+    ka, kb = jax.random.split(jax.random.key(0))
+    a = jax.random.randint(ka, (8, 32), 0, 256, jnp.uint8)
+    b = jax.random.randint(kb, (32, 16), -127, 128, jnp.int8)
+    c = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+    check_col = jax.lax.dot_general(
+        a, ag.encode_weight_checksum(b), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    col_check = jax.lax.dot_general(
+        ag.encode_activation_checksum(a), b.astype(jnp.int32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return a, b, c, check_col, col_check
+
+
+def test_correct_single_error_repairs_exactly():
+    _, _, c, check_col, col_check = _gemm_fixture()
+    c_bad = c.at[3, 7].add(-4321)
+    err_rows, err = ag.verify_rows(c_bad, check_col)
+    assert int(err) == 1
+    fixed, applied = ag.correct_single_error(c_bad, err_rows, col_check)
+    assert bool(applied)
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(c))
+
+
+def test_correct_single_error_leaves_multi_error_alone():
+    _, _, c, check_col, col_check = _gemm_fixture()
+    c_bad = c.at[1, 2].add(7).at[5, 9].add(-99)
+    err_rows, _ = ag.verify_rows(c_bad, check_col)
+    fixed, applied = ag.correct_single_error(c_bad, err_rows, col_check)
+    assert not bool(applied)
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(c_bad))
+
+
+def test_policy_correct_wrapper_and_registry():
+    _, _, c, check_col, col_check = _gemm_fixture()
+    c_bad = c.at[2, 4].add(1 << 20)
+    err_rows, err = ag.verify_rows(c_bad, check_col)
+
+    def op():
+        return c_bad, err_rows, err, col_check
+
+    fixed, residual, corrections = policy.apply_policy("correct", op)()
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(c))
+    assert int(residual) == 0 and int(corrections) == 1
+    # jit-safe
+    fixed_j, _, _ = jax.jit(policy.POLICIES["correct"](op))()
+    np.testing.assert_array_equal(np.asarray(fixed_j), np.asarray(c))
+
+
+def test_policy_log_and_unknown_name():
+    def op():
+        return jnp.ones((2,)), jnp.asarray(0, jnp.int32)
+
+    out, err, retries = policy.apply_policy("log", op)()
+    assert int(retries) == 0
+    with pytest.raises(KeyError):
+        policy.apply_policy("sacrifice", op)
+    assert set(policy.POLICIES) == {"log", "recompute", "correct", "abort"}
+
+
+def test_policy_abort_raises_on_error():
+    def bad_op():
+        return jnp.ones((2,)), jnp.asarray(3, jnp.int32)
+
+    with pytest.raises(policy.FaultAbort, match="3 corrupted"):
+        policy.apply_policy("abort", bad_op)()
+
+    def clean_op():
+        return jnp.ones((2,)), jnp.asarray(0, jnp.int32)
+
+    out, err, _ = policy.apply_policy("abort", clean_op)()
+    assert int(err) == 0
+
+
+def test_policy_abort_jitted_caught_via_is_fault_abort():
+    def bad_op():
+        return jnp.ones((2,)), jnp.asarray(1, jnp.int32)
+
+    wrapped = jax.jit(policy.apply_policy("abort", bad_op))
+    try:
+        jax.block_until_ready(wrapped())
+        raised = None
+    except Exception as e:           # jit wraps it in XlaRuntimeError
+        raised = e
+    assert raised is not None and policy.is_fault_abort(raised)
+    assert not policy.is_fault_abort(ValueError("unrelated"))
 
 
 def test_tensor_checksum_detects_flip():

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.checkpoint import (CheckpointCorruption, CheckpointManager,
                               latest_step, load_checkpoint, save_checkpoint)
@@ -169,12 +169,13 @@ def test_checked_psum_multidevice_subprocess():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import Mesh, PartitionSpec as P
+        from repro.sharding import shard_map
         from repro.runtime.compression import (compress_grads,
             init_compression, checked_psum, decompress_grads)
         mesh = Mesh(np.asarray(jax.devices()).reshape(4), ("data",))
         gs = jnp.stack([jnp.full((8,), float(i + 1)) for i in range(4)])
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("data"),
+        @partial(shard_map, mesh=mesh, in_specs=P("data"),
                  out_specs=(P(), P()))
         def reduce(g_shard):
             g = {"w": g_shard[0]}

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st
 
 from repro.layers.rwkv6 import LOG_W_MIN, wkv_chunked, wkv_recurrent
 
