@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, modelled_cost, time_fn
-from repro.core import abft_embedding as ae
+import repro.core as core
 
 ROWS = 4_000_000
 DIMS = (32, 64, 128, 256)
@@ -36,11 +36,11 @@ def run(csv: Csv, *, quick: bool = False):
     rows = 200_000 if quick else ROWS
     dims = DIMS[:2] if quick else DIMS
     rng = np.random.default_rng(0)
-    plain = jax.jit(ae.embedding_bag)
-    abft = jax.jit(ae.abft_embedding_bag)
+    plain = jax.jit(core.embedding_bag)
+    abft = jax.jit(core.abft_embedding_bag)
     for d in dims:
         table, alphas, betas = make_table(jax.random.key(d), rows, d)
-        rowsums = jax.jit(ae.table_rowsums)(table)
+        rowsums = jax.jit(core.table_rowsums)(table)
         jax.block_until_ready(rowsums)
         for weighted in (False, True):
             # fresh indices per timing iteration would flush cache like the
@@ -51,10 +51,10 @@ def run(csv: Csv, *, quick: bool = False):
                              jnp.float32) if weighted else None)
             t0 = time_fn(plain, table, alphas, betas, idx, w)
             t1 = time_fn(abft, table, alphas, betas, idx, rowsums, w)
-            c0 = modelled_cost(ae.embedding_bag, table, alphas, betas,
+            c0 = modelled_cost(core.embedding_bag, table, alphas, betas,
                                idx, w)
             c1 = modelled_cost(
-                lambda t, a, b, i, r, ww: ae.abft_embedding_bag(
+                lambda t, a, b, i, r, ww: core.abft_embedding_bag(
                     t, a, b, i, r, ww),
                 table, alphas, betas, idx, rowsums, w)
             dbytes = c1["bytes"] / max(c0["bytes"], 1) - 1

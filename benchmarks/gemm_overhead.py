@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import GEMM_SHAPES, Csv, modelled_cost, time_fn
-from repro.core import abft_gemm as ag
+import repro.core as core
 
 
 @functools.partial(jax.jit, static_argnums=())
@@ -34,12 +34,12 @@ def _plain(a, b):
 
 @jax.jit
 def _abft_packed(a, b_packed):
-    return ag.abft_qgemm_packed(a, b_packed)
+    return core.abft_qgemm_packed(a, b_packed)
 
 
 @jax.jit
 def _abft_encode(a, b):
-    return ag.abft_qgemm(a, b)
+    return core.abft_qgemm(a, b)
 
 
 def run(csv: Csv, *, quick: bool = False):
@@ -49,7 +49,7 @@ def run(csv: Csv, *, quick: bool = False):
         ka, kb = jax.random.split(jax.random.fold_in(key, m * n * k))
         a = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)
         b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
-        b_packed = jax.jit(ag.pack_encoded_b)(b)
+        b_packed = jax.jit(core.pack_encoded_b)(b)
         t0 = time_fn(_plain, a, b)
         t1 = time_fn(_abft_packed, a, b_packed)
         t2 = time_fn(_abft_encode, a, b)

@@ -15,7 +15,9 @@ import jax.numpy as jnp
 from repro.campaign import (CampaignSpec, InjectableTarget, markdown_table,
                             register_target, run_campaign)
 from repro.campaign.targets import apply_fault
-from repro.core import abft_embedding as ae
+from repro.protect import get_op
+
+EB = get_op("embedding_bag")
 
 # ---------------------------------------------------------------------- #
 # 1. a custom injectable target: corrupt C_T, the checksum sidecar       #
@@ -30,7 +32,7 @@ def _build(plan, key):
         "table": table,
         "alphas": jax.random.uniform(ka, (rows,), jnp.float32, 1e-2, 2e-2),
         "betas": jax.random.uniform(kb, (rows,), jnp.float32, 0.3, 0.7),
-        "rowsums": ae.table_rowsums(table),
+        "rowsums": EB.encode((table, None, None))[-1],
     }
 
 
@@ -39,20 +41,20 @@ def _trial(state, plan, key):
     k1, k2 = jax.random.split(key)
     idx = jax.random.randint(k1, (bags, pool), 0, rows, jnp.int32)
     rs_bad = apply_fault(k2, state["rowsums"], plan)
-    out = ae.abft_embedding_bag(state["table"], state["alphas"],
-                                state["betas"], idx, rs_bad)
+    _, check = EB((state["table"], state["alphas"], state["betas"],
+                   rs_bad), idx)
     # corrupted ground truth: the flip must hit a rowsum a bag gathers
     touched = jnp.isin(jnp.arange(rows), idx.reshape(-1))
-    return out.err_count > 0, jnp.any((rs_bad != state["rowsums"])
-                                      & touched)
+    return check.err_count > 0, jnp.any((rs_bad != state["rowsums"])
+                                        & touched)
 
 
 def _clean(state, plan, key):
     rows, dim, bags, pool = plan.shape
     idx = jax.random.randint(key, (bags, pool), 0, rows, jnp.int32)
-    out = ae.abft_embedding_bag(state["table"], state["alphas"],
-                                state["betas"], idx, state["rowsums"])
-    return out.err_count > 0
+    _, check = EB((state["table"], state["alphas"], state["betas"],
+                   state["rowsums"]), idx)
+    return check.err_count > 0
 
 
 register_target(InjectableTarget(

@@ -18,13 +18,12 @@ from repro.configs.dlrm import EXTRAS
 from repro.configs.registry import get_arch
 
 from repro.data import make_dataset
-from repro.layers.common import Ctx
 from repro.models.dlrm import dlrm_forward, init_dlrm
+from repro.protect import default_plan, protect
 from repro.sharding import values_of
 
 # scaled-down tables (CPU example; the benchmark suite runs 4M rows)
 ex = dataclasses.replace(EXTRAS, table_rows=50_000)
-ctx = Ctx(quant=True, abft=True)
 
 params = values_of(init_dlrm(jax.random.key(0), ex, quant=True,
                              table_rows=ex.table_rows))
@@ -35,7 +34,10 @@ print(f"DLRM (paper §VI config, tables scaled to {ex.table_rows} rows): "
 
 shape = ShapeConfig("serve", "train", 1, ex.batch)
 ds = make_dataset(get_arch("dlrm"), shape)
-fwd = jax.jit(lambda p, d, i: dlrm_forward(p, d, i, ctx, ex))
+# protection selected purely by plan: every GEMM Alg. 1, every bag Alg. 2
+fwd_p = protect(lambda p, d, i, ctx: dlrm_forward(p, d, i, ctx, ex),
+                default_plan())
+fwd = jax.jit(lambda p, d, i: fwd_p(p, d, i))
 
 batch = ds.batch_at(0, table_rows=ex.table_rows)
 scores, report = fwd(params, jnp.asarray(batch["dense"]),

@@ -1,109 +1,112 @@
-"""Quickstart: the paper's two protected operators in five minutes.
+"""Quickstart: the paper's protected operators behind one API, in five
+minutes.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. quantized GEMM with fused ABFT (Algorithm 1) — encode once, verify
-   every call, catch an injected bit flip;
-2. quantized EmbeddingBag with ABFT (Algorithm 2) — row-sum invariant;
-3. the detect -> recompute policy wrapper;
-4. the same machinery inside a full transformer layer (int8 serving path).
+1. the ProtectedOp protocol: encode once, verify every call — quantized
+   GEMM (Algorithm 1) catches an injected bit flip;
+2. quantized EmbeddingBag (Algorithm 2) through the same protocol;
+3. protection plans: per-op-pattern policy/threshold rules from a string;
+4. ``protect(apply_fn, plan)`` on a full transformer — flipping EB
+   protection off or switching policy to ``recompute`` is a plan edit,
+   not a model edit.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import abft_gemm as ag
-from repro.core import abft_embedding as ae
 from repro.core.inject import random_bitflip
-from repro.core.policy import with_recompute
+from repro.protect import ProtectionPlan, get_op, protect, protected_call
+from repro.protect.plan import ResolvedRule
 
 print("=" * 64)
-print("1) ABFT for quantized GEMM (paper Algorithm 1)")
+print("1) ProtectedOp: quantized GEMM (paper Algorithm 1)")
 print("=" * 64)
 
+qgemm = get_op("qgemm")
 key = jax.random.key(0)
 ka, kb, kf = jax.random.split(key, 3)
 m, k, n = 20, 512, 1024
 a_q = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)      # activations
 b_q = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)    # weights
 
-# encode ONCE at model load (amortized, §IV-A1); mod-127 keeps it int8
-checksum = ag.encode_weight_checksum(b_q)
-print(f"weight checksum: {checksum.shape} {checksum.dtype} (mod {ag.MOD})")
+# encode ONCE at model load (amortized, §IV-A1): B' = [B | checksum block]
+b_packed = qgemm.encode(b_q)
+print(f"encoded weight: {b_q.shape} -> packed {b_packed.shape} int8")
 
-out = ag.abft_qgemm(a_q, b_q, checksum=checksum)
-print(f"clean GEMM:    C={out.c.shape} int32, errors={int(out.err_count)}")
+c, check = qgemm(b_packed, a_q)
+print(f"clean GEMM:    C={c.shape} int32, errors={int(check.err_count)}")
 
 b_bad = random_bitflip(kf, b_q)                               # memory fault
-out_bad = ag.abft_qgemm(a_q, b_bad, checksum=checksum)
-print(f"after bitflip: errors={int(out_bad.err_count)} "
-      f"(corrupted rows flagged: {int(out_bad.err_rows.sum())})")
+b_bad_packed = jnp.concatenate([b_bad, b_packed[:, n:]], axis=1)
+c_bad, check_bad = qgemm(b_bad_packed, a_q)
+print(f"after bitflip: errors={int(check_bad.err_count)} "
+      f"(corrupted rows flagged: {int(check_bad.err_mask.sum())})")
 
 print()
 print("=" * 64)
-print("2) ABFT for quantized EmbeddingBag (paper Algorithm 2)")
+print("2) ProtectedOp: quantized EmbeddingBag (paper Algorithm 2)")
 print("=" * 64)
 
+eb = get_op("embedding_bag")
 rows, d, pool, bags = 10_000, 64, 100, 10
 kt, ka2, kb2, ki = jax.random.split(jax.random.key(1), 4)
 table = jax.random.randint(kt, (rows, d), -128, 128, jnp.int8)
 alphas = jax.random.uniform(ka2, (rows,), jnp.float32, 1e-3, 2e-3)
 betas = jax.random.uniform(kb2, (rows,), jnp.float32, -1e-2, 1e-2)
-rowsums = ae.table_rowsums(table)        # C_T: precomputed, unscaled int32
+enc = eb.encode((table, alphas, betas))       # precomputes C_T row sums
 idx = jax.random.randint(ki, (bags, pool), 0, rows, jnp.int32)
 
-out = ae.abft_embedding_bag(table, alphas, betas, idx, rowsums)
-print(f"clean EB:      R={out.r.shape} f32, errors={int(out.err_count)}")
+r, check = eb(enc, idx)
+print(f"clean EB:      R={r.shape} f32, errors={int(check.err_count)}")
 
 table_bad = table.at[int(idx[0, 0]), 3].add(64)   # high-bit corruption
-out_bad = ae.abft_embedding_bag(table_bad, alphas, betas, idx, rowsums)
-print(f"after corrupt: errors={int(out_bad.err_count)} "
-      f"(bags flagged: {out_bad.err_bags.astype(int).tolist()})")
+r_bad, check_bad = eb((table_bad,) + enc[1:], idx)
+print(f"after corrupt: errors={int(check_bad.err_count)} "
+      f"(bags flagged: {check_bad.err_mask.astype(int).tolist()})")
 
 print()
 print("=" * 64)
-print("3) detect -> recompute policy (paper §I: errors rarely strike twice)")
+print("3) protection plans: policy per op pattern, from a string")
 print("=" * 64)
 
-calls = {"n": 0}
+plan = ProtectionPlan.parse(
+    "*:policy=log,qgemm:policy=recompute:retries=1,embedding_bag:off")
+print("plan:", plan.describe())
+print("  qgemm rule:", plan.resolve("qgemm", "mlp.up"))
+print("  EB rule:   ", plan.resolve("embedding_bag", "tables"))
 
-
-def flaky_gemm():
-    calls["n"] += 1
-    b_use = b_bad if calls["n"] == 1 else b_q     # transient fault
-    o = ag.abft_qgemm(a_q, b_use, checksum=checksum)
-    return o.c, o.err_count
-
-
-# NOTE: with_recompute is lax.cond-based for in-graph use; here we drive it
-# eagerly so the python closure can model a *transient* fault.
-c1, err1 = flaky_gemm()
-if int(err1) > 0:
-    c2, err2 = flaky_gemm()
-    print(f"first pass errors={int(err1)} -> recomputed, "
-          f"errors={int(err2)} (policy cleared the fault)")
+# the recompute policy re-runs the op under lax.cond when errors surface
+c2, report = protected_call("qgemm", b_bad_packed, a_q,
+                            rule=ResolvedRule(policy="recompute"))
+print(f"recompute policy on the corrupted GEMM: "
+      f"errors={int(report.errors['qgemm'])}, "
+      f"retries={int(report.retries)} (deterministic sim: fault persists)")
 
 print()
 print("=" * 64)
-print("4) the same, inside a transformer (int8+ABFT serving path)")
+print("4) protect(apply_fn, plan): a full transformer, plan-selected")
 print("=" * 64)
 
 from repro.configs.registry import get_arch          # noqa: E402
 from repro.configs.reduce import reduce_cfg          # noqa: E402
-from repro.layers.common import Ctx                  # noqa: E402
 from repro.models.base import build_model            # noqa: E402
 from repro.sharding import values_of                 # noqa: E402
 
 cfg = reduce_cfg(get_arch("llama3.2-1b"))
 model = build_model(cfg, max_pos=128)
 params = values_of(model.init(jax.random.key(2), quant=True))
-ctx = Ctx(quant=True, abft=True)
 tokens = jax.random.randint(jax.random.key(3), (2, 16), 0, cfg.vocab,
                             jnp.int32)
-logits, cache, report = jax.jit(
-    lambda p, t: model.prefill(p, {"tokens": t}, ctx, cache_len=32)
-)(params, tokens)
-print(f"prefill logits {logits.shape}; ABFT: "
-      f"{int(report.gemm_checks)} GEMM checks, "
-      f"{int(report.gemm_errors)} errors, "
-      f"{int(report.eb_checks)} EB checks")
+
+for plan_str in ("*:policy=log", "embedding_bag:off"):
+    plan = ProtectionPlan.parse("*:policy=log," + plan_str)
+    prefill = protect(model.prefill, plan)
+    (logits, cache), report = jax.jit(
+        lambda p, t, pf=prefill: pf(p, {"tokens": t}, cache_len=32)
+    )(params, tokens)
+    print(f"plan '{plan_str}': logits {logits.shape}; "
+          f"{int(report.gemm_checks)} GEMM checks, "
+          f"{int(report.eb_checks)} EB checks, "
+          f"{int(report.total_errors())} errors")
+
 print("\nquickstart OK")

@@ -18,7 +18,10 @@ Library use::
 """
 from repro.campaign.artifacts import (cell_metrics, find_cells,
                                       load_artifact, markdown_table,
+                                      threshold_curve,
+                                      threshold_curve_markdown,
                                       write_artifacts)
+from repro.campaign.diff import diff_artifacts, format_diff, run_diff
 from repro.campaign.executor import (CellResult, run_campaign, run_cell,
                                      run_specs)
 from repro.campaign.metrics import CellMetrics, compute_metrics, \
@@ -35,5 +38,6 @@ __all__ = [
     "CellMetrics", "compute_metrics", "wilson_interval",
     "CellResult", "run_cell", "run_specs", "run_campaign",
     "load_artifact", "write_artifacts", "markdown_table", "cell_metrics",
-    "find_cells",
+    "find_cells", "threshold_curve", "threshold_curve_markdown",
+    "diff_artifacts", "format_diff", "run_diff",
 ]

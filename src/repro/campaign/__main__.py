@@ -1,10 +1,13 @@
-"""``python -m repro.campaign`` — run a resilience campaign.
+"""``python -m repro.campaign`` — run a resilience campaign, or diff two
+campaign artifacts.
 
 Examples::
 
     python -m repro.campaign --quick
     python -m repro.campaign --grid paper --seed 7
+    python -m repro.campaign --grid thresholds        # EB rel_bound sweep
     python -m repro.campaign --grid full --device-count 8 --out bench/
+    python -m repro.campaign --diff OLD.json NEW.json # exit 1 on regression
 """
 from __future__ import annotations
 
@@ -17,22 +20,43 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.campaign",
         description="Declarative fault-injection sweeps with batched "
-                    "execution and JSON artifacts.")
+                    "execution, JSON artifacts, and a cross-PR differ.")
     ap.add_argument("--quick", action="store_true",
                     help="shorthand for --grid quick (the CI smoke grid)")
     ap.add_argument("--grid", default=None,
-                    choices=["quick", "paper", "soak", "full"],
+                    choices=["quick", "paper", "thresholds", "soak",
+                             "full"],
                     help="named grid to run (see repro.campaign.grids)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--samples", type=int, default=0,
-                    help="override the quick grid's GEMM sample count")
+                    help="override the per-cell sample count "
+                         "(quick / thresholds grids)")
     ap.add_argument("--out", default=".",
                     help="artifact directory (default: cwd)")
     ap.add_argument("--chunk", type=int, default=0,
                     help="trials per compiled vmap chunk")
     ap.add_argument("--device-count", type=int, default=0,
                     help="fake host devices (XLA_FLAGS) to pmap across")
+    ap.add_argument("--diff", nargs=2, metavar=("OLD", "NEW"),
+                    help="diff two BENCH_campaign_*.json artifacts and "
+                         "exit 1 on detection/FP regressions")
+    ap.add_argument("--det-tol", type=float, default=0.02,
+                    help="--diff: allowed detection-rate drop")
+    ap.add_argument("--fp-tol", type=float, default=0.02,
+                    help="--diff: allowed false-positive-rate rise")
+    ap.add_argument("--overhead-tol", type=float, default=None,
+                    help="--diff: allowed overhead rise (opt-in — "
+                         "wall-clock noise on shared runners)")
+    ap.add_argument("--diff-out", default=None,
+                    help="--diff: also write the markdown report here")
     args = ap.parse_args(argv)
+
+    if args.diff:
+        from repro.campaign.diff import run_diff
+        return run_diff(args.diff[0], args.diff[1], det_tol=args.det_tol,
+                        fp_tol=args.fp_tol,
+                        overhead_tol=args.overhead_tol,
+                        out_path=args.diff_out)
 
     if args.device_count:
         os.environ["XLA_FLAGS"] = (
@@ -42,15 +66,20 @@ def main(argv=None) -> int:
 
     # jax import happens after XLA_FLAGS is set
     from repro.campaign.executor import CHUNK, run_campaign
-    from repro.campaign.grids import (GRIDS, paper_specs, quick_specs)
+    from repro.campaign.grids import (GRIDS, paper_specs, quick_specs,
+                                      thresholds_specs)
 
     grid = args.grid or ("quick" if args.quick else None)
     if grid is None:
-        ap.error("pick a grid: --quick or --grid {quick,paper,soak,full}")
+        ap.error("pick a grid (--quick / --grid {quick,paper,thresholds,"
+                 "soak,full}) or --diff OLD NEW")
     if grid == "quick":
         specs = quick_specs(seed=args.seed, samples=args.samples or 600)
     elif grid == "paper":
         specs = paper_specs(seed=args.seed, quick=args.quick)
+    elif grid == "thresholds":
+        specs = thresholds_specs(seed=args.seed,
+                                 samples=args.samples or 400)
     else:
         specs = GRIDS[grid](seed=args.seed)
 
@@ -58,9 +87,12 @@ def main(argv=None) -> int:
                           chunk=args.chunk or CHUNK,
                           verbose=lambda s: print(s, flush=True))
 
-    from repro.campaign.artifacts import markdown_table
+    from repro.campaign.artifacts import (markdown_table,
+                                          threshold_curve_markdown)
     print()
     print(markdown_table(result))
+    if grid == "thresholds":
+        print(threshold_curve_markdown(result))
     print(f"artifact: {os.path.join(args.out, 'BENCH_campaign_' + grid)}"
           f".json")
     return 0

@@ -131,6 +131,39 @@ def markdown_table(result: dict) -> str:
     return "\n".join(lines)
 
 
+def threshold_curve(result: dict, target: str = "embedding_bag") -> dict:
+    """Detection-vs-FP tradeoff per bit band from a rel_bound sweep.
+
+    Returns ``{band: [(rel_bound, detection_rate, fp_rate), ...]}`` sorted
+    by bound — the curve the ``thresholds`` grid exists to produce."""
+    curves: dict = {}
+    for c in result["cells"]:
+        if c["plan"].get("target") != target:
+            continue
+        rb = c["plan"].get("rel_bound")
+        if rb is None:
+            continue
+        m = c["metrics"]
+        curves.setdefault(c["plan"]["bit_band"], []).append(
+            (rb, m["detection_rate"], m["fp_rate"]))
+    return {band: sorted(pts) for band, pts in curves.items()}
+
+
+def threshold_curve_markdown(result: dict,
+                             target: str = "embedding_bag") -> str:
+    curves = threshold_curve(result, target)
+    lines = [f"# EB rel_bound tradeoff curves (`{target}`)", ""]
+    for band, pts in sorted(curves.items()):
+        lines += [f"## band `{band}`", "",
+                  "| rel_bound | detection | false positives |",
+                  "|---|---|---|"]
+        for rb, det, fp in pts:
+            lines.append(f"| {rb:g} | {_fmt_pct(det)} | {_fmt_pct(fp)} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
 __all__ = ["campaign_to_dict", "write_artifacts", "load_artifact",
            "cell_metrics", "find_cells", "markdown_table",
+           "threshold_curve", "threshold_curve_markdown",
            "environment_info", "SCHEMA_VERSION", "CellPlan"]

@@ -1,0 +1,153 @@
+"""Cross-PR artifact differ: flag detection-rate / FP / overhead
+regressions between two ``BENCH_campaign_*.json`` files.
+
+    python -m repro.campaign --diff OLD.json NEW.json
+
+Cells are matched by ``cell_id``.  A **regression** is:
+
+* new effective detection rate below old by more than ``det_tol``;
+* new false-positive rate above old by more than ``fp_tol``;
+* (only when ``overhead_tol`` is given — wall-clock overhead is noisy on
+  shared CI runners, so it is opt-in) new overhead above old by more than
+  ``overhead_tol``;
+* a cell present in the old artifact but missing from the new one
+  (silent coverage loss reads as "no regressions" when it is the worst
+  kind).
+
+Detection counts are deterministic per (seed, jax version), so the default
+tolerances mostly absorb cross-version PRNG/codegen drift.  The CLI exits
+nonzero iff regressions exist — wire it against a committed baseline in CI.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.campaign.artifacts import load_artifact
+
+
+def _cells_by_id(result: dict) -> dict:
+    return {c["cell_id"]: c["metrics"] for c in result["cells"]}
+
+
+def diff_artifacts(old: dict, new: dict, *, det_tol: float = 0.02,
+                   fp_tol: float = 0.02,
+                   overhead_tol: Optional[float] = None) -> dict:
+    """Compare two loaded artifacts; returns the diff record.
+
+    ``{"regressions": [...], "improvements": [...], "added": [...],
+    "removed": [...], "unchanged": int, "old": name, "new": name}`` —
+    regression entries carry ``cell_id``, ``kind``, ``old``/``new`` values
+    and the tolerance that was exceeded.
+    """
+    oc, nc = _cells_by_id(old), _cells_by_id(new)
+    regressions: List[dict] = []
+    improvements: List[dict] = []
+    unchanged = 0
+
+    for cid in sorted(set(oc) & set(nc)):
+        om, nm = oc[cid], nc[cid]
+        flagged = False
+
+        d_old, d_new = om["detection_rate"], nm["detection_rate"]
+        if d_new < d_old - det_tol:
+            regressions.append({"cell_id": cid, "kind": "detection_rate",
+                                "old": d_old, "new": d_new,
+                                "tol": det_tol})
+            flagged = True
+        elif d_new > d_old + det_tol:
+            improvements.append({"cell_id": cid, "kind": "detection_rate",
+                                 "old": d_old, "new": d_new})
+            flagged = True
+
+        f_old, f_new = om["fp_rate"], nm["fp_rate"]
+        if f_new > f_old + fp_tol:
+            regressions.append({"cell_id": cid, "kind": "fp_rate",
+                                "old": f_old, "new": f_new, "tol": fp_tol})
+            flagged = True
+        elif f_new < f_old - fp_tol:
+            improvements.append({"cell_id": cid, "kind": "fp_rate",
+                                 "old": f_old, "new": f_new})
+            flagged = True
+
+        o_old, o_new = om.get("overhead"), nm.get("overhead")
+        if overhead_tol is not None and o_old is not None \
+                and o_new is not None:
+            if o_new > o_old + overhead_tol:
+                regressions.append({"cell_id": cid, "kind": "overhead",
+                                    "old": o_old, "new": o_new,
+                                    "tol": overhead_tol})
+                flagged = True
+            elif o_new < o_old - overhead_tol:
+                improvements.append({"cell_id": cid, "kind": "overhead",
+                                     "old": o_old, "new": o_new})
+                flagged = True
+
+        # unchanged = neither regressed nor improved (counts must add up)
+        if not flagged:
+            unchanged += 1
+
+    removed = sorted(set(oc) - set(nc))
+    for cid in removed:
+        regressions.append({"cell_id": cid, "kind": "coverage",
+                            "old": oc[cid]["detection_rate"], "new": None,
+                            "tol": None})
+    return {
+        "old": old.get("campaign"), "new": new.get("campaign"),
+        "regressions": regressions,
+        "improvements": improvements,
+        "added": sorted(set(nc) - set(oc)),
+        "removed": removed,
+        "unchanged": unchanged,
+    }
+
+
+def _fmt(x) -> str:
+    return "—" if x is None else f"{100.0 * x:.2f}%"
+
+
+def format_diff(diff: dict) -> str:
+    """Markdown rendering (CI uploads this next to the artifacts)."""
+    lines = [
+        f"# Campaign diff: `{diff['old']}` -> `{diff['new']}`",
+        "",
+        f"{len(diff['regressions'])} regression(s), "
+        f"{len(diff['improvements'])} improvement(s), "
+        f"{diff['unchanged']} unchanged, {len(diff['added'])} added, "
+        f"{len(diff['removed'])} removed",
+    ]
+    if diff["regressions"]:
+        lines += ["", "## Regressions", "",
+                  "| cell | metric | old | new |", "|---|---|---|---|"]
+        for r in diff["regressions"]:
+            lines.append(f"| `{r['cell_id']}` | {r['kind']} | "
+                         f"{_fmt(r['old'])} | {_fmt(r['new'])} |")
+    if diff["improvements"]:
+        lines += ["", "## Improvements", "",
+                  "| cell | metric | old | new |", "|---|---|---|---|"]
+        for r in diff["improvements"]:
+            lines.append(f"| `{r['cell_id']}` | {r['kind']} | "
+                         f"{_fmt(r['old'])} | {_fmt(r['new'])} |")
+    if diff["added"]:
+        lines += ["", "New cells: " + ", ".join(
+            f"`{c}`" for c in diff["added"])]
+    lines.append("")
+    return "\n".join(lines)
+
+
+def run_diff(old_path: str, new_path: str, *, det_tol: float = 0.02,
+             fp_tol: float = 0.02, overhead_tol: Optional[float] = None,
+             out_path: Optional[str] = None,
+             emit=print) -> int:
+    """CLI body: load, diff, print/write markdown; 1 iff regressions."""
+    diff = diff_artifacts(load_artifact(old_path), load_artifact(new_path),
+                          det_tol=det_tol, fp_tol=fp_tol,
+                          overhead_tol=overhead_tol)
+    md = format_diff(diff)
+    emit(md)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(md)
+    return 1 if diff["regressions"] else 0
+
+
+__all__ = ["diff_artifacts", "format_diff", "run_diff"]

@@ -4,6 +4,7 @@
              sample counts sized so the GEMM bit-flip cell is statistically
              comparable (±2%) to the §IV-C analytic bound.
 ``paper``  — the paper's Tables II + III campaigns at full shape coverage.
+``thresholds`` — EB rel_bound sweep: detection-vs-FP tradeoff per bit band.
 ``soak``   — the full-model decode-step sweep across fault models/bands.
 ``full``   — everything above plus the beyond-paper KV-cache cells.
 """
@@ -69,6 +70,22 @@ def paper_specs(seed: int = 0, quick: bool = False) -> List[CampaignSpec]:
     ]
 
 
+def thresholds_specs(seed: int = 0,
+                     samples: int = 400) -> List[CampaignSpec]:
+    """EB ``rel_bound`` sweep: the detection-vs-false-positive tradeoff
+    curve per bit band (ROADMAP open item).  Tight bounds catch low-bit
+    flips but false-positive on round-off; the paper's 1e-5 sits between.
+    Clean samples run at every bound so the FP side of the curve is
+    measured, not assumed."""
+    return [CampaignSpec(
+        name="eb-thresholds",
+        targets=("embedding_bag",),
+        fault_models=("bitflip",),
+        bit_bands=("significant", "low", "sign"),
+        rel_bounds=(1e-7, 1e-6, 1e-5, 1e-4, 1e-3),
+        samples=samples, clean_samples=samples, seed=seed)]
+
+
 def soak_specs(seed: int = 0) -> List[CampaignSpec]:
     return [CampaignSpec(
         name="soak",
@@ -93,6 +110,7 @@ def full_specs(seed: int = 0) -> List[CampaignSpec]:
 GRIDS: Dict[str, object] = {
     "quick": quick_specs,
     "paper": paper_specs,
+    "thresholds": thresholds_specs,
     "soak": soak_specs,
     "full": full_specs,
 }

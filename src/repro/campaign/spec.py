@@ -64,14 +64,20 @@ class CampaignSpec:
     flips_per_trial: int = 1
     seed: int = 0
     measure_overhead: bool = False
+    #: detection-threshold sweep (thresholded targets only, e.g. the EB
+    #: rel_bound): () = each target's default bound
+    rel_bounds: Tuple[float, ...] = ()
 
     def __post_init__(self):
         if self.samples < 1:
             raise ValueError("samples must be >= 1")
         if self.flips_per_trial < 1:
             raise ValueError("flips_per_trial must be >= 1")
+        if any(b <= 0 for b in self.rel_bounds):
+            raise ValueError("rel_bounds must be positive")
         # tolerate lists from JSON round-trips / hand-written specs
-        for f in ("targets", "fault_models", "bit_bands", "dtypes"):
+        for f in ("targets", "fault_models", "bit_bands", "dtypes",
+                  "rel_bounds"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -100,6 +106,8 @@ class CellPlan:
     flips: int
     seed: int
     measure_overhead: bool
+    #: detection-threshold override (None = the target's default bound)
+    rel_bound: Optional[float] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -113,9 +121,11 @@ def cell_seed(spec_seed: int, cell_id: str) -> int:
 
 
 def _cell_id(target: str, model: str, band: str,
-             shape: Sequence[int], dtype: str) -> str:
+             shape: Sequence[int], dtype: str,
+             rel_bound: Optional[float] = None) -> str:
     s = "x".join(str(d) for d in shape) if shape else "default"
-    return f"{target}/{model}/{band}/{s}/{dtype}"
+    base = f"{target}/{model}/{band}/{s}/{dtype}"
+    return base if rel_bound is None else f"{base}/rb{rel_bound:g}"
 
 
 def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
@@ -129,12 +139,19 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
     plans: List[CellPlan] = []
     skipped: List[dict] = []
     seen = set()
+    bounds_or_default = spec.rel_bounds if spec.rel_bounds else (None,)
     for tname, model, band, dtype in itertools.product(
             spec.targets, spec.fault_models, spec.bit_bands, spec.dtypes):
         target = get_target(tname)   # unknown target = hard error
         shapes = spec.shapes if spec.shapes else target.default_shapes
-        for shape in shapes:
-            cid = _cell_id(tname, model, band, shape, dtype)
+        bounds = bounds_or_default if target.thresholded else (None,)
+        if spec.rel_bounds and not target.thresholded:
+            skipped.append({
+                "cell_id": _cell_id(tname, model, band, (), dtype),
+                "reason": f"target {tname} has no detection threshold "
+                          f"(rel_bounds sweep ignored)"})
+        for shape, rel_bound in itertools.product(shapes, bounds):
+            cid = _cell_id(tname, model, band, shape, dtype, rel_bound)
             if cid in seen:
                 continue
             seen.add(cid)
@@ -177,5 +194,6 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
                 samples=spec.samples, clean_samples=clean,
                 flips=spec.flips_per_trial,
                 seed=cell_seed(spec.seed, cid),
-                measure_overhead=spec.measure_overhead))
+                measure_overhead=spec.measure_overhead,
+                rel_bound=rel_bound))
     return plans, skipped

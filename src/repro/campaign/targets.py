@@ -26,11 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.campaign.spec import CellPlan, DLRM_GEMM_SHAPES
-from repro.core import abft_embedding as ae
 from repro.core import abft_gemm as ag
 from repro.core import abft_kvcache as kv
 from repro.core.inject import (bit_band, random_bitflip, random_bitflips,
                                random_value)
+from repro.protect.ops import EMBEDDING_BAG, KV_CACHE, QGEMM
+from repro.protect.plan import ResolvedRule
 
 
 def apply_fault(key: jax.Array, x: jax.Array, plan: CellPlan) -> jax.Array:
@@ -63,6 +64,9 @@ class InjectableTarget:
     #: False for targets whose trial injects into a single element —
     #: expand() skips flips_per_trial > 1 plans for them
     multi_flip: bool = True
+    #: True for targets with a tunable detection threshold (the EB
+    #: rel_bound) — expand() sweeps spec.rel_bounds over them only
+    thresholded: bool = False
 
 
 TARGETS: dict = {}
@@ -91,20 +95,27 @@ def _gemm_build(plan: CellPlan, key: jax.Array):
     ka, kb = jax.random.split(key)
     a = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)
     b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
-    return {"a": a, "b": b, "checksum": ag.encode_weight_checksum(b)}
+    # serving memory model: checksum lanes encoded ONCE from clean weights
+    packed = QGEMM.encode(b)
+    return {"a": a, "b": b, "lanes": packed[:, b.shape[1]:],
+            "checksum": ag.encode_weight_checksum(b)}
+
+
+def _gemm_repack(state, b_bad):
+    """B' with the (clean, amortized) checksum lanes riding along."""
+    return jnp.concatenate([b_bad, state["lanes"]], axis=1)
 
 
 def _gemm_b_trial(state, plan: CellPlan, key: jax.Array):
     b_bad = apply_fault(key, state["b"], plan)
-    out = ag.abft_qgemm(state["a"], b_bad, checksum=state["checksum"])
-    return out.err_count > 0, jnp.any(b_bad != state["b"])
+    _, check = QGEMM(_gemm_repack(state, b_bad), state["a"])
+    return check.err_count > 0, jnp.any(b_bad != state["b"])
 
 
 def _gemm_clean(state, plan: CellPlan, key: jax.Array):
     del key
-    out = ag.abft_qgemm(state["a"], state["b"],
-                        checksum=state["checksum"])
-    return out.err_count > 0
+    _, check = QGEMM(_gemm_repack(state, state["b"]), state["a"])
+    return check.err_count > 0
 
 
 def _gemm_bound(plan: CellPlan):
@@ -118,15 +129,14 @@ def _gemm_bound(plan: CellPlan):
 
 
 def _gemm_overhead(state, plan: CellPlan):
-    a, b = state["a"], state["b"]
-    b_packed = ag.pack_encoded_b(b, state["checksum"])
+    a = state["a"]
+    b_packed = _gemm_repack(state, state["b"])
 
     def protected():
-        return ag.abft_qgemm_packed(a, b_packed).c
+        return QGEMM(b_packed, a)[0]
 
     def unprotected():
-        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
-                                   preferred_element_type=jnp.int32)
+        return QGEMM.unprotected(b_packed, a)
 
     return protected, unprotected
 
@@ -138,27 +148,26 @@ register_target(InjectableTarget(
     analytic_bound=_gemm_bound, overhead=_gemm_overhead))
 
 
+_UNFUSED = ResolvedRule(scheme="unfused")
+
+
 def _gemm_unfused_trial(state, plan: CellPlan, key: jax.Array):
     # BLAS-2 verification path (§IV-A3 step ③), amortized clean encode
     b_bad = apply_fault(key, state["b"], plan)
-    c = jax.lax.dot_general(state["a"], b_bad, (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.int32)
-    check_col = jax.lax.dot_general(
-        state["a"], state["checksum"], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    _, err = ag.verify_rows(c, check_col)
-    return err > 0, jnp.any(b_bad != state["b"])
+    _, check = QGEMM(_gemm_repack(state, b_bad), state["a"],
+                     rule=_UNFUSED)
+    return check.err_count > 0, jnp.any(b_bad != state["b"])
 
 
 def _gemm_unfused_overhead(state, plan: CellPlan):
-    a, b = state["a"], state["b"]
+    a = state["a"]
+    b_packed = _gemm_repack(state, state["b"])
 
     def protected():
-        return ag.abft_qgemm_unfused(a, b).c
+        return QGEMM(b_packed, a, rule=_UNFUSED)[0]
 
     def unprotected():
-        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
-                                   preferred_element_type=jnp.int32)
+        return QGEMM.unprotected(b_packed, a)
 
     return protected, unprotected
 
@@ -222,7 +231,17 @@ def _eb_build(plan: CellPlan, key: jax.Array):
     alphas = jax.random.uniform(ka, (rows,), jnp.float32, 1e-2, 2e-2)
     betas = jax.random.uniform(kb, (rows,), jnp.float32, 0.3, 0.7)
     return {"table": table, "alphas": alphas, "betas": betas,
-            "rowsums": ae.table_rowsums(table)}
+            "rowsums": EMBEDDING_BAG.encode((table, alphas, betas))[-1]}
+
+
+def _eb_rule(plan: CellPlan) -> ResolvedRule:
+    """The cell's Eq. (5) threshold as a plan rule (None = default)."""
+    return ResolvedRule(rel_bound=plan.rel_bound)
+
+
+def _eb_enc(state):
+    return (state["table"], state["alphas"], state["betas"],
+            state["rowsums"])
 
 
 def _eb_trial(state, plan: CellPlan, key: jax.Array):
@@ -237,31 +256,30 @@ def _eb_trial(state, plan: CellPlan, key: jax.Array):
     elem = table[row, col]
     bad = apply_fault(k4, elem[None], plan)[0]
     table_bad = table.at[row, col].set(bad)
-    out = ae.abft_embedding_bag(table_bad, state["alphas"],
-                                state["betas"], idx, state["rowsums"])
-    return out.err_count > 0, bad != elem
+    _, check = EMBEDDING_BAG(
+        (table_bad, state["alphas"], state["betas"], state["rowsums"]),
+        idx, rule=_eb_rule(plan))
+    return check.err_count > 0, bad != elem
 
 
 def _eb_clean(state, plan: CellPlan, key: jax.Array):
     rows, dim, bags, pool = plan.shape
     idx = jax.random.randint(key, (bags, pool), 0, rows, jnp.int32)
-    out = ae.abft_embedding_bag(state["table"], state["alphas"],
-                                state["betas"], idx, state["rowsums"])
-    return out.err_count > 0
+    _, check = EMBEDDING_BAG(_eb_enc(state), idx, rule=_eb_rule(plan))
+    return check.err_count > 0
 
 
 def _eb_overhead(state, plan: CellPlan):
     rows, dim, bags, pool = plan.shape
     idx = jax.random.randint(jax.random.key(0), (bags, pool), 0, rows,
                              jnp.int32)
-    t, a, b = state["table"], state["alphas"], state["betas"]
-    rs = state["rowsums"]
+    enc, rule = _eb_enc(state), _eb_rule(plan)
 
     def protected():
-        return ae.abft_embedding_bag(t, a, b, idx, rs).r
+        return EMBEDDING_BAG(enc, idx, rule=rule)[0]
 
     def unprotected():
-        return ae.embedding_bag(t, a, b, idx)
+        return EMBEDDING_BAG.unprotected(enc, idx)
 
     return protected, unprotected
 
@@ -270,7 +288,7 @@ register_target(InjectableTarget(
     name="embedding_bag",
     build=_eb_build, trial=_eb_trial, clean=_eb_clean,
     default_shapes=((10_000, 128, 10, 100),), shape_arity=4,
-    overhead=_eb_overhead, multi_flip=False))
+    overhead=_eb_overhead, multi_flip=False, thresholded=True))
 
 
 # ---------------------------------------------------------------------------
@@ -284,7 +302,7 @@ register_target(InjectableTarget(
 def _kv_build(plan: CellPlan, key: jax.Array):
     b, heads, s, dh = plan.shape
     x = jax.random.normal(key, (b, heads, s, dh), jnp.float32)
-    return {"kv": kv.quantize_kv_rows(x)}
+    return {"kv": KV_CACHE.encode(x)}
 
 
 def _kv_trial(state, plan: CellPlan, key: jax.Array):
@@ -320,10 +338,10 @@ def _kv_overhead(state, plan: CellPlan):
 
     def protected():
         _, err = kv.verify_kv(q)
-        return kv.dequantize_kv(q), err
+        return KV_CACHE.dequantize(q), err
 
     def unprotected():
-        return kv.dequantize_kv(q)
+        return KV_CACHE.dequantize(q)
 
     return protected, unprotected
 
@@ -358,13 +376,15 @@ def _decode_build(plan: CellPlan, key: jax.Array):
     from repro.launch.steps import make_decode_step, make_prefill_step
     from repro.layers.common import Ctx
     from repro.models.base import build_model
+    from repro.protect import default_plan, unprotected_plan
     from repro.sharding import values_of
 
     batch, prompt_len = plan.shape
     cfg = reduce_cfg(get_arch(DECODE_ARCH))
     cache_len = prompt_len + cfg.meta_tokens + 8
     model = build_model(cfg, max_pos=cache_len + 8)
-    ctx = Ctx(quant=True, abft=True, compute_dtype=jnp.bfloat16)
+    ctx = Ctx(quant=True, plan=default_plan(),
+              compute_dtype=jnp.bfloat16)
     params = values_of(
         jax.jit(lambda k: model.init(k, quant=True))(key))
 
@@ -388,7 +408,8 @@ def _decode_build(plan: CellPlan, key: jax.Array):
              "victim_idx": victim_idx, "cache": cache, "tok": tok,
              "pos": pos, "decode": decode, "clean_tok": clean_tok}
     if plan.measure_overhead:
-        ctx_off = Ctx(quant=True, abft=False, compute_dtype=jnp.bfloat16)
+        ctx_off = Ctx(quant=True, plan=unprotected_plan(),
+                      compute_dtype=jnp.bfloat16)
         state["decode_off"] = make_decode_step(model, ctx_off)
         state["params"] = params
     return state
@@ -401,8 +422,9 @@ def _decode_trial(state, plan: CellPlan, key: jax.Array):
     params = jax.tree_util.tree_unflatten(state["treedef"], leaves)
     tok, _, metrics = state["decode"](params, state["cache"],
                                       state["tok"], state["pos"])
-    errs = metrics.get("abft/gemm_errors", 0) \
-        + metrics.get("abft/eb_errors", 0)
+    errs = metrics.get("abft/qgemm_errors", 0) \
+        + metrics.get("abft/embedding_bag_errors", 0) \
+        + metrics.get("abft/kv_cache_errors", 0)
     return jnp.asarray(errs) > 0, jnp.any(tok != state["clean_tok"])
 
 
@@ -412,8 +434,9 @@ def _decode_clean(state, plan: CellPlan, key: jax.Array):
                                           state["leaves"])
     _, _, metrics = state["decode"](params, state["cache"], state["tok"],
                                     state["pos"])
-    errs = metrics.get("abft/gemm_errors", 0) \
-        + metrics.get("abft/eb_errors", 0)
+    errs = metrics.get("abft/qgemm_errors", 0) \
+        + metrics.get("abft/embedding_bag_errors", 0) \
+        + metrics.get("abft/kv_cache_errors", 0)
     return jnp.asarray(errs) > 0
 
 

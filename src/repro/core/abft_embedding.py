@@ -26,6 +26,10 @@ import jax.numpy as jnp
 #: paper §V-D: loose relative bound to trade false positives for low-bit misses.
 REL_BOUND = 1e-5
 
+#: package-level alias (the name ``repro.core`` exports — "rel bound" alone
+#: is ambiguous next to the float-GEMM bound).
+EB_REL_BOUND = REL_BOUND
+
 
 class AbftEbOut(NamedTuple):
     r: jax.Array           # f32 [bags, d]

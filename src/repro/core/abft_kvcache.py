@@ -93,11 +93,17 @@ def update_kv_row(kv: QuantKV, batch_idx: jax.Array, pos: jax.Array,
 
 def attend_quantized(q_heads: jax.Array, kv_k: QuantKV, kv_v: QuantKV,
                      pos: jax.Array, *, n_heads: int, n_kv: int,
-                     verify: bool = True):
+                     verify: bool = True, window=None,
+                     prefix_global: int = 0):
     """One-token decode attention straight off the int8 cache.
 
     q_heads [B, H, dh] (bf16/f32); kv_* int8 caches [B, Kv, S, *].
     Returns (out [B, H, dh] f32, err_count int32).
+
+    ``window`` (sliding-window size, may be a traced scalar) and
+    ``prefix_global`` (always-visible prefix length) mirror the masking of
+    ``layers.attention.attention_decode`` so the quantized cache is a
+    drop-in for windowed archs.
 
     Scores expand affinely without dequantizing the whole cache:
         q·k_row = α_row (q·k_q_row) + β_row Σ_d q_d
@@ -126,6 +132,11 @@ def attend_quantized(q_heads: jax.Array, kv_k: QuantKV, kv_v: QuantKV,
 
     kv_pos_ = jnp.arange(s_max)[None, None, None, :]
     valid = kv_pos_ <= pos[:, None, None, None]
+    if window is not None:
+        in_win = (pos[:, None, None, None] - kv_pos_) < window
+        if prefix_global > 0:
+            in_win |= kv_pos_ < prefix_global
+        valid &= in_win
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)                       # [B, Kv, g, S]
 

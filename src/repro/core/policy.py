@@ -2,8 +2,19 @@
 
 Every ABFT-protected op contributes to a :class:`FaultReport` — a small int32
 pytree threaded functionally through layers, models, and step functions (it
-scans/pmaps/pjits like any other pytree).  Policies decide what a step does
-when ``report.total_errors() > 0``:
+scans/pmaps/pjits like any other pytree).  The report is **keyed by op kind**
+(``qgemm``, ``float_gemm``, ``embedding_bag``, ``kv_cache``, plus anything
+registered via :func:`register_op_kind`): per-kind check and error counters
+ride in dicts, so a new protected operator extends the report by registering
+a name instead of growing hard-coded fields.
+
+Scan/vmap safety: pytree structure must be static under tracing, so every
+constructor (:func:`empty_report`, :func:`op_report`) materializes counters
+for ALL registered kinds — a scan carry built from ``empty_report()`` always
+matches the body's merged reports.  Register custom kinds at import time,
+before tracing.
+
+Policies decide what a step does when ``report.total_errors() > 0``:
 
 - ``log``       — surface counts in step metrics (default; zero control flow)
 - ``recompute`` — re-run the op under ``lax.cond`` (paper §I: an error that
@@ -16,69 +27,161 @@ when ``report.total_errors() > 0``:
                   request, not the server)
 
 ``POLICIES`` maps the names to wrappers; ``apply_policy(name, op)`` is the
-string-driven entry point configs/serving use.
+string-driven entry point.  The declarative front door over all of this is
+:mod:`repro.protect` — per-op-pattern :class:`~repro.protect.ProtectionPlan`
+rules resolve to one of these policies per protected call site.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
+
+#: built-in op kinds — one per registered protected-op adapter
+#: (repro.protect.ops registers its adapters against these names).
+_DEFAULT_OP_KINDS = ("qgemm", "float_gemm", "embedding_bag", "kv_cache")
+_OP_KINDS = list(_DEFAULT_OP_KINDS)
+
+
+def op_kinds() -> tuple:
+    """Currently registered op kinds (report key set)."""
+    return tuple(_OP_KINDS)
+
+
+def register_op_kind(name: str) -> None:
+    """Add an op kind to the report key set.  Call at import time (before
+    any tracing) so report pytree structure stays static."""
+    if name not in _OP_KINDS:
+        _OP_KINDS.append(name)
+
+
+def _zero() -> jax.Array:
+    return jnp.zeros((), jnp.int32)
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class FaultReport:
-    gemm_checks: jax.Array
-    gemm_errors: jax.Array
-    eb_checks: jax.Array
-    eb_errors: jax.Array
-    recomputes: jax.Array
+    """Per-op-kind ABFT counters.
+
+    ``checks[name]`` / ``errors[name]`` count verified calls and residual
+    (post-policy) errors per op kind; ``retries`` and ``corrections``
+    aggregate the recompute/correct policy actions across all kinds.
+    """
+    checks: Dict[str, jax.Array]
+    errors: Dict[str, jax.Array]
+    retries: jax.Array
+    corrections: jax.Array
 
     def tree_flatten(self):
-        return ((self.gemm_checks, self.gemm_errors, self.eb_checks,
-                 self.eb_errors, self.recomputes), None)
+        names = tuple(sorted(self.checks))
+        children = (tuple(self.checks[n] for n in names)
+                    + tuple(self.errors[n] for n in names)
+                    + (self.retries, self.corrections))
+        return children, names
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
+    def tree_unflatten(cls, names, children):
+        k = len(names)
+        return cls(dict(zip(names, children[:k])),
+                   dict(zip(names, children[k:2 * k])),
+                   children[2 * k], children[2 * k + 1])
+
+    # ------------------------------ queries ---------------------------------
+
+    def _get(self, table: Dict[str, jax.Array], name: str):
+        return table.get(name, _zero())
 
     def total_errors(self) -> jax.Array:
-        return self.gemm_errors + self.eb_errors
+        return sum(self.errors.values(), _zero())
+
+    def total_checks(self) -> jax.Array:
+        return sum(self.checks.values(), _zero())
 
     def as_metrics(self) -> dict:
-        return {
-            "abft/gemm_checks": self.gemm_checks,
-            "abft/gemm_errors": self.gemm_errors,
-            "abft/eb_checks": self.eb_checks,
-            "abft/eb_errors": self.eb_errors,
-            "abft/recomputes": self.recomputes,
-        }
+        m = {}
+        for n in sorted(self.checks):
+            m[f"abft/{n}_checks"] = self.checks[n]
+            m[f"abft/{n}_errors"] = self.errors[n]
+        m["abft/retries"] = self.retries
+        m["abft/corrections"] = self.corrections
+        # legacy aliases (pre-protect metric names; gemm = int8 + float)
+        m["abft/gemm_checks"] = self.gemm_checks
+        m["abft/gemm_errors"] = self.gemm_errors
+        m["abft/eb_checks"] = self.eb_checks
+        m["abft/eb_errors"] = self.eb_errors
+        m["abft/recomputes"] = self.retries
+        return m
+
+    # legacy field names, kept as views over the keyed counters ---------------
+
+    @property
+    def gemm_checks(self):
+        return self._get(self.checks, "qgemm") + self._get(self.checks,
+                                                           "float_gemm")
+
+    @property
+    def gemm_errors(self):
+        return self._get(self.errors, "qgemm") + self._get(self.errors,
+                                                           "float_gemm")
+
+    @property
+    def eb_checks(self):
+        return self._get(self.checks, "embedding_bag")
+
+    @property
+    def eb_errors(self):
+        return self._get(self.errors, "embedding_bag")
+
+    @property
+    def recomputes(self):
+        return self.retries
 
 
 def empty_report() -> FaultReport:
-    z = jnp.zeros((), jnp.int32)
-    return FaultReport(z, z, z, z, z)
+    z = _zero()
+    return FaultReport({n: z for n in _OP_KINDS},
+                       {n: z for n in _OP_KINDS}, z, z)
+
+
+def op_report(name: str, err_count, *, checks=1, retries=None,
+              corrections=None) -> FaultReport:
+    """A report with one op kind's counters set (all other kinds zero)."""
+    if name not in _OP_KINDS:
+        raise KeyError(f"unregistered op kind {name!r}; have {_OP_KINDS} "
+                       "(register_op_kind at import time)")
+    rep = empty_report()
+    rep.checks[name] = jnp.asarray(checks, jnp.int32)
+    rep.errors[name] = jnp.asarray(err_count, jnp.int32)
+    if retries is not None:
+        rep.retries = jnp.asarray(retries, jnp.int32)
+    if corrections is not None:
+        rep.corrections = jnp.asarray(corrections, jnp.int32)
+    return rep
 
 
 def gemm_report(err_count: jax.Array, recomputes=None) -> FaultReport:
-    z = jnp.zeros((), jnp.int32)
-    r = z if recomputes is None else recomputes.astype(jnp.int32)
-    return FaultReport(jnp.ones((), jnp.int32), err_count.astype(jnp.int32),
-                       z, z, r)
+    """Legacy helper: one verified int8 GEMM."""
+    return op_report("qgemm", err_count, retries=recomputes)
 
 
 def eb_report(err_count: jax.Array) -> FaultReport:
-    z = jnp.zeros((), jnp.int32)
-    return FaultReport(z, z, jnp.ones((), jnp.int32),
-                       err_count.astype(jnp.int32), z)
+    """Legacy helper: one verified EmbeddingBag."""
+    return op_report("embedding_bag", err_count)
 
 
 def merge_reports(*reports: FaultReport) -> FaultReport:
     if not reports:
         return empty_report()
-    return jax.tree.map(lambda *xs: sum(xs), *reports)
+    names = sorted(set().union(*(r.checks.keys() for r in reports)))
+    z = _zero()
+    return FaultReport(
+        {n: sum((r._get(r.checks, n) for r in reports), z) for n in names},
+        {n: sum((r._get(r.errors, n) for r in reports), z) for n in names},
+        sum((r.retries for r in reports), z),
+        sum((r.corrections for r in reports), z))
 
 
 def with_recompute(op: Callable, max_retries: int = 1):
@@ -152,19 +255,21 @@ def is_fault_abort(exc: BaseException) -> bool:
     return isinstance(exc, FaultAbort) or "FaultAbort" in repr(exc)
 
 
+def abort_if_errors(err) -> None:
+    """Host callback body for policy ``abort`` (shared with repro.protect)."""
+    if int(err) > 0:
+        raise FaultAbort(f"ABFT detected {int(err)} corrupted op(s)")
+
+
 def with_abort(op: Callable):
     """Policy ``abort``: host-level raise when ``err > 0`` (serving: fail
     the REQUEST, never the server).  Eager callers catch
     :class:`FaultAbort`; jitted callers get it re-wrapped by the runtime,
     so request boundaries use :func:`is_fault_abort` on the caught
     exception."""
-    def _check(err):
-        if int(err) > 0:
-            raise FaultAbort(f"ABFT detected {int(err)} corrupted op(s)")
-
     def wrapped(*args, **kwargs):
         out, err = op(*args, **kwargs)
-        jax.debug.callback(_check, err)
+        jax.debug.callback(abort_if_errors, err)
         return out, err, jnp.zeros((), jnp.int32)
 
     return wrapped

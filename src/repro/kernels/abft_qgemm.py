@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.abft_gemm import LANE, MOD
+from repro.core import LANE, MOD
 
 # jax < 0.5 names this TPUCompilerParams; newer releases dropped the prefix.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) \

@@ -4,6 +4,9 @@
 executes the kernel body on CPU for validation) vs. the pure-XLA path (the
 op set the dry-run lowers — identical math, real HLO cost model).  On a CPU
 container the default is the XLA path; on TPU it is the Pallas path.
+
+These wrappers are the operator surface the :mod:`repro.protect` adapters
+dispatch to — layer code should not call them directly.
 """
 from __future__ import annotations
 
@@ -12,8 +15,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import abft_gemm as _ag
-from repro.core import abft_embedding as _ae
+from repro.core import (AbftEbOut, EB_REL_BOUND, LANE,
+                        abft_embedding_bag as _abft_eb_core,
+                        encode_activation_checksum)
 from repro.kernels import ref as _ref
 
 
@@ -26,18 +30,38 @@ def _on_tpu() -> bool:
 
 def abft_qgemm(a_q: jax.Array, b_packed: jax.Array, *,
                use_pallas: Optional[bool] = None, interpret: bool = False,
+               with_colcheck: bool = False,
                bm: int = 128, bn: int = 128, bk: int = 128):
-    """ABFT int8 GEMM against a packed B'. -> (C int32, err_rows int32 [m])."""
+    """ABFT int8 GEMM against a packed B'. -> (C int32, err_rows int32 [m]).
+
+    ``with_colcheck=True`` additionally returns the **exact expected int32
+    column sums of C** — ``encode_activation_checksum(A) @ B`` — the second
+    encoding axis :func:`repro.core.correct_single_error` needs to localize
+    and repair a single flagged cell.  The column product is a k×n matvec
+    (one extra GEMM row's worth of MACs) and runs in int32 (an int8 column
+    sum of A overflows int8, so it cannot ride the packed operand); it is
+    therefore gated behind the flag and only paid by ``correct``-policy
+    call sites.
+    """
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     if use_pallas or interpret:
         from repro.kernels.abft_qgemm import abft_qgemm_pallas
-        return abft_qgemm_pallas(a_q, b_packed, bm=bm, bn=bn, bk=bk,
-                                 interpret=interpret or not _on_tpu())
-    return _ref.abft_qgemm_ref(a_q, b_packed)
+        c, err_rows = abft_qgemm_pallas(a_q, b_packed, bm=bm, bn=bn, bk=bk,
+                                        interpret=interpret or not _on_tpu())
+    else:
+        c, err_rows = _ref.abft_qgemm_ref(a_q, b_packed)
+    if not with_colcheck:
+        return c, err_rows
+    n = b_packed.shape[1] - LANE
+    col_a = encode_activation_checksum(a_q)                   # int32 [k]
+    col_check = jax.lax.dot_general(
+        col_a, b_packed[:, :n].astype(jnp.int32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return c, err_rows, col_check
 
 
 def abft_embedding_bag(table_q, alphas, betas, indices, rowsums,
-                       weights=None, *, rel_bound: float = _ae.REL_BOUND,
+                       weights=None, *, rel_bound: float = EB_REL_BOUND,
                        use_pallas: Optional[bool] = None,
                        interpret: bool = False):
     """EB forward + Eq. (5) check. -> AbftEbOut(r, err_bags, err_count)."""
@@ -60,9 +84,9 @@ def abft_embedding_bag(table_q, alphas, betas, indices, rowsums,
                                     + d * jnp.abs(b)), axis=-1)
         tol = rel_bound * jnp.maximum(mag, 1.0)
         err_bags = jnp.abs(rsum - csum) > tol
-        return _ae.AbftEbOut(r, err_bags, jnp.sum(err_bags).astype(jnp.int32))
-    return _ae.abft_embedding_bag(table_q, alphas, betas, indices, rowsums,
-                                  weights, rel_bound)
+        return AbftEbOut(r, err_bags, jnp.sum(err_bags).astype(jnp.int32))
+    return _abft_eb_core(table_q, alphas, betas, indices, rowsums,
+                         weights, rel_bound)
 
 
 def quantize_rows(x: jax.Array, *, use_pallas: Optional[bool] = None,

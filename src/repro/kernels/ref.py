@@ -4,8 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.abft_gemm import LANE, MOD
-from repro.core.abft_embedding import embedding_bag
+from repro.core import LANE, MOD, embedding_bag
 
 
 def int8_dot(a_q: jax.Array, b_q: jax.Array) -> jax.Array:

@@ -2,15 +2,24 @@
 
 ``python -m repro.launch.serve --arch llama3.2-1b --smoke``
 
-Runs the paper's quantized pipeline end to end: prefill a batch of
-requests, decode N tokens with the sharded KV cache, ABFT-verify every
-GEMM / embedding lookup, apply the detect->policy (abort the *request*,
-never the server), and report per-phase latency + fault counters.
+Runs the paper's quantized pipeline end to end on the declarative
+protection API: build a :class:`repro.protect.ProtectionPlan` from the CLI
+(``--plan``), wrap the model's prefill/decode with
+:func:`repro.protect.protect`, prefill a batch of requests, decode N tokens
+with the sharded KV cache, and report per-phase latency + fault counters.
+Which ops are verified, with what scheme/policy/threshold, is purely a plan
+choice — e.g.::
+
+    --plan "*:policy=log"                        # default protection
+    --plan "embedding_bag:off"                   # EB unprotected
+    --plan "*:policy=recompute,kv_cache:on"      # retry faults, int8 cache
+    --plan "qgemm:policy=correct"                # row+col checksum repair
 """
 from __future__ import annotations
 
 # ruff: noqa: E402
 import argparse
+import functools
 import logging
 import os
 import time
@@ -23,8 +32,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-tokens", type=int, default=32)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--plan", default=None,
+                    help="protection plan, e.g. "
+                         "'*:policy=recompute,embedding_bag:off' "
+                         "(default: log-policy protection of qgemm + EB)")
     ap.add_argument("--no-abft", action="store_true",
-                    help="unprotected baseline (overhead comparisons)")
+                    help="unprotected baseline (= --plan '*:off')")
     ap.add_argument("--inject-step", type=int, default=-1,
                     help="flip a bit in a weight before this decode step "
                          "(fault-injection demo)")
@@ -41,12 +54,24 @@ def main():
 
     from repro.configs.registry import get_arch
     from repro.core.inject import flip_bit_in_leaf
-    from repro.launch.steps import make_decode_step, make_prefill_step
-    from repro.layers.common import Ctx
     from repro.models.base import build_model
+    from repro.protect import (ProtectionPlan, default_plan, protect,
+                               unprotected_plan)
 
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     log = logging.getLogger("repro.serve")
+
+    if args.plan is not None and args.no_abft:
+        ap.error("--no-abft and --plan conflict; start the plan from "
+                 "'*:off' instead (e.g. --plan '*:off,kv_cache:on')")
+    if args.plan is not None:
+        plan = default_plan().with_rules(
+            *ProtectionPlan.parse(args.plan).rules)
+    elif args.no_abft:
+        plan = unprotected_plan()
+    else:
+        plan = default_plan()
+    log.info("protection plan: %s", plan.describe())
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -55,15 +80,26 @@ def main():
 
     cache_len = args.prompt_len + args.decode_tokens + cfg.meta_tokens + 8
     model = build_model(cfg, max_pos=cache_len + 8)
-    ctx = Ctx(quant=True, abft=not args.no_abft,
-              compute_dtype=jnp.bfloat16)
 
     params = jax.jit(lambda k: model.init(k, quant=True))(jax.random.key(0))
     from repro.sharding import values_of
     params = values_of(params)
 
-    prefill = jax.jit(make_prefill_step(model, ctx, cache_len=cache_len))
-    decode = jax.jit(make_decode_step(model, ctx), donate_argnums=(1,))
+    # the protected apply functions: plan-resolved Ctx, (out, report) calls
+    prefill_p = protect(model.prefill, plan, compute_dtype=jnp.bfloat16)
+    decode_p = protect(model.decode, plan, compute_dtype=jnp.bfloat16)
+
+    @jax.jit
+    def prefill(params, batch):
+        (logits, cache), rep = prefill_p(params, batch, cache_len=cache_len)
+        tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1).astype(jnp.int32)
+        return tok, cache, rep.as_metrics()
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def decode(params, cache, tokens, pos):
+        (logits, new_cache), rep = decode_p(params, cache, tokens, pos)
+        tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1).astype(jnp.int32)
+        return tok, new_cache, rep.as_metrics()
 
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(
@@ -91,7 +127,7 @@ def main():
     if cfg.family == "vlm":
         pos = pos + cfg.n_patches
     outputs = [np.asarray(tok)]
-    faults = 0
+    faults = retries = 0
     t0 = time.time()
     for step in range(args.decode_tokens):
         if step == args.inject_step:
@@ -99,18 +135,20 @@ def main():
             log.info(">>> injected bit flip into %s", where)
         tok, cache, metrics = decode(params, cache, tok, pos)
         errs = int(metrics.get("abft/gemm_errors", 0)) \
-            + int(metrics.get("abft/eb_errors", 0))
+            + int(metrics.get("abft/eb_errors", 0)) \
+            + int(metrics.get("abft/kv_cache_errors", 0))
+        retries += int(metrics.get("abft/retries", 0))
         if errs:
             faults += 1
             log.info("step %d: ABFT detected %d corrupted op(s) — request "
-                     "flagged for recompute", step, errs)
+                     "flagged (plan policy applied)", step, errs)
         outputs.append(np.asarray(tok))
         pos = pos + 1
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
-    log.info("decode: %d tokens in %.3fs (%.1f tok/s/seq)  faulty_steps=%d",
-             args.decode_tokens, t_decode,
-             args.decode_tokens / max(t_decode, 1e-9), faults)
+    log.info("decode: %d tokens in %.3fs (%.1f tok/s/seq)  faulty_steps=%d"
+             "  retries=%d", args.decode_tokens, t_decode,
+             args.decode_tokens / max(t_decode, 1e-9), faults, retries)
     log.info("sample output ids: %s", np.stack(outputs, 1)[0][:16])
 
 

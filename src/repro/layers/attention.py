@@ -24,11 +24,25 @@ import jax.numpy as jnp
 from repro.core import policy
 from repro.layers.common import Ctx
 from repro.layers.linear import apply_linear, maybe_qlinear_init
+from repro.protect.ops import KV_CACHE, QuantKV
+from repro.protect.runtime import kv_rule, protected_call
 from repro.layers.norms import headnorm, init_headnorm
 from repro.layers.rope import apply_rope
 from repro.sharding import constrain
 
 NEG_INF = -1e30
+
+
+def _constrain_quant_kv(kv: QuantKV, rules) -> QuantKV:
+    """Sequence-parallel constraints for the int8 cache — same ``kv_seq``
+    layout as the bf16 cache, applied per QuantKV field (the payload has a
+    trailing head dim; the affine params and rowsums do not)."""
+    return QuantKV(
+        q=constrain(kv.q, ("batch", None, "kv_seq", None), rules),
+        alpha=constrain(kv.alpha, ("batch", None, "kv_seq"), rules),
+        beta=constrain(kv.beta, ("batch", None, "kv_seq"), rules),
+        rowsum=constrain(kv.rowsum, ("batch", None, "kv_seq"), rules),
+    )
 
 
 def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
@@ -60,9 +74,9 @@ def _qkv(p, x, x_kv, ctx, *, n_heads, n_kv, head_dim, positions, kv_pos,
          use_rope, rope_theta, rules):
     """Project + norm + rope + repeat-to-H. Returns q,k,v in H-layout."""
     src = x if x_kv is None else x_kv
-    q, r1 = apply_linear(p["wq"], x, ctx)
-    k, r2 = apply_linear(p["wk"], src, ctx)
-    v, r3 = apply_linear(p["wv"], src, ctx)
+    q, r1 = apply_linear(p["wq"], x, ctx, name="attn.wq")
+    k, r2 = apply_linear(p["wk"], src, ctx, name="attn.wk")
+    v, r3 = apply_linear(p["wv"], src, ctx, name="attn.wv")
     q = _split_heads(q, n_heads, head_dim)
     k = _split_heads(k, n_kv, head_dim)
     v = _split_heads(v, n_kv, head_dim)
@@ -165,7 +179,8 @@ def attention(p, x, ctx: Ctx, *, n_heads: int, n_kv: int, head_dim: int,
                           kv_positions=kv_pos, causal=causal, window=window,
                           prefix_global=prefix_global, chunk=chunk)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
-    y, r4 = apply_linear(p["wo"], out.astype(ctx.compute_dtype), ctx)
+    y, r4 = apply_linear(p["wo"], out.astype(ctx.compute_dtype), ctx,
+                         name="attn.wo")
     return y, policy.merge_reports(*reps, r4)
 
 
@@ -175,9 +190,9 @@ def attention_prefill(p, x, ctx: Ctx, *, n_heads, n_kv, head_dim, positions,
     """Prefill: attention() + the populated grouped-layout KV cache, padded
     to ``cache_len``."""
     b, s, _ = x.shape
-    q, r1 = apply_linear(p["wq"], x, ctx)
-    k, r2 = apply_linear(p["wk"], x, ctx)
-    v, r3 = apply_linear(p["wv"], x, ctx)
+    q, r1 = apply_linear(p["wq"], x, ctx, name="attn.wq")
+    k, r2 = apply_linear(p["wk"], x, ctx, name="attn.wk")
+    v, r3 = apply_linear(p["wv"], x, ctx, name="attn.wv")
     q = _split_heads(q, n_heads, head_dim)
     kh = _split_heads(k, n_kv, head_dim)
     vh = _split_heads(v, n_kv, head_dim)
@@ -200,16 +215,28 @@ def attention_prefill(p, x, ctx: Ctx, *, n_heads, n_kv, head_dim, positions,
                           kv_positions=positions, causal=True, window=window,
                           prefix_global=prefix_global, chunk=chunk)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
-    y, r4 = apply_linear(p["wo"], out.astype(ctx.compute_dtype), ctx)
+    y, r4 = apply_linear(p["wo"], out.astype(ctx.compute_dtype), ctx,
+                         name="attn.wo")
     pad = cache_len - s
     kt = kh.transpose(0, 2, 1, 3)            # grouped layout [B,Kv,S,dh]
     vt = vh.transpose(0, 2, 1, 3)
-    cache = {
-        "k": constrain(jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0))),
-                       ("batch", None, "kv_seq", None), ctx.rules),
-        "v": constrain(jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0))),
-                       ("batch", None, "kv_seq", None), ctx.rules),
-    }
+    if kv_rule(ctx).enabled:
+        # plan-selected quantized + checksummed cache (op kind kv_cache):
+        # per-(position, head) int8 rows with rowsum checksums — decode
+        # verifies every read (core.abft_kvcache)
+        kt = jnp.pad(kt.astype(jnp.float32),
+                     ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt.astype(jnp.float32),
+                     ((0, 0), (0, 0), (0, pad), (0, 0)))
+        cache = {"k": _constrain_quant_kv(KV_CACHE.encode(kt), ctx.rules),
+                 "v": _constrain_quant_kv(KV_CACHE.encode(vt), ctx.rules)}
+    else:
+        cache = {
+            "k": constrain(jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                           ("batch", None, "kv_seq", None), ctx.rules),
+            "v": constrain(jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                           ("batch", None, "kv_seq", None), ctx.rules),
+        }
     return y, cache, policy.merge_reports(r1, r2, r3, r4)
 
 
@@ -217,16 +244,20 @@ def attention_decode(p, x, cache, pos, ctx: Ctx, *, n_heads: int, n_kv: int,
                      head_dim: int, rope_theta: float = 10000.0,
                      use_rope: bool = True, window=None,
                      prefix_global: int = 0, cross: bool = False):
-    """One-token decode. x [B,d]; cache {k,v [B,Kv,S,dh]} (seq-sharded);
+    """One-token decode. x [B,d]; cache {k,v [B,Kv,S,dh]} (seq-sharded) —
+    bf16 arrays, or QuantKV when the plan enables kv_cache protection;
     pos [B].  Cross-attention decode attends a static (encoder) cache.
     Returns (y [B,d], new_cache, report)."""
     b, d = x.shape
-    s_max = cache["k"].shape[2]
-    q, r1 = apply_linear(p["wq"], x[:, None, :], ctx)
+    quant_kv = isinstance(cache["k"], QuantKV)
+    s_max = (cache["k"].q if quant_kv else cache["k"]).shape[2]
+    q, r1 = apply_linear(p["wq"], x[:, None, :], ctx, name="attn.wq")
     q = _split_heads(q, n_heads, head_dim)                  # [B,1,H,dh]
     if not cross:
-        k_new, r2 = apply_linear(p["wk"], x[:, None, :], ctx)
-        v_new, r3 = apply_linear(p["wv"], x[:, None, :], ctx)
+        k_new, r2 = apply_linear(p["wk"], x[:, None, :], ctx,
+                                 name="attn.wk")
+        v_new, r3 = apply_linear(p["wv"], x[:, None, :], ctx,
+                                 name="attn.wv")
         k_new = _split_heads(k_new, n_kv, head_dim)
         v_new = _split_heads(v_new, n_kv, head_dim)
         if "q_norm" in p:
@@ -236,23 +267,45 @@ def attention_decode(p, x, cache, pos, ctx: Ctx, *, n_heads: int, n_kv: int,
             q = apply_rope(q, pos[:, None], rope_theta)
             k_new = apply_rope(k_new, pos[:, None], rope_theta)
         bidx = jnp.arange(b)
-        cache = {
-            "k": cache["k"].at[bidx, :, pos].set(
-                k_new[:, 0].astype(cache["k"].dtype)),
-            "v": cache["v"].at[bidx, :, pos].set(
-                v_new[:, 0].astype(cache["v"].dtype)),
-        }
-        cache = {
-            "k": constrain(cache["k"], ("batch", None, "kv_seq", None),
-                           ctx.rules),
-            "v": constrain(cache["v"], ("batch", None, "kv_seq", None),
-                           ctx.rules),
-        }
+        if quant_kv:
+            # append: quantize + checksum the new rows (Alg. 2 style)
+            cache = {
+                "k": _constrain_quant_kv(
+                    KV_CACHE.update(cache["k"], bidx, pos, k_new[:, 0]),
+                    ctx.rules),
+                "v": _constrain_quant_kv(
+                    KV_CACHE.update(cache["v"], bidx, pos, v_new[:, 0]),
+                    ctx.rules),
+            }
+        else:
+            cache = {
+                "k": cache["k"].at[bidx, :, pos].set(
+                    k_new[:, 0].astype(cache["k"].dtype)),
+                "v": cache["v"].at[bidx, :, pos].set(
+                    v_new[:, 0].astype(cache["v"].dtype)),
+            }
+            cache = {
+                "k": constrain(cache["k"], ("batch", None, "kv_seq", None),
+                               ctx.rules),
+                "v": constrain(cache["v"], ("batch", None, "kv_seq", None),
+                               ctx.rules),
+            }
         reports = (r1, r2, r3)
     else:
         if "q_norm" in p:
             q = headnorm(p["q_norm"], q)
         reports = (r1,)
+
+    if quant_kv and not cross:
+        # verified read + affine-expanded attention off the int8 cache;
+        # policy (log/recompute/abort) comes from the plan rule
+        out, r_kv = protected_call(
+            "kv_cache", (cache["k"], cache["v"]), q[:, 0], pos, ctx=ctx,
+            name="attn", n_heads=n_heads, n_kv=n_kv, window=window,
+            prefix_global=prefix_global)
+        out = out.reshape(b, n_heads * head_dim).astype(ctx.compute_dtype)
+        y, r4 = apply_linear(p["wo"], out, ctx, name="attn.wo")
+        return y, cache, policy.merge_reports(*reports, r_kv, r4)
 
     g = n_heads // n_kv
     qg = q.reshape(b, n_kv, g, head_dim)
@@ -275,5 +328,5 @@ def attention_decode(p, x, cache, pos, ctx: Ctx, *, n_heads: int, n_kv: int,
                      cache["v"].astype(jnp.bfloat16),
                      preferred_element_type=jnp.float32)
     out = out.reshape(b, n_heads * head_dim).astype(ctx.compute_dtype)
-    y, r4 = apply_linear(p["wo"], out, ctx)
+    y, r4 = apply_linear(p["wo"], out, ctx, name="attn.wo")
     return y, cache, policy.merge_reports(*reports, r4)

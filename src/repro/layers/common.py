@@ -12,13 +12,18 @@ class Ctx:
     """Per-call layer context (static under jit).
 
     quant=True selects the paper's int8 pipeline (Fig. 1) with ABFT; False is
-    the bf16 training path.  ``abft`` gates verification (off = the paper's
-    "unprotected" baseline for overhead measurements).
+    the bf16 training path.  Protection is governed by ``plan`` (a
+    :class:`repro.protect.ProtectionPlan` — per-op-pattern scheme / policy /
+    threshold rules); when ``plan`` is None the legacy booleans apply:
+    ``abft`` gates int8 GEMM + EB verification (off = the paper's
+    "unprotected" baseline for overhead measurements), ``float_abft`` gates
+    float-GEMM ABFT, and the KV cache stays unprotected.
     """
     rules: Optional[dict] = None          # sharding rules for constrain()
     quant: bool = False                   # int8 serving path
-    abft: bool = True                     # ABFT verification on
-    float_abft: bool = False              # float ABFT on bf16 GEMMs
+    abft: bool = True                     # ABFT verification on (legacy)
+    float_abft: bool = False              # float ABFT on bf16 GEMMs (legacy)
+    plan: Optional[Any] = None            # ProtectionPlan (overrides flags)
     compute_dtype: Any = jnp.bfloat16
     abft_tp_local: bool = False           # per-shard checksums (hillclimb)
     wkv_chunk: int = 0                    # >0: chunked matmul-form WKV6

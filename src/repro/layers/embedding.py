@@ -3,15 +3,19 @@
 A token lookup is an EmbeddingBag with pooling size 1 (paper §III-C); the
 serving path therefore verifies Eq. (5) per token batch.  DLRM's multi-hot
 bags use the same code with pool > 1 and optional per-index weights.
+Verification routes through :func:`repro.protect.protected_call`
+(op kind ``embedding_bag``) so the plan controls on/off, policy, and the
+Eq. (5) ``rel_bound`` per call site.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import abft_embedding as ae
 from repro.core import policy
 from repro.layers.common import Ctx
+from repro.protect import ops as pops
+from repro.protect.runtime import protected_call
 from repro.sharding import LogicalParam, param
 
 
@@ -30,25 +34,22 @@ def init_qembed(key, vocab: int, d: int):
     table = jax.random.randint(k1, (vocab, d), -127, 128, jnp.int8)
     alphas = jax.random.uniform(k2, (vocab,), jnp.float32, 5e-3, 2e-2)
     betas = jax.random.uniform(k3, (vocab,), jnp.float32, -0.1, 0.1)
+    _, _, _, rowsums = pops.EMBEDDING_BAG.encode((table, alphas, betas))
     return {
         "table": LogicalParam(table, ("vocab", "embed")),
         "alphas": LogicalParam(alphas, ("vocab",)),
         "betas": LogicalParam(betas, ("vocab",)),
-        "rowsums": LogicalParam(ae.table_rowsums(table), ("vocab",)),
+        "rowsums": LogicalParam(rowsums, ("vocab",)),
     }
 
 
-def qembed(p, tokens, ctx: Ctx):
+def qembed(p, tokens, ctx: Ctx, name: str = "embed"):
     """tokens [...] int32 -> ([..., d] bf16, report). Pool size 1 EB-ABFT."""
     shape = tokens.shape
     bags = tokens.reshape(-1, 1)
-    if ctx.abft:
-        out = ae.abft_embedding_bag(p["table"], p["alphas"], p["betas"],
-                                    bags, p["rowsums"])
-        r, report = out.r, policy.eb_report(out.err_count)
-    else:
-        r = ae.embedding_bag(p["table"], p["alphas"], p["betas"], bags)
-        report = policy.empty_report()
+    enc = (p["table"], p["alphas"], p["betas"], p["rowsums"])
+    r, report = protected_call("embedding_bag", enc, bags, ctx=ctx,
+                               name=name)
     d = p["table"].shape[-1]
     return r.astype(ctx.compute_dtype).reshape(*shape, d), report
 
@@ -63,14 +64,13 @@ def init_embedding_bag(key, rows: int, d: int):
     return p
 
 
-def embedding_bag_fwd(p, indices, ctx: Ctx, weights=None):
+def embedding_bag_fwd(p, indices, ctx: Ctx, weights=None,
+                      name: str = "tables"):
     """indices [bags, pool] (−1 padded) -> ([bags, d], report)."""
-    if ctx.abft:
-        out = ae.abft_embedding_bag(p["table"], p["alphas"], p["betas"],
-                                    indices, p["rowsums"], weights)
-        return out.r.astype(ctx.compute_dtype), policy.eb_report(out.err_count)
-    r = ae.embedding_bag(p["table"], p["alphas"], p["betas"], indices, weights)
-    return r.astype(ctx.compute_dtype), policy.empty_report()
+    enc = (p["table"], p["alphas"], p["betas"], p["rowsums"])
+    r, report = protected_call("embedding_bag", enc, indices, weights,
+                               ctx=ctx, name=name)
+    return r.astype(ctx.compute_dtype), report
 
 
 def apply_embed(p, tokens, ctx: Ctx):

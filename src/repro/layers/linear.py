@@ -6,6 +6,9 @@ The quantized linear runs Fig. 1 end to end:
   (BEFORE requantization, §IV-B)  ->  rank-1 dequant + bias -> bf16.
 
 Weights are packed once at init/conversion (amortized encoding, §IV-A1).
+All verification goes through :func:`repro.protect.protected_call` — the
+plan in ``ctx`` decides scheme (packed / unfused / Pallas), policy
+(log / recompute / correct / abort), and on/off per call site ``name``.
 """
 from __future__ import annotations
 
@@ -14,12 +17,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import abft_gemm as ag
 from repro.core import policy
-from repro.core.abft_float import abft_gemm_f32, encode_weight_f32
-from repro.kernels import ref as kref
+from repro.kernels import ops as kops
 from repro.layers.common import Ctx
-from repro.sharding import LogicalParam, constrain, param
+from repro.protect import ops as pops
+from repro.protect.runtime import protected_call, rule_for
+from repro.sharding import LogicalParam, param
 
 
 # ----------------------------- bf16 linear ---------------------------------
@@ -35,15 +38,15 @@ def init_linear(key, d_in: int, d_out: int,
     return p
 
 
-def linear(p, x, ctx: Ctx):
+def linear(p, x, ctx: Ctx, name: str = ""):
     """bf16 linear, optional float-ABFT (beyond paper) on the 2D GEMM."""
     w = p["w"].astype(ctx.compute_dtype)
-    if ctx.float_abft:
+    if rule_for(ctx, "float_gemm", name).enabled:
         m_shape = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        out = abft_gemm_f32(x2, w)
-        y = out.c.astype(ctx.compute_dtype).reshape(*m_shape, w.shape[-1])
-        report = policy.gemm_report(out.err_count)
+        c, report = protected_call("float_gemm", (w, None), x2, ctx=ctx,
+                                   name=name)
+        y = c.astype(ctx.compute_dtype).reshape(*m_shape, w.shape[-1])
     else:
         y = jnp.dot(x.astype(ctx.compute_dtype), w,
                     preferred_element_type=ctx.compute_dtype)
@@ -65,9 +68,9 @@ def init_qlinear(key, d_in: int, d_out: int,
     """
     k1, k2 = jax.random.split(key)
     w_q = jax.random.randint(k1, (d_in, d_out), -127, 128, jnp.int8)
-    packed = ag.pack_encoded_b(w_q)                     # [d_in, d_out+128]
+    packed = pops.QGEMM.encode(w_q)                     # [d_in, d_out+128]
     alpha = jax.random.uniform(k2, (d_out,), jnp.float32, 1e-3, 2e-3)
-    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0).astype(jnp.float32)
+    colsum = pops.QGEMM.dequant_colsum(w_q)
     p = {
         "w_packed": LogicalParam(packed, (axes[0], axes[1])),
         "alpha": LogicalParam(alpha, (axes[1],)),
@@ -83,8 +86,8 @@ def quantize_linear(p_f32, axes: Tuple[str, str] = ("embed", "mlp")):
     from repro.quant import quantize_channels
     w = p_f32["w"].value if isinstance(p_f32["w"], LogicalParam) else p_f32["w"]
     q = quantize_channels(jnp.asarray(w, jnp.float32))
-    packed = ag.pack_encoded_b(q.values)
-    colsum = jnp.sum(q.values.astype(jnp.int32), axis=0).astype(jnp.float32)
+    packed = pops.QGEMM.encode(q.values)
+    colsum = pops.QGEMM.dequant_colsum(q.values)
     out = {
         "w_packed": LogicalParam(packed, (axes[0], axes[1])),
         "alpha": LogicalParam(q.alpha, (axes[1],)),
@@ -96,26 +99,19 @@ def quantize_linear(p_f32, axes: Tuple[str, str] = ("embed", "mlp")):
     return out
 
 
-def qlinear(p, x, ctx: Ctx):
+def qlinear(p, x, ctx: Ctx, name: str = ""):
     """int8 ABFT linear: x [..., d_in] -> (y [..., d_out] bf16, report)."""
     packed = p["w_packed"]
     d_in = packed.shape[0]
-    d_out = packed.shape[1] - ag.LANE
+    d_out = packed.shape[1] - pops.QGEMM.lane
     m_shape = x.shape[:-1]
     x2 = x.reshape(-1, d_in)
 
-    # dynamic per-row signed-int8 quantization (kernels/quantize_rows target)
-    x_q, a_alpha, a_beta = kref.quantize_rows_ref(x2)
+    # dynamic per-row signed-int8 quantization (kernels/quantize_rows)
+    x_q, a_alpha, a_beta = kops.quantize_rows(x2)
 
-    if ctx.abft:
-        c, err_rows = kref.abft_qgemm_ref(x_q, packed)   # fused checksum GEMM
-        err_count = jnp.sum(err_rows).astype(jnp.int32)
-        report = policy.gemm_report(err_count)
-    else:
-        c = jax.lax.dot_general(
-            x_q, packed[:, :d_out], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        report = policy.empty_report()
+    # the plan decides scheme + policy + on/off for this call site
+    c, report = protected_call("qgemm", packed, x_q, ctx=ctx, name=name)
 
     # Requantization rank-1 algebra (Eq. 1 with symmetric B: beta_B = 0):
     #   y = alpha_A[i] * alpha_B[j] * C[i,j] + beta_A[i] * alpha_B[j] * colsum_B[j]
@@ -135,8 +131,8 @@ def maybe_qlinear_init(key, d_in, d_out, axes, quant: bool,
     return init_linear(key, d_in, d_out, axes, dtype=dtype, bias=bias)
 
 
-def apply_linear(p, x, ctx: Ctx):
+def apply_linear(p, x, ctx: Ctx, name: str = ""):
     """Dispatch on parameter form (packed int8 vs float)."""
     if "w_packed" in p:
-        return qlinear(p, x, ctx)
-    return linear(p, x, ctx)
+        return qlinear(p, x, ctx, name)
+    return linear(p, x, ctx, name)

@@ -25,12 +25,12 @@ def init_mlp(key, d_model: int, d_ff: int, *, gated: bool = True,
 
 
 def mlp(p, x, ctx: Ctx):
-    up, r1 = apply_linear(p["up"], x, ctx)
+    up, r1 = apply_linear(p["up"], x, ctx, name="mlp.up")
     if "gate" in p:
-        gate, r2 = apply_linear(p["gate"], x, ctx)
+        gate, r2 = apply_linear(p["gate"], x, ctx, name="mlp.gate")
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(ctx.compute_dtype) * up
     else:
         r2 = policy.empty_report()
         h = jax.nn.gelu(up.astype(jnp.float32)).astype(ctx.compute_dtype)
-    y, r3 = apply_linear(p["down"], h, ctx)
+    y, r3 = apply_linear(p["down"], h, ctx, name="mlp.down")
     return y, policy.merge_reports(r1, r2, r3)

@@ -16,11 +16,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import abft_gemm as ag
 from repro.core import policy
-from repro.kernels import ref as kref
+from repro.kernels import ops as kops
 from repro.layers.common import Ctx
 from repro.layers.linear import init_linear
+from repro.protect import ops as pops
+from repro.protect.runtime import protected_call
 from repro.sharding import LogicalParam, constrain, param
 
 
@@ -34,10 +35,10 @@ def init_moe(key, d_model: int, d_ff: int, n_experts: int, *,
             kk = jax.random.split(k, n_experts)
             ws = jax.vmap(lambda kki: jax.random.randint(
                 kki, (din, dout), -127, 128, jnp.int8))(kk)
-            packed = jax.vmap(ag.pack_encoded_b)(ws)
+            packed = jax.vmap(pops.QGEMM.encode)(ws)
             alpha = jax.random.uniform(k, (n_experts, dout), jnp.float32,
                                        1e-3, 2e-3)
-            colsum = jnp.sum(ws.astype(jnp.int32), axis=1).astype(jnp.float32)
+            colsum = pops.QGEMM.dequant_colsum(ws)
             return {
                 "w_packed": LogicalParam(packed,
                                          ("expert", "embed", "expert_mlp")),
@@ -60,28 +61,22 @@ def init_moe(key, d_model: int, d_ff: int, n_experts: int, *,
     return p
 
 
-def _expert_matmul(wp, h, ctx: Ctx):
+def _expert_matmul(wp, h, ctx: Ctx, name: str = "moe"):
     """h [E, C', d_in] x expert weights -> ([E, C', d_out], report)."""
     if "w_packed" in wp:
         def one(packed_e, h_e):
-            h_q, a_alpha, a_beta = kref.quantize_rows_ref(h_e)
-            if ctx.abft:
-                c, err_rows = kref.abft_qgemm_ref(h_q, packed_e)
-                err = jnp.sum(err_rows).astype(jnp.int32)
-            else:
-                d_out = packed_e.shape[1] - ag.LANE
-                c = jax.lax.dot_general(
-                    h_q, packed_e[:, :d_out], (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.int32)
-                err = jnp.zeros((), jnp.int32)
-            return c, a_alpha, a_beta, err
+            h_q, a_alpha, a_beta = kops.quantize_rows(h_e)
+            c, rep = protected_call("qgemm", packed_e, h_q, ctx=ctx,
+                                    name=name)
+            return c, a_alpha, a_beta, rep
 
-        c, a_alpha, a_beta, errs = jax.vmap(one)(wp["w_packed"], h)
+        c, a_alpha, a_beta, reps = jax.vmap(one)(wp["w_packed"], h)
+        # vmapped FaultReport: reduce counters over the expert axis
+        report = jax.tree.map(jnp.sum, reps)
         y = (a_alpha[..., None] * (c.astype(jnp.float32)
                                    * wp["alpha"][:, None, :])
              + a_beta[..., None] * (wp["alpha"] * wp["colsum"])[:, None, :])
-        return (y.astype(ctx.compute_dtype),
-                policy.gemm_report(jnp.sum(errs)))
+        return y.astype(ctx.compute_dtype), report
     y = jnp.einsum("ecd,edf->ecf", h.astype(ctx.compute_dtype),
                    wp["w"].astype(ctx.compute_dtype),
                    preferred_element_type=ctx.compute_dtype)

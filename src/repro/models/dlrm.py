@@ -46,10 +46,10 @@ def init_dlrm(key, ex: DlrmExtras, quant: bool = True, dtype=jnp.float32,
     return {"bottom": bottom, "top": top, "tables": tables}
 
 
-def _mlp_stack(layers, x, ctx, final_relu=False):
+def _mlp_stack(layers, x, ctx, final_relu=False, name="mlp"):
     rep = policy.empty_report()
     for i, p in enumerate(layers):
-        x, r = apply_linear(p, x, ctx)
+        x, r = apply_linear(p, x, ctx, name=f"{name}.{i}")
         rep = policy.merge_reports(rep, r)
         if i < len(layers) - 1 or final_relu:
             x = jax.nn.relu(x.astype(jnp.float32)).astype(x.dtype)
@@ -63,7 +63,7 @@ def dlrm_forward(params, dense, indices, ctx: Ctx, ex: DlrmExtras,
     Returns (logit [B], report)."""
     b = dense.shape[0]
     bot, r1 = _mlp_stack(params["bottom"], dense.astype(ctx.compute_dtype),
-                         ctx, final_relu=True)                 # [B, emb]
+                         ctx, final_relu=True, name="bottom")  # [B, emb]
 
     def one_table(tp, idx):
         r, rep = embedding_bag_fwd(tp, idx, ctx)
@@ -80,5 +80,6 @@ def dlrm_forward(params, dense, indices, ctx: Ctx, ex: DlrmExtras,
     iu = jnp.triu_indices(f.shape[1], k=1)
     inter = gram[:, iu[0], iu[1]]                               # [B,F(F-1)/2]
     z = jnp.concatenate([bot.astype(jnp.float32), inter], axis=-1)
-    logit, r2 = _mlp_stack(params["top"], z.astype(ctx.compute_dtype), ctx)
+    logit, r2 = _mlp_stack(params["top"], z.astype(ctx.compute_dtype), ctx,
+                           name="top")
     return logit[:, 0], policy.merge_reports(r1, table_rep, r2)

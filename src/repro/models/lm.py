@@ -112,9 +112,11 @@ def _prefix_embeds(params, x_text, ctx, cfg: ArchConfig, patches,
     parts = []
     if cfg.patch_dim and patches is not None:
         h, r1 = apply_linear(params["projector"]["fc1"],
-                             patches.astype(ctx.compute_dtype), ctx)
+                             patches.astype(ctx.compute_dtype), ctx,
+                             name="projector.fc1")
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(ctx.compute_dtype)
-        h, r2 = apply_linear(params["projector"]["fc2"], h, ctx)
+        h, r2 = apply_linear(params["projector"]["fc2"], h, ctx,
+                             name="projector.fc2")
         reports += [r1, r2]
         parts.append(h)
     if cfg.meta_tokens:
@@ -212,7 +214,7 @@ def lm_hidden(params, tokens, ctx: Ctx, cfg: ArchConfig, *,
 def lm_logits(params, tokens, ctx: Ctx, cfg: ArchConfig, patches=None):
     """Training forward: full logits [B, S', vocab_padded]."""
     x, _, rep, aux = lm_hidden(params, tokens, ctx, cfg, patches=patches)
-    logits, r_h = apply_linear(params["lm_head"], x, ctx)
+    logits, r_h = apply_linear(params["lm_head"], x, ctx, name="lm_head")
     logits = constrain(logits, ("batch", "seq", "vocab"), ctx.rules)
     return logits, policy.merge_reports(rep, r_h), aux
 
@@ -223,7 +225,8 @@ def lm_prefill(params, tokens, ctx: Ctx, cfg: ArchConfig, *, cache_len: int,
     x, cache, rep, _ = lm_hidden(params, tokens, ctx, cfg, patches=patches,
                                  with_cache=True, cache_len=cache_len)
     last = x[:, -1, :]
-    logits, r_h = apply_linear(params["lm_head"], last, ctx)
+    logits, r_h = apply_linear(params["lm_head"], last, ctx,
+                               name="lm_head")
     return logits, cache, policy.merge_reports(rep, r_h)
 
 
@@ -276,7 +279,7 @@ def lm_decode(params, cache, tokens, pos, ctx: Ctx, cfg: ArchConfig):
         body, (x, rep), (params["layers"], cache, windows),
         unroll=ctx.unroll_layers)
     x = rmsnorm(params["final_norm"], x)
-    logits, r_h = apply_linear(params["lm_head"], x, ctx)
+    logits, r_h = apply_linear(params["lm_head"], x, ctx, name="lm_head")
     return logits, new_cache, policy.merge_reports(rep, r_h)
 
 

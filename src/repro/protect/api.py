@@ -1,0 +1,134 @@
+"""``protect(apply_fn, plan)`` — the one-call front door.
+
+Wraps a model apply function (anything with the repo's
+``fn(params, *args, ctx=..., **kw) -> (..., FaultReport)`` shape:
+``Model.prefill``, ``Model.decode``, ``Model.loss``, ``dlrm_forward``
+partials, ...) so that:
+
+* the plan is threaded to every protected call site via the layer ``Ctx``
+  (no per-callsite wiring — flipping an op off or changing its policy is a
+  plan edit, not a model edit);
+* weights are encoded once via :meth:`Protected.encode` (checksum lanes
+  packed, table row sums refreshed) — the amortized §IV-A1 step;
+* the trailing :class:`~repro.core.policy.FaultReport` is split off and
+  returned uniformly as ``(output, report)``; apply functions that nest
+  their report (``Model.loss`` -> ``(loss, (metrics, rep))``) keep their
+  output shape, with the merged report surfaced alongside.
+
+    plan = ProtectionPlan.parse("*:policy=log,embedding_bag:off")
+    prefill = protect(model.prefill, plan)
+    (logits, cache), report = prefill(params, batch, cache_len=256)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.core.policy import FaultReport, empty_report, merge_reports
+from repro.protect.ops import get_op
+from repro.protect.plan import ProtectionPlan
+
+
+def _find_reports(out: Any) -> list:
+    """Every FaultReport reachable through tuples/lists/dicts in ``out``."""
+    if isinstance(out, FaultReport):
+        return [out]
+    if isinstance(out, (tuple, list)):
+        return [r for v in out for r in _find_reports(v)]
+    if isinstance(out, dict):
+        return [r for v in out.values() for r in _find_reports(v)]
+    return []
+
+
+class Protected:
+    """A plan-bound apply function.  See module docstring."""
+
+    def __init__(self, apply_fn: Callable, plan: ProtectionPlan, *,
+                 ctx=None, **ctx_overrides):
+        from repro.layers.common import Ctx
+        base = ctx if ctx is not None else Ctx(quant=True)
+        self.plan = plan
+        self.ctx = base.replace(plan=plan, **ctx_overrides)
+        self.apply_fn = apply_fn
+
+    def encode(self, params):
+        """Refresh every amortized encoding in a param tree (packed GEMM
+        checksum lanes, EB/token-table row sums).  Idempotent; call once
+        after loading or mutating weights."""
+        return encode_tree(params)
+
+    def __call__(self, params, *args, **kwargs):
+        out = self.apply_fn(params, *args, ctx=self.ctx, **kwargs)
+        if isinstance(out, tuple) and out and isinstance(out[-1],
+                                                         FaultReport):
+            rest = out[:-1]
+            return (rest[0] if len(rest) == 1 else rest), out[-1]
+        # nested-report shapes (e.g. Model.loss -> (loss, (metrics, rep))):
+        # surface the merged report without restructuring the output
+        reports = _find_reports(out)
+        return out, (merge_reports(*reports) if reports else empty_report())
+
+
+def protect(apply_fn: Callable, plan: ProtectionPlan, *, ctx=None,
+            **ctx_overrides) -> Protected:
+    """Bind ``apply_fn`` to a :class:`ProtectionPlan`.
+
+    ``ctx`` seeds the layer context (default: the int8 serving
+    ``Ctx(quant=True)``); keyword overrides are forwarded to
+    ``ctx.replace`` (e.g. ``compute_dtype=jnp.float32``).
+    """
+    return Protected(apply_fn, plan, ctx=ctx, **ctx_overrides)
+
+
+def encode_tree(params: Any) -> Any:
+    """Walk a param (value) tree and recompute every derived encoding:
+
+    * dicts holding ``w_packed`` get their checksum lanes re-encoded from
+      the weight block (vmapped over leading stack dims), and a sibling
+      ``colsum`` (the Eq. 1 requantization constant) recomputed with them;
+    * dicts holding ``table`` + ``rowsums`` get row sums recomputed.
+
+    LogicalParam wrappers are preserved.  Everything else passes through
+    untouched.
+    """
+    from repro.core import table_rowsums
+    from repro.sharding import LogicalParam, is_lp
+
+    qgemm = get_op("qgemm")
+
+    def val(x):
+        return x.value if is_lp(x) else x
+
+    def rewrap(ref, v):
+        return LogicalParam(v, ref.axes) if is_lp(ref) else v
+
+    def repack(packed):
+        w_q = packed[..., :, :packed.shape[-1] - qgemm.lane]
+        fn = qgemm.encode
+        for _ in range(packed.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(w_q)
+
+    def rec(node):
+        if isinstance(node, dict):
+            node = {k: rec(v) for k, v in node.items()}
+            if "w_packed" in node:
+                packed = val(node["w_packed"])
+                node["w_packed"] = rewrap(node["w_packed"], repack(packed))
+                if "colsum" in node:
+                    # the requantization constant (Eq. 1 rank-1 term) is
+                    # derived from the weight block too — stale colsum is
+                    # silent output corruption, not a detection miss
+                    w_q = packed[..., :, :packed.shape[-1] - qgemm.lane]
+                    node["colsum"] = rewrap(node["colsum"],
+                                            qgemm.dequant_colsum(w_q))
+            if "table" in node and "rowsums" in node:
+                node["rowsums"] = rewrap(
+                    node["rowsums"], table_rowsums(val(node["table"])))
+            return node
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v) for v in node)
+        return node
+
+    return rec(params)

@@ -1,0 +1,101 @@
+"""Protected-call runtime: resolve a plan rule, run the adapter, apply the
+detect->act policy, emit the op-keyed report.
+
+This is the single code path every protected call site goes through —
+layers no longer hand-wire scheme/policy/threshold plumbing:
+
+    c, rep = protected_call("qgemm", packed, x_q, ctx=ctx, name="attn.wq")
+
+``ctx`` is duck-typed: anything with an optional ``plan``
+(:class:`~repro.protect.plan.ProtectionPlan`) attribute plus the legacy
+``abft`` / ``float_abft`` booleans the pre-plan ``Ctx`` carried.  With no
+plan, the legacy flags reproduce the old behavior exactly (qgemm/EB gated
+by ``abft``, float GEMMs by ``float_abft``, KV cache off).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.policy import (abort_if_errors, empty_report, op_report,
+                               with_recompute)
+from repro.protect.ops import get_op
+from repro.protect.plan import ProtectionPlan, ResolvedRule
+
+
+def rule_for(ctx, op: str, name: str = "") -> ResolvedRule:
+    """The plan rule governing op kind ``op`` at call site ``name``."""
+    plan: Optional[ProtectionPlan] = getattr(ctx, "plan", None)
+    if plan is not None:
+        return plan.resolve(op, name)
+    if ctx is None:
+        return ResolvedRule()
+    # legacy Ctx flags (pre-plan behavior, byte-for-byte)
+    if op == "float_gemm":
+        return ResolvedRule(enabled=bool(getattr(ctx, "float_abft", False)))
+    if op == "kv_cache":
+        return ResolvedRule(enabled=False)
+    return ResolvedRule(enabled=bool(getattr(ctx, "abft", True)))
+
+
+def protected_call(op: str, encoded, *inputs, ctx=None,
+                   rule: Optional[ResolvedRule] = None, name: str = "",
+                   **call_kwargs):
+    """Run one protected op under its resolved plan rule.
+
+    Returns ``(out, FaultReport)``.  Policy semantics:
+
+    * ``log``       — verify, count, pass through;
+    * ``recompute`` — ``lax.cond`` re-run up to ``rule.max_retries`` times
+                      while errors persist (retries counted);
+    * ``correct``   — adapters with ``supports_correct`` repair the single
+                      flagged cell via row+column checksums; others fall
+                      back to ``recompute`` (repair-or-retry);
+    * ``abort``     — host callback raises
+                      :class:`repro.core.policy.FaultAbort`.
+
+    A disabled rule runs the adapter's unprotected baseline and reports
+    zero checks.
+    """
+    adapter = get_op(op)
+    if rule is None:
+        rule = rule_for(ctx, op, name)
+    if not rule.enabled:
+        return adapter.unprotected(encoded, *inputs,
+                                   **call_kwargs), empty_report()
+
+    policy_name = rule.policy
+    if policy_name == "correct" and not adapter.supports_correct:
+        policy_name = "recompute"
+
+    if policy_name == "correct":
+        out, check = adapter(encoded, *inputs, rule=rule, **call_kwargs)
+        out, residual, applied = adapter.correct(out, check)
+        return out, op_report(op, residual, corrections=applied)
+
+    if policy_name == "recompute":
+        def run():
+            o, c = adapter(encoded, *inputs, rule=rule, **call_kwargs)
+            return o, c.err_count
+
+        out, err, retries = with_recompute(
+            run, max_retries=rule.max_retries)()
+        return out, op_report(op, err, retries=retries)
+
+    out, check = adapter(encoded, *inputs, rule=rule, **call_kwargs)
+    if policy_name == "abort":
+        jax.debug.callback(abort_if_errors, check.err_count)
+    return out, op_report(op, check.err_count)
+
+
+def kv_rule(ctx, name: str = "attn") -> ResolvedRule:
+    """Convenience for attention layers: the kv_cache rule, additionally
+    gated on the int8 serving path (``ctx.quant``) — a bf16 training cache
+    has nothing to checksum."""
+    r = rule_for(ctx, "kv_cache", name)
+    if r.enabled and not bool(getattr(ctx, "quant", False)):
+        return ResolvedRule(enabled=False, scheme=r.scheme, policy=r.policy,
+                            rel_bound=r.rel_bound,
+                            max_retries=r.max_retries)
+    return r

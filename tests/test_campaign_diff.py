@@ -1,0 +1,150 @@
+"""The cross-PR artifact differ and the EB threshold-sweep grid."""
+import copy
+import json
+
+import pytest
+
+from repro.campaign import (CampaignSpec, diff_artifacts, expand,
+                            format_diff, run_campaign, run_diff,
+                            threshold_curve)
+
+
+def _artifact(cells):
+    return {
+        "schema": 1, "campaign": "t", "seed": 0,
+        "env": {"jax": "x", "backend": "cpu", "device_count": 1,
+                "python": "3", "platform": "test"},
+        "wall_seconds": 0.0, "specs": [], "skipped": [],
+        "cells": [{
+            "cell_id": cid,
+            "plan": {"target": cid.split("/")[0], "bit_band": "all",
+                     "rel_bound": None},
+            "metrics": {"detection_rate": det, "fp_rate": fp,
+                        "overhead": ov, "samples": 100},
+            "seconds": 0.0,
+        } for cid, det, fp, ov in cells],
+    }
+
+
+OLD = _artifact([
+    ("gemm/a", 0.99, 0.00, 0.10),
+    ("eb/b", 0.95, 0.02, 0.05),
+    ("kv/c", 1.00, 0.00, None),
+])
+
+
+def test_diff_no_regressions_on_identical():
+    d = diff_artifacts(OLD, copy.deepcopy(OLD))
+    assert d["regressions"] == [] and d["unchanged"] == 3
+    assert "0 regression(s)" in format_diff(d)
+
+
+def test_diff_flags_detection_fp_and_coverage_regressions():
+    new = _artifact([
+        ("gemm/a", 0.90, 0.00, 0.10),   # detection dropped 9pp
+        ("eb/b", 0.95, 0.09, 0.05),     # FP rose 7pp
+        # kv/c removed entirely -> coverage regression
+        ("new/d", 1.00, 0.00, None),    # added (not a regression)
+    ])
+    d = diff_artifacts(OLD, new)
+    kinds = {(r["cell_id"], r["kind"]) for r in d["regressions"]}
+    assert kinds == {("gemm/a", "detection_rate"), ("eb/b", "fp_rate"),
+                     ("kv/c", "coverage")}
+    assert d["added"] == ["new/d"]
+    md = format_diff(d)
+    assert "Regressions" in md and "coverage" in md
+
+
+def test_diff_tolerances_absorb_noise():
+    new = copy.deepcopy(OLD)
+    new["cells"][0]["metrics"]["detection_rate"] = 0.98   # -1pp < 2pp tol
+    new["cells"][1]["metrics"]["fp_rate"] = 0.03          # +1pp < 2pp tol
+    assert diff_artifacts(OLD, new)["regressions"] == []
+    # tighter tolerance flags them
+    d = diff_artifacts(OLD, new, det_tol=0.005, fp_tol=0.005)
+    assert len(d["regressions"]) == 2
+
+
+def test_diff_overhead_opt_in():
+    new = copy.deepcopy(OLD)
+    new["cells"][0]["metrics"]["overhead"] = 0.50
+    assert diff_artifacts(OLD, new)["regressions"] == []     # off by default
+    d = diff_artifacts(OLD, new, overhead_tol=0.10)
+    assert [r["kind"] for r in d["regressions"]] == ["overhead"]
+
+
+def test_diff_improvements_tracked():
+    new = copy.deepcopy(OLD)
+    new["cells"][1]["metrics"]["detection_rate"] = 0.99
+    d = diff_artifacts(OLD, new)
+    assert d["regressions"] == []
+    assert [r["kind"] for r in d["improvements"]] == ["detection_rate"]
+    assert d["unchanged"] == 2            # improved cell is not "unchanged"
+
+
+def test_run_diff_cli_exit_codes(tmp_path):
+    old_p, new_p = tmp_path / "old.json", tmp_path / "new.json"
+    old_p.write_text(json.dumps(OLD))
+    same = run_diff(str(old_p), str(old_p), emit=lambda s: None)
+    assert same == 0
+
+    bad = _artifact([("gemm/a", 0.80, 0.0, 0.1)])
+    new_p.write_text(json.dumps(bad))
+    out_md = tmp_path / "diff.md"
+    rc = run_diff(str(old_p), str(new_p), out_path=str(out_md),
+                  emit=lambda s: None)
+    assert rc == 1
+    assert "coverage" in out_md.read_text()       # eb/b + kv/c vanished
+
+
+def test_main_diff_mode_exit_code(tmp_path):
+    from repro.campaign.__main__ import main
+    old_p = tmp_path / "old.json"
+    old_p.write_text(json.dumps(OLD))
+    assert main(["--diff", str(old_p), str(old_p)]) == 0
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(_artifact([("gemm/a", 0.5, 0.0, None)])))
+    assert main(["--diff", str(old_p), str(bad_p)]) == 1
+
+
+# ----------------------- thresholds grid -------------------------------------
+
+def test_thresholds_grid_expands_per_bound_cells():
+    from repro.campaign.grids import thresholds_specs
+    spec = thresholds_specs(seed=0)[0]
+    plans, skipped = expand(spec)
+    bounds = {p.rel_bound for p in plans}
+    assert bounds == set(spec.rel_bounds)
+    ids = [p.cell_id for p in plans]
+    assert len(ids) == len(set(ids))
+    assert any("rb1e-05" in i for i in ids)
+
+
+def test_rel_bounds_skip_non_thresholded_targets():
+    spec = CampaignSpec(name="t", targets=("gemm_packed",),
+                        shapes=((2, 32, 64),), samples=4,
+                        rel_bounds=(1e-5, 1e-4))
+    plans, skipped = expand(spec)
+    assert all(p.rel_bound is None for p in plans)
+    assert len(plans) == 1                     # no per-bound duplication
+    assert any("no detection threshold" in s["reason"] for s in skipped)
+
+
+def test_rel_bounds_validation():
+    with pytest.raises(ValueError):
+        CampaignSpec(name="t", targets=("embedding_bag",), samples=1,
+                     rel_bounds=(-1e-5,))
+
+
+def test_threshold_curve_end_to_end(tmp_path):
+    spec = CampaignSpec(
+        name="curve", targets=("embedding_bag",),
+        bit_bands=("significant",), shapes=((1_000, 64, 4, 20),),
+        samples=40, clean_samples=40, rel_bounds=(1e-6, 1e-1), seed=3)
+    result = run_campaign("curve", [spec], out_dir=str(tmp_path))
+    curves = threshold_curve(result)
+    assert set(curves) == {"significant"}
+    pts = curves["significant"]
+    assert [rb for rb, _, _ in pts] == [1e-6, 1e-1]
+    # tighter bound detects at least as much as the very loose one
+    assert pts[0][1] >= pts[1][1]
