@@ -1,0 +1,73 @@
+"""Multi-tenant protected serving under a mid-traffic bit flip.
+
+Two traffic classes share one engine with different protection plans:
+
+* ``premium`` — detect→recompute on every op, checksummed int8 KV cache,
+  tight EmbeddingBag threshold (the V-ABFT per-tenant-thresholds idea);
+* ``besteffort`` — log-only protection, loose threshold, bf16 cache.
+
+A bursty request stream drives the continuous batcher; halfway through, a
+bit flips in the attention query projection.  The telemetry timeline then
+shows — in one place — the online detection, the recompute retries the
+premium lane paid, and each tenant's TTFT/per-token SLO percentiles.
+
+    PYTHONPATH=src python examples/serving_multitenant.py
+"""
+from repro.configs import reduce_cfg
+from repro.configs.registry import get_arch
+from repro.protect import ProtectionPlan
+from repro.serving import (FaultInjection, ServingEngine, TenantSpec,
+                           chat_stream)
+
+
+def main():
+    cfg = reduce_cfg(get_arch("llama3.2-1b"))
+
+    tenants = [
+        TenantSpec("premium", ProtectionPlan.parse(
+            "*:policy=recompute:retries=2,kv_cache:on,"
+            "embedding_bag:rel_bound=1e-5", name="premium")),
+        TenantSpec("besteffort", ProtectionPlan.parse(
+            "*:policy=log,embedding_bag:rel_bound=1e-3",
+            name="besteffort"), weight=2.0),
+    ]
+    engine = ServingEngine(cfg, tenants, n_slots=4, max_prompt=32,
+                           max_new_tokens=12, seed=0)
+    print(f"{len(engine.lanes)} plan lanes:")
+    for lane in engine.lanes:
+        print(f"  {lane.key}: tenants={sorted(lane.tenants)}")
+
+    stream = chat_stream(
+        60, tenants={"premium": 1.0, "besteffort": 2.0},
+        rate_rps=400.0, arrival="bursty", seed=0,
+        mean_prompt=20, max_prompt=32, mean_output=8, max_output=12)
+
+    telemetry = engine.run(
+        stream, inject=[FaultInjection(step=10, victim="attn.wq")])
+    s = telemetry.summary()
+
+    print(f"\nserved {s['requests']} requests in {s['span_s']:.2f}s "
+          f"({s['throughput_tok_s']:.0f} tok/s), "
+          f"queue depth max {s['queue_depth_max']}")
+    for name, ts in s["per_tenant"].items():
+        print(f"  {name:>10}: n={ts['requests']:<3} "
+              f"TTFT p50/p95/p99 = {ts['ttft_ms']['p50']:.1f}/"
+              f"{ts['ttft_ms']['p95']:.1f}/{ts['ttft_ms']['p99']:.1f} ms"
+              f"  per-token p99 = {ts['per_token_ms']['p99']:.2f} ms")
+
+    f = s["faults"]
+    print(f"\nfault counters: "
+          f"{ {k: v for k, v in f['counters'].items() if v} }")
+    for inj in f["injections"]:
+        state = (f"DETECTED after {inj['latency_steps']} step(s), "
+                 f"{1e3 * inj['latency_s']:.2f} ms"
+                 if inj["detected"] else "not detected (masked)")
+        print(f"injected {inj['victim']} at step {inj['step']}: {state}")
+    retries = f["counters"].get("retries", 0)
+    if retries:
+        print(f"premium lane recompute retries: {retries} "
+              f"(the per-tenant policy at work)")
+
+
+if __name__ == "__main__":
+    main()

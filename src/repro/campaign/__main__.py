@@ -6,6 +6,8 @@ Examples::
     python -m repro.campaign --quick
     python -m repro.campaign --grid paper --seed 7
     python -m repro.campaign --grid thresholds        # EB rel_bound sweep
+    python -m repro.campaign --grid victims           # decode victim sweep
+    python -m repro.campaign --grid serving_soak --quick   # live-traffic
     python -m repro.campaign --grid full --device-count 8 --out bench/
     python -m repro.campaign --diff OLD.json NEW.json # exit 1 on regression
 """
@@ -25,8 +27,9 @@ def main(argv=None) -> int:
                     help="shorthand for --grid quick (the CI smoke grid)")
     ap.add_argument("--grid", default=None,
                     choices=["quick", "paper", "thresholds", "soak",
-                             "full"],
-                    help="named grid to run (see repro.campaign.grids)")
+                             "victims", "serving_soak", "full"],
+                    help="named grid to run (see repro.campaign.grids; "
+                         "serving_soak runs repro.serving.soak)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--samples", type=int, default=0,
                     help="override the per-cell sample count "
@@ -67,12 +70,25 @@ def main(argv=None) -> int:
     # jax import happens after XLA_FLAGS is set
     from repro.campaign.executor import CHUNK, run_campaign
     from repro.campaign.grids import (GRIDS, paper_specs, quick_specs,
-                                      thresholds_specs)
+                                      thresholds_specs, victims_specs)
 
     grid = args.grid or ("quick" if args.quick else None)
     if grid is None:
         ap.error("pick a grid (--quick / --grid {quick,paper,thresholds,"
-                 "soak,full}) or --diff OLD NEW")
+                 "soak,victims,serving_soak,full}) or --diff OLD NEW")
+    if grid == "serving_soak":
+        # live-traffic soak: the serving engine, not the vmapped executor
+        from repro.campaign.artifacts import markdown_table
+        from repro.serving.soak import run_soak_campaign
+        result = run_soak_campaign(quick=args.quick, seed=args.seed,
+                                   out_dir=args.out,
+                                   verbose=lambda s: print(s, flush=True))
+        print()
+        print(markdown_table(result))
+        print(f"artifact: "
+              f"{os.path.join(args.out, 'BENCH_campaign_serving_soak')}"
+              f".json")
+        return 0
     if grid == "quick":
         specs = quick_specs(seed=args.seed, samples=args.samples or 600)
     elif grid == "paper":
@@ -80,6 +96,8 @@ def main(argv=None) -> int:
     elif grid == "thresholds":
         specs = thresholds_specs(seed=args.seed,
                                  samples=args.samples or 400)
+    elif grid == "victims":
+        specs = victims_specs(seed=args.seed, samples=args.samples or 12)
     else:
         specs = GRIDS[grid](seed=args.seed)
 

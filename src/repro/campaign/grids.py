@@ -6,7 +6,12 @@
 ``paper``  — the paper's Tables II + III campaigns at full shape coverage.
 ``thresholds`` — EB rel_bound sweep: detection-vs-FP tradeoff per bit band.
 ``soak``   — the full-model decode-step sweep across fault models/bands.
+``victims`` — decode-soak victim sweep: which leaf gets flipped, addressed
+             by protect-plan path patterns (``attn.wq``, ``mlp.down``, ...).
 ``full``   — everything above plus the beyond-paper KV-cache cells.
+
+(The ``serving_soak`` grid — faults under live traffic — lives in
+:mod:`repro.serving.soak`; the CLI dispatches to it.)
 """
 from __future__ import annotations
 
@@ -86,6 +91,29 @@ def thresholds_specs(seed: int = 0,
         samples=samples, clean_samples=samples, seed=seed)]
 
 
+#: the decode soak's victim sweep: one packed projection per layer role,
+#: plus the token table — the per-layer "which leaf gets flipped" axis the
+#: protect plan's path vocabulary makes addressable (ROADMAP item).
+VICTIM_PATTERNS = ("attn.wq", "attn.wk", "attn.wo", "mlp.up", "mlp.down",
+                   "embed.table", "lm_head")
+
+
+def victims_specs(seed: int = 0, samples: int = 12) -> List[CampaignSpec]:
+    """Per-layer victim selection in the decode soak: sweep which leaf of
+    the reduced LM gets flipped (path patterns in the protect-plan
+    vocabulary) and compare end-to-end detection/escape per victim —
+    attention projections vs MLP vs the embedding table behave very
+    differently (an untouched-row table flip is invisible by
+    construction)."""
+    return [CampaignSpec(
+        name="decode-victims",
+        targets=("decode_step",),
+        fault_models=("bitflip",),
+        bit_bands=("significant",),
+        victims=VICTIM_PATTERNS,
+        samples=samples, clean_samples=4, seed=seed)]
+
+
 def soak_specs(seed: int = 0) -> List[CampaignSpec]:
     return [CampaignSpec(
         name="soak",
@@ -112,5 +140,6 @@ GRIDS: Dict[str, object] = {
     "paper": paper_specs,
     "thresholds": thresholds_specs,
     "soak": soak_specs,
+    "victims": victims_specs,
     "full": full_specs,
 }

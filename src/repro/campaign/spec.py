@@ -67,6 +67,11 @@ class CampaignSpec:
     #: detection-threshold sweep (thresholded targets only, e.g. the EB
     #: rel_bound): () = each target's default bound
     rel_bounds: Tuple[float, ...] = ()
+    #: injection-victim sweep (victim-selectable targets only, e.g. the
+    #: decode soak): leaf-path patterns in the protect-plan vocabulary
+    #: (``attn.wq``, ``mlp.down``, ``embed.table``, ...); () = each
+    #: target's default victim (largest int8 leaf)
+    victims: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.samples < 1:
@@ -77,7 +82,7 @@ class CampaignSpec:
             raise ValueError("rel_bounds must be positive")
         # tolerate lists from JSON round-trips / hand-written specs
         for f in ("targets", "fault_models", "bit_bands", "dtypes",
-                  "rel_bounds"):
+                  "rel_bounds", "victims"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -108,6 +113,8 @@ class CellPlan:
     measure_overhead: bool
     #: detection-threshold override (None = the target's default bound)
     rel_bound: Optional[float] = None
+    #: injection-victim leaf-path pattern (None = target default)
+    victim: Optional[str] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -122,10 +129,15 @@ def cell_seed(spec_seed: int, cell_id: str) -> int:
 
 def _cell_id(target: str, model: str, band: str,
              shape: Sequence[int], dtype: str,
-             rel_bound: Optional[float] = None) -> str:
+             rel_bound: Optional[float] = None,
+             victim: Optional[str] = None) -> str:
     s = "x".join(str(d) for d in shape) if shape else "default"
     base = f"{target}/{model}/{band}/{s}/{dtype}"
-    return base if rel_bound is None else f"{base}/rb{rel_bound:g}"
+    if rel_bound is not None:
+        base += f"/rb{rel_bound:g}"
+    if victim is not None:
+        base += f"/vic={victim}"
+    return base
 
 
 def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
@@ -140,6 +152,7 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
     skipped: List[dict] = []
     seen = set()
     bounds_or_default = spec.rel_bounds if spec.rel_bounds else (None,)
+    victims_or_default = spec.victims if spec.victims else (None,)
     for tname, model, band, dtype in itertools.product(
             spec.targets, spec.fault_models, spec.bit_bands, spec.dtypes):
         target = get_target(tname)   # unknown target = hard error
@@ -150,8 +163,17 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
                 "cell_id": _cell_id(tname, model, band, (), dtype),
                 "reason": f"target {tname} has no detection threshold "
                           f"(rel_bounds sweep ignored)"})
-        for shape, rel_bound in itertools.product(shapes, bounds):
-            cid = _cell_id(tname, model, band, shape, dtype, rel_bound)
+        victims = victims_or_default if target.victim_selectable \
+            else (None,)
+        if spec.victims and not target.victim_selectable:
+            skipped.append({
+                "cell_id": _cell_id(tname, model, band, (), dtype),
+                "reason": f"target {tname} has no selectable victim "
+                          f"(victims sweep ignored)"})
+        for shape, rel_bound, victim in itertools.product(shapes, bounds,
+                                                          victims):
+            cid = _cell_id(tname, model, band, shape, dtype, rel_bound,
+                           victim)
             if cid in seen:
                 continue
             seen.add(cid)
@@ -195,5 +217,5 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
                 flips=spec.flips_per_trial,
                 seed=cell_seed(spec.seed, cid),
                 measure_overhead=spec.measure_overhead,
-                rel_bound=rel_bound))
+                rel_bound=rel_bound, victim=victim))
     return plans, skipped

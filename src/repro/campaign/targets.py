@@ -28,18 +28,23 @@ import jax.numpy as jnp
 from repro.campaign.spec import CellPlan, DLRM_GEMM_SHAPES
 from repro.core import abft_gemm as ag
 from repro.core import abft_kvcache as kv
-from repro.core.inject import (bit_band, random_bitflip, random_bitflips,
-                               random_value)
+from repro.core.inject import (bit_band, random_bitflip,
+                               random_bitflip_live, random_bitflips,
+                               random_value, victim_leaf_index)
 from repro.protect.ops import EMBEDDING_BAG, KV_CACHE, QGEMM
 from repro.protect.plan import ResolvedRule
 
 
-def apply_fault(key: jax.Array, x: jax.Array, plan: CellPlan) -> jax.Array:
-    """The spec'd fault model applied to one array."""
+def apply_fault(key: jax.Array, x: jax.Array, plan: CellPlan,
+                path: str = "") -> jax.Array:
+    """The spec'd fault model applied to one array.  ``path`` (the victim
+    leaf's dotted path) lets single bit flips avoid the dead alignment
+    lanes of packed weights (:func:`repro.core.inject.random_bitflip_live`)
+    so victim sweeps measure live faults, not guaranteed-masked ones."""
     if plan.fault_model == "bitflip":
         rng = bit_band(x.dtype, plan.bit_band)
         if plan.flips == 1:
-            return random_bitflip(key, x, bit_range=rng)
+            return random_bitflip_live(key, x, path, bit_range=rng)
         return random_bitflips(key, x, plan.flips, bit_range=rng)
     if plan.fault_model == "random_value":
         return random_value(key, x)
@@ -67,6 +72,10 @@ class InjectableTarget:
     #: True for targets with a tunable detection threshold (the EB
     #: rel_bound) — expand() sweeps spec.rel_bounds over them only
     thresholded: bool = False
+    #: True for targets whose injection victim is addressable by leaf-path
+    #: pattern (protect-plan vocabulary) — expand() sweeps spec.victims
+    #: over them only
+    victim_selectable: bool = False
 
 
 TARGETS: dict = {}
@@ -398,14 +407,15 @@ def _decode_build(plan: CellPlan, key: jax.Array):
     decode = make_decode_step(model, ctx)
     clean_tok, _, _ = decode(params, cache, tok, pos)
 
-    # victim: the largest int8 leaf (a packed, ABFT-protected weight)
+    # victim: addressed by the plan's leaf-path pattern in the protect
+    # vocabulary (``attn.wq``, ``mlp.down``, ``embed.table``, ...); the
+    # default (None) keeps the legacy choice — largest int8 leaf
     leaves, treedef = jax.tree_util.tree_flatten(params)
-    int8 = [(i, l) for i, l in enumerate(leaves) if l.dtype == jnp.int8]
-    pool = int8 if int8 else list(enumerate(leaves))
-    victim_idx = max(pool, key=lambda il: il[1].size)[0]
+    victim_idx, victim_path = victim_leaf_index(params, plan.victim)
 
     state = {"leaves": leaves, "treedef": treedef,
-             "victim_idx": victim_idx, "cache": cache, "tok": tok,
+             "victim_idx": victim_idx, "victim_path": victim_path,
+             "cache": cache, "tok": tok,
              "pos": pos, "decode": decode, "clean_tok": clean_tok}
     if plan.measure_overhead:
         ctx_off = Ctx(quant=True, plan=unprotected_plan(),
@@ -418,7 +428,8 @@ def _decode_build(plan: CellPlan, key: jax.Array):
 def _decode_trial(state, plan: CellPlan, key: jax.Array):
     leaves = list(state["leaves"])
     victim = leaves[state["victim_idx"]]
-    leaves[state["victim_idx"]] = apply_fault(key, victim, plan)
+    leaves[state["victim_idx"]] = apply_fault(key, victim, plan,
+                                              path=state["victim_path"])
     params = jax.tree_util.tree_unflatten(state["treedef"], leaves)
     tok, _, metrics = state["decode"](params, state["cache"],
                                       state["tok"], state["pos"])
@@ -459,7 +470,7 @@ register_target(InjectableTarget(
     name="decode_step",
     build=_decode_build, trial=_decode_trial, clean=_decode_clean,
     default_shapes=((2, 16),), shape_arity=2,
-    overhead=_decode_overhead))
+    overhead=_decode_overhead, victim_selectable=True))
 
 
 __all__ = ["InjectableTarget", "TARGETS", "register_target", "get_target",

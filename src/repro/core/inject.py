@@ -158,6 +158,93 @@ def random_value(key: jax.Array, x: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(flat, x.dtype).reshape(x.shape)
 
 
+def leaf_paths(tree) -> list:
+    """``[(dotted_path, leaf), ...]`` in tree_flatten order.
+
+    Paths join dict keys / sequence indices with ``.`` —
+    ``layers.attn.wq.w_packed``, ``tables.table`` — the same vocabulary
+    protection-plan path rules use, so one pattern can both select a plan
+    rule (``qgemm/attn.wq``) and name an injection victim (``attn.wq``).
+    """
+    from jax.tree_util import (DictKey, FlattenedIndexKey, GetAttrKey,
+                               SequenceKey, tree_flatten_with_path)
+    flat, _ = tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            if isinstance(k, DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, SequenceKey):
+                parts.append(str(k.idx))
+            elif isinstance(k, GetAttrKey):
+                parts.append(k.name)
+            elif isinstance(k, FlattenedIndexKey):
+                parts.append(str(k.key))
+            else:  # pragma: no cover - future key types
+                parts.append(str(k))
+        out.append((".".join(parts), leaf))
+    return out
+
+
+def victim_leaf_index(tree, pattern: str | None = None, *,
+                      prefer_int8: bool = True) -> tuple[int, str]:
+    """Pick an injection victim leaf: ``(flat_index, dotted_path)``.
+
+    ``pattern`` is matched as ``fnmatch("*<pattern>*")`` against the
+    dotted leaf paths (so ``attn.wq`` selects every layer's packed query
+    weight, ``mlp.*`` the MLP projections).  Among matches, int8 leaves
+    (the ABFT-protected packed weights / tables) are preferred and the
+    largest wins — the realistic memory-error victim.  ``None`` keeps the
+    legacy behavior: largest int8 leaf anywhere.
+    """
+    import fnmatch
+
+    named = leaf_paths(tree)
+    cand = list(range(len(named)))
+    if pattern:
+        pat = f"*{pattern}*"
+        cand = [i for i in cand
+                if fnmatch.fnmatchcase(named[i][0], pat)]
+        if not cand:
+            names = sorted({n for n, _ in named})
+            raise ValueError(
+                f"victim pattern {pattern!r} matches no leaf; "
+                f"paths look like: {names[:8]} ...")
+    if prefer_int8:
+        int8 = [i for i in cand if named[i][1].dtype == jnp.int8]
+        cand = int8 or cand
+    victim = max(cand, key=lambda i: named[i][1].size)
+    return victim, named[victim][0]
+
+
+def random_bitflip_live(key: jax.Array, leaf: jax.Array, path: str = "",
+                        bit_range: tuple[int, int] | None = None
+                        ) -> jax.Array:
+    """Model-1 flip restricted to the leaf's *live* region.
+
+    Packed GEMM weights (``*.w_packed``) carry a 128-column checksum block
+    whose lanes 1..127 are alignment zeros the kernels never read — a flip
+    there is invisible by construction and would dilute an injection
+    campaign with guaranteed-masked faults.  For such leaves the victim
+    element is drawn from the weight block + checksum column only; every
+    other leaf falls through to :func:`random_bitflip`.
+    """
+    from repro.core.abft_gemm import LANE
+
+    last = leaf.shape[-1] if leaf.ndim else 0
+    if not (path.endswith("w_packed") and leaf.ndim >= 2 and last > LANE):
+        return random_bitflip(key, leaf, bit_range=bit_range)
+    live = last - LANE + 1                      # weight cols + checksum col
+    nbits = jnp.dtype(leaf.dtype).itemsize * 8
+    lo, hi = bit_range if bit_range is not None else (0, nbits)
+    k1, k2, k3 = jax.random.split(key, 3)
+    lead = jax.random.randint(k1, (), 0, leaf.size // last)
+    col = jax.random.randint(k2, (), 0, live)
+    bit = jax.random.randint(k3, (), lo, hi)
+    return flip_bit(leaf, lead * last + col, bit)
+
+
 def flip_bit_in_leaf(tree, key: jax.Array):
     """Flip one random bit in one random (largest-ish) leaf of a pytree.
 

@@ -1,156 +1,227 @@
-"""Serving driver: int8+ABFT batched inference.
+"""Serving driver: a thin CLI over :class:`repro.serving.ServingEngine`.
 
 ``python -m repro.launch.serve --arch llama3.2-1b --smoke``
 
-Runs the paper's quantized pipeline end to end on the declarative
-protection API: build a :class:`repro.protect.ProtectionPlan` from the CLI
-(``--plan``), wrap the model's prefill/decode with
-:func:`repro.protect.protect`, prefill a batch of requests, decode N tokens
-with the sharded KV cache, and report per-phase latency + fault counters.
-Which ops are verified, with what scheme/policy/threshold, is purely a plan
-choice — e.g.::
+Runs the paper's quantized pipeline as an actual serving stack: a seeded
+request stream (Poisson / bursty / trace arrivals) flows through the
+admission queue into the continuous batcher; per-tenant
+:class:`~repro.protect.ProtectionPlan` s decide which ops are verified,
+with what scheme/policy/threshold; telemetry reports per-tenant SLO
+percentiles next to the ABFT fault counters.  Examples::
 
     --plan "*:policy=log"                        # default protection
-    --plan "embedding_bag:off"                   # EB unprotected
     --plan "*:policy=recompute,kv_cache:on"      # retry faults, int8 cache
-    --plan "qgemm:policy=correct"                # row+col checksum repair
+    --tenant "premium:2=*:policy=recompute,kv_cache:on" \
+    --tenant "batch=*:policy=log,embedding_bag:off"
+    --inject-step 7 --inject-victim attn.wq      # transient flip at step 7
+    --inject-step 7 --inject-persistent          # ... left in place
+
+``--inject-step`` restores the clean weight right after the faulty step
+(unless ``--inject-persistent``), so recompute-policy retries measure one
+transient upset rather than a persistent corruption.
 """
 from __future__ import annotations
 
 # ruff: noqa: E402
 import argparse
-import functools
+import dataclasses
+import json
 import logging
 import os
-import time
+import sys
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def parse_tenant(arg: str):
+    """``NAME[:WEIGHT]=PLAN`` -> (name, weight, plan_text)."""
+    head, _, plan_text = arg.partition("=")
+    if not plan_text:
+        raise ValueError(f"--tenant {arg!r}: expected NAME[:WEIGHT]=PLAN")
+    name, _, w = head.partition(":")
+    if not name:
+        raise ValueError(f"--tenant {arg!r}: empty tenant name")
+    try:
+        weight = float(w) if w else 1.0
+    except ValueError:
+        raise ValueError(f"--tenant {arg!r}: bad weight {w!r} "
+                         f"(expected NAME[:WEIGHT]=PLAN)") from None
+    return name, weight, plan_text
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Continuous-batching protected serving over a "
+                    "synthetic request stream.")
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--decode-tokens", type=int, default=32)
-    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4,
+                    help="decode-batch slots (continuous batching width)")
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="prompt bucket (prompts pad up to this)")
+    ap.add_argument("--decode-tokens", type=int, default=32,
+                    help="max new tokens per request")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty", "trace"])
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="arrival rate (requests/s of virtual time)")
+    ap.add_argument("--trace", default=None,
+                    help="JSON file with arrival offsets (--arrival trace)")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="admission queue bound (0 = unbounded)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model + small stream")
     ap.add_argument("--plan", default=None,
-                    help="protection plan, e.g. "
-                         "'*:policy=recompute,embedding_bag:off' "
-                         "(default: log-policy protection of qgemm + EB)")
+                    help="single-tenant protection plan, e.g. "
+                         "'*:policy=recompute,embedding_bag:off'")
+    ap.add_argument("--tenant", action="append", default=[],
+                    metavar="NAME[:WEIGHT]=PLAN",
+                    help="add a traffic class with its own plan "
+                         "(repeatable; replaces --plan)")
     ap.add_argument("--no-abft", action="store_true",
                     help="unprotected baseline (= --plan '*:off')")
     ap.add_argument("--inject-step", type=int, default=-1,
-                    help="flip a bit in a weight before this decode step "
-                         "(fault-injection demo)")
+                    help="flip a weight bit before this engine step")
+    ap.add_argument("--inject-victim", default=None,
+                    help="victim leaf-path pattern (e.g. 'attn.wq', "
+                         "'mlp.down'); default: largest int8 leaf")
+    ap.add_argument("--inject-persistent", action="store_true",
+                    help="leave the flipped bit in place (default: "
+                         "restore the clean weight after the step)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="write the full telemetry timeline here")
     ap.add_argument("--device-count", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     if args.device_count:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.device_count}")
 
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-
     from repro.configs.registry import get_arch
-    from repro.core.inject import flip_bit_in_leaf
-    from repro.models.base import build_model
-    from repro.protect import (ProtectionPlan, default_plan, protect,
+    from repro.protect import (ProtectionPlan, default_plan,
                                unprotected_plan)
+    from repro.serving import (FaultInjection, ServingEngine, TenantSpec,
+                               chat_stream, dlrm_stream, tenant_weights)
 
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     log = logging.getLogger("repro.serve")
 
-    if args.plan is not None and args.no_abft:
-        ap.error("--no-abft and --plan conflict; start the plan from "
-                 "'*:off' instead (e.g. --plan '*:off,kv_cache:on')")
-    if args.plan is not None:
-        plan = default_plan().with_rules(
-            *ProtectionPlan.parse(args.plan).rules)
-    elif args.no_abft:
-        plan = unprotected_plan()
+    if args.no_abft and (args.plan is not None or args.tenant):
+        ap.error("--no-abft conflicts with --plan/--tenant; start the "
+                 "plan from '*:off' instead")
+    if args.arrival == "trace" and not args.trace:
+        ap.error("--arrival trace needs --trace FILE")
+
+    if args.tenant:
+        tenants = []
+        for t in args.tenant:
+            try:
+                name, weight, plan_text = parse_tenant(t)
+                plan = default_plan().with_rules(
+                    *ProtectionPlan.parse(plan_text).rules)
+            except ValueError as e:
+                ap.error(str(e))
+            tenants.append(TenantSpec(
+                name, dataclasses.replace(plan, name=name), weight))
     else:
-        plan = default_plan()
-    log.info("protection plan: %s", plan.describe())
+        if args.plan is not None:
+            plan = default_plan().with_rules(
+                *ProtectionPlan.parse(args.plan).rules)
+        elif args.no_abft:
+            plan = unprotected_plan()
+        else:
+            plan = default_plan()
+        tenants = [TenantSpec("default", plan)]
+    for t in tenants:
+        log.info("tenant %-10s (weight %g): %s", t.name, t.weight,
+                 t.resolved_plan().describe())
 
     cfg = get_arch(args.arch)
+    dlrm_extras = None
     if args.smoke:
         from repro.configs import reduce_cfg
         cfg = reduce_cfg(cfg)
+        args.requests = min(args.requests, 12)
+        args.prompt_len = min(args.prompt_len, 32)
+        args.decode_tokens = min(args.decode_tokens, 8)
+        if cfg.family == "dlrm":
+            from repro.configs.dlrm import EXTRAS
+            dlrm_extras = dataclasses.replace(
+                EXTRAS, table_rows=512, n_tables=4, emb_dim=32,
+                bottom_mlp=(64, 32), top_mlp=(64, 32, 1))
 
-    cache_len = args.prompt_len + args.decode_tokens + cfg.meta_tokens + 8
-    model = build_model(cfg, max_pos=cache_len + 8)
+    engine = ServingEngine(cfg, tenants, n_slots=args.slots,
+                           max_prompt=args.prompt_len,
+                           max_new_tokens=args.decode_tokens,
+                           queue_depth=args.queue_depth, seed=args.seed,
+                           dlrm_extras=dlrm_extras)
 
-    params = jax.jit(lambda k: model.init(k, quant=True))(jax.random.key(0))
-    from repro.sharding import values_of
-    params = values_of(params)
+    weights = tenant_weights(tenants)
+    trace = None
+    if args.trace:
+        with open(args.trace) as f:
+            trace = json.load(f)
+    if cfg.family == "dlrm":
+        ex = engine.dlrm_extras
+        stream = dlrm_stream(
+            args.requests, tenants=weights, rate_rps=args.rate,
+            arrival=args.arrival, seed=args.seed,
+            lookup_batch=min(ex.batch, 10), table_rows=ex.table_rows,
+            n_tables=ex.n_tables, trace=trace)
+    else:
+        stream = chat_stream(
+            args.requests, tenants=weights, rate_rps=args.rate,
+            arrival=args.arrival, seed=args.seed,
+            mean_prompt=max(args.prompt_len // 2, 4),
+            max_prompt=args.prompt_len,
+            mean_output=max(args.decode_tokens // 2, 1),
+            max_output=args.decode_tokens, trace=trace)
 
-    # the protected apply functions: plan-resolved Ctx, (out, report) calls
-    prefill_p = protect(model.prefill, plan, compute_dtype=jnp.bfloat16)
-    decode_p = protect(model.decode, plan, compute_dtype=jnp.bfloat16)
+    inject = None
+    if args.inject_step >= 0:
+        inject = [FaultInjection(step=args.inject_step,
+                                 victim=args.inject_victim,
+                                 persistent=args.inject_persistent,
+                                 seed=args.seed)]
 
-    @jax.jit
-    def prefill(params, batch):
-        (logits, cache), rep = prefill_p(params, batch, cache_len=cache_len)
-        tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1).astype(jnp.int32)
-        return tok, cache, rep.as_metrics()
+    log.info("serving %d %s requests (%s arrivals @ %g rps) on %d slots, "
+             "%d lane(s)...", args.requests, cfg.family, args.arrival,
+             args.rate, args.slots, len(engine.lanes))
+    telemetry = engine.run(stream, inject=inject)
+    s = telemetry.summary()
 
-    @functools.partial(jax.jit, donate_argnums=(1,))
-    def decode(params, cache, tokens, pos):
-        (logits, new_cache), rep = decode_p(params, cache, tokens, pos)
-        tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1).astype(jnp.int32)
-        return tok, new_cache, rep.as_metrics()
+    log.info("")
+    log.info("%d requests / %d steps in %.3fs of traffic — "
+             "%.1f tok/s, queue depth max %d, decode occupancy %.2f",
+             s["requests"], s["steps"], s["span_s"],
+             s["throughput_tok_s"], s["queue_depth_max"],
+             s["decode_occupancy_mean"])
+    for tname, ts in s["per_tenant"].items():
+        log.info("  %-10s n=%-4d done=%-4d abort=%-3d "
+                 "TTFT p50/p95/p99 = %.1f/%.1f/%.1f ms   "
+                 "tok p99 = %.2f ms", tname, ts["requests"],
+                 ts["completed"], ts["aborted"],
+                 ts["ttft_ms"]["p50"], ts["ttft_ms"]["p95"],
+                 ts["ttft_ms"]["p99"], ts["per_token_ms"]["p99"])
+    f = s["faults"]
+    nz = {k: v for k, v in f["counters"].items() if v}
+    log.info("fault counters: %s", nz or "all zero")
+    for inj in f["injections"]:
+        if inj["detected"]:
+            log.info(">>> injected %s at step %d: DETECTED after %d "
+                     "step(s) (%.2f ms)", inj["victim"], inj["step"],
+                     inj["latency_steps"], 1e3 * inj["latency_s"])
+        else:
+            log.info(">>> injected %s at step %d: NOT detected "
+                     "(masked or escaped)", inj["victim"], inj["step"])
 
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
-        jnp.int32)}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.n_patches, cfg.patch_dim)),
-            jnp.float32)
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.enc_seq, cfg.d_model)),
-            jnp.float32)
-
-    t0 = time.time()
-    tok, cache, metrics = jax.block_until_ready(prefill(params, batch))
-    t_prefill = time.time() - t0
-    log.info("prefill: %.3fs  batch=%d len=%d  gemm_checks=%d errs=%d",
-             t_prefill, args.batch, args.prompt_len,
-             int(metrics.get("abft/gemm_checks", 0)),
-             int(metrics.get("abft/gemm_errors", 0)))
-
-    pos = jnp.full((args.batch,),
-                   args.prompt_len + cfg.meta_tokens, jnp.int32)
-    if cfg.family == "vlm":
-        pos = pos + cfg.n_patches
-    outputs = [np.asarray(tok)]
-    faults = retries = 0
-    t0 = time.time()
-    for step in range(args.decode_tokens):
-        if step == args.inject_step:
-            params, where = flip_bit_in_leaf(params, jax.random.key(step))
-            log.info(">>> injected bit flip into %s", where)
-        tok, cache, metrics = decode(params, cache, tok, pos)
-        errs = int(metrics.get("abft/gemm_errors", 0)) \
-            + int(metrics.get("abft/eb_errors", 0)) \
-            + int(metrics.get("abft/kv_cache_errors", 0))
-        retries += int(metrics.get("abft/retries", 0))
-        if errs:
-            faults += 1
-            log.info("step %d: ABFT detected %d corrupted op(s) — request "
-                     "flagged (plan policy applied)", step, errs)
-        outputs.append(np.asarray(tok))
-        pos = pos + 1
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    log.info("decode: %d tokens in %.3fs (%.1f tok/s/seq)  faulty_steps=%d"
-             "  retries=%d", args.decode_tokens, t_decode,
-             args.decode_tokens / max(t_decode, 1e-9), faults, retries)
-    log.info("sample output ids: %s", np.stack(outputs, 1)[0][:16])
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as fp:
+            json.dump(telemetry.to_dict(), fp, indent=2)
+        log.info("telemetry written to %s", args.json)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

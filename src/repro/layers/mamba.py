@@ -70,14 +70,15 @@ def mamba(p, x, cache, ctx: Ctx, *, d_inner: int, n_state: int,
 
     Returns (y [B,S,d], new_cache, report)."""
     b, s, d = x.shape
-    xz, r1 = apply_linear(p["in_proj"], x, ctx)
+    xz, r1 = apply_linear(p["in_proj"], x, ctx, name="ssm.in_proj")
     xin, z = jnp.split(xz, 2, axis=-1)                       # [B,S,di]
     xin_f = xin.astype(jnp.float32)
     conv_w = p["conv_w"].astype(jnp.float32)
     xc, conv_state = _causal_conv(xin_f, conv_w, cache["conv"])
     xc = jax.nn.silu(xc)
 
-    bcd, r2 = apply_linear(p["x_proj"], xc.astype(ctx.compute_dtype), ctx)
+    bcd, r2 = apply_linear(p["x_proj"], xc.astype(ctx.compute_dtype), ctx,
+                           name="ssm.x_proj")
     bcd = bcd.astype(jnp.float32)
     dt_in = bcd[..., :dt_rank]
     b_t = bcd[..., dt_rank:dt_rank + n_state]                # [B,S,N]
@@ -118,7 +119,7 @@ def mamba(p, x, cache, ctx: Ctx, *, d_inner: int, n_state: int,
                                                                      None, :]
     y = y.astype(ctx.compute_dtype) * jax.nn.silu(
         z.astype(jnp.float32)).astype(ctx.compute_dtype)
-    y, r3 = apply_linear(p["out_proj"], y, ctx)
+    y, r3 = apply_linear(p["out_proj"], y, ctx, name="ssm.out_proj")
     return y, {"conv": conv_state, "h": h}, policy.merge_reports(r1, r2, r3)
 
 

@@ -169,10 +169,10 @@ def timemix(p, x, x_prev, state, ctx: Ctx, *, n_heads: int
         return (xf + (xsf - xf) * mu[i]).astype(ctx.compute_dtype)
 
     xr, xk, xv, xw, xg = (mix(i) for i in range(5))
-    r, r1 = apply_linear(p["wr"], xr, ctx)
-    k, r2 = apply_linear(p["wk"], xk, ctx)
-    v, r3 = apply_linear(p["wv"], xv, ctx)
-    g, r4 = apply_linear(p["wg"], xg, ctx)
+    r, r1 = apply_linear(p["wr"], xr, ctx, name="tm.wr")
+    k, r2 = apply_linear(p["wk"], xk, ctx, name="tm.wk")
+    v, r3 = apply_linear(p["wv"], xv, ctx, name="tm.wv")
+    g, r4 = apply_linear(p["wg"], xg, ctx, name="tm.wg")
     # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw))), log-clamped
     lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)
                     ) @ p["w_lora_b"].astype(jnp.float32)
@@ -196,7 +196,7 @@ def timemix(p, x, x_prev, state, ctx: Ctx, *, n_heads: int
     y = ys.reshape(b, s, d)
     y = layernorm(p["ln_x"], y.astype(ctx.compute_dtype))
     y = y * jax.nn.silu(g.astype(jnp.float32)).astype(ctx.compute_dtype)
-    y, r5 = apply_linear(p["wo"], y, ctx)
+    y, r5 = apply_linear(p["wo"], y, ctx, name="tm.wo")
     return (y, x[:, -1, :], state,
             policy.merge_reports(r1, r2, r3, r4, r5))
 
@@ -219,8 +219,8 @@ def channelmix(p, x, x_prev, ctx: Ctx):
     mu = p["mu"].astype(jnp.float32)
     xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
     xk = (xf + (xsf - xf) * mu[0]).astype(ctx.compute_dtype)
-    k, r1 = apply_linear(p["wk"], xk, ctx)
+    k, r1 = apply_linear(p["wk"], xk, ctx, name="cm.wk")
     k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(
         ctx.compute_dtype)
-    y, r2 = apply_linear(p["wv"], k, ctx)
+    y, r2 = apply_linear(p["wv"], k, ctx, name="cm.wv")
     return y, x[:, -1, :], policy.merge_reports(r1, r2)

@@ -101,7 +101,7 @@ def rwkv_hidden(params, tokens, ctx: Ctx, cfg: ArchConfig, states=None,
 
 def rwkv_logits(params, tokens, ctx: Ctx, cfg: ArchConfig):
     x, _, rep = rwkv_hidden(params, tokens, ctx, cfg)
-    logits, r_h = apply_linear(params["head"], x, ctx)
+    logits, r_h = apply_linear(params["head"], x, ctx, name="lm_head")
     logits = constrain(logits, ("batch", "seq", "vocab"), ctx.rules)
     return logits, policy.merge_reports(rep, r_h), \
         jnp.zeros((), jnp.float32)
@@ -113,7 +113,8 @@ def rwkv_prefill(params, tokens, ctx: Ctx, cfg: ArchConfig):
                                  states=init_rwkv_state_values(cfg,
                                                                tokens.shape[0]),
                                  with_states=True)
-    logits, r_h = apply_linear(params["head"], x[:, -1, :], ctx)
+    logits, r_h = apply_linear(params["head"], x[:, -1, :], ctx,
+                               name="lm_head")
     return logits, states, policy.merge_reports(rep, r_h)
 
 
@@ -134,7 +135,7 @@ def rwkv_decode(params, cache, tokens, pos, ctx: Ctx, cfg: ArchConfig):
                                         (params["layers"], cache),
                                         unroll=ctx.unroll_layers)
     x = layernorm(params["ln_out"], x[:, 0, :])
-    logits, r_h = apply_linear(params["head"], x, ctx)
+    logits, r_h = apply_linear(params["head"], x, ctx, name="lm_head")
     return logits, new_states, policy.merge_reports(rep, r_h)
 
 

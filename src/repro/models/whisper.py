@@ -158,8 +158,10 @@ def decode_train(params, tokens, memory, ctx: Ctx, cfg: ArchConfig,
         cache_l = None
         if with_cache:
             # static cross K/V for decode steps
-            ck, rk = apply_linear(layer_p["cross"]["wk"], memory, ctx)
-            cv, rv = apply_linear(layer_p["cross"]["wv"], memory, ctx)
+            ck, rk = apply_linear(layer_p["cross"]["wk"], memory, ctx,
+                                  name="cross.wk")
+            cv, rv = apply_linear(layer_p["cross"]["wv"], memory, ctx,
+                                  name="cross.wv")
             ck = ck.reshape(b, t_enc, cfg.n_kv_heads,
                             cfg.head_dim_).transpose(0, 2, 1, 3)
             cv = cv.reshape(b, t_enc, cfg.n_kv_heads,
@@ -178,7 +180,8 @@ def decode_train(params, tokens, memory, ctx: Ctx, cfg: ArchConfig,
 def whisper_logits(params, frames, tokens, ctx: Ctx, cfg: ArchConfig):
     memory, r_enc = encode(params, frames, ctx, cfg)
     x, _, r_dec = decode_train(params, tokens, memory, ctx, cfg)
-    logits, r_h = apply_linear(params["dec"]["head"], x, ctx)
+    logits, r_h = apply_linear(params["dec"]["head"], x, ctx,
+                               name="lm_head")
     logits = constrain(logits, ("batch", "seq", "vocab"), ctx.rules)
     return logits, policy.merge_reports(r_enc, r_dec, r_h), \
         jnp.zeros((), jnp.float32)
@@ -189,7 +192,8 @@ def whisper_prefill(params, frames, tokens, ctx: Ctx, cfg: ArchConfig, *,
     memory, r_enc = encode(params, frames, ctx, cfg)
     x, cache, r_dec = decode_train(params, tokens, memory, ctx, cfg,
                                    with_cache=True, cache_len=cache_len)
-    logits, r_h = apply_linear(params["dec"]["head"], x[:, -1, :], ctx)
+    logits, r_h = apply_linear(params["dec"]["head"], x[:, -1, :], ctx,
+                               name="lm_head")
     return logits, cache, policy.merge_reports(r_enc, r_dec, r_h)
 
 
@@ -224,7 +228,8 @@ def whisper_decode(params, cache, tokens, pos, ctx: Ctx, cfg: ArchConfig):
                                        (params["dec"]["layers"], cache),
                                        unroll=ctx.unroll_layers)
     x = layernorm(params["dec"]["ln"], x)
-    logits, r_h = apply_linear(params["dec"]["head"], x, ctx)
+    logits, r_h = apply_linear(params["dec"]["head"], x, ctx,
+                               name="lm_head")
     return logits, new_cache, policy.merge_reports(rep, r_h)
 
 

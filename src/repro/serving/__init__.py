@@ -1,0 +1,42 @@
+"""``repro.serving`` — continuous-batching protected serving engine with
+live-traffic fault telemetry.
+
+The serving stack the paper's overhead argument is really about: request
+streams (Poisson / bursty / trace replay; LM chat + one-shot DLRM
+lookups) flow through an admission queue into a fixed-slot continuous
+batcher; a :class:`ServingEngine` wraps the model with
+:func:`repro.protect.protect` under **per-tenant protection plans**
+(tenants sharing a plan share a jit lane) and applies detect→act
+policies online; telemetry merges SLO percentiles (TTFT / per-token /
+e2e, p50/p95/p99) with the op-keyed fault counters on one timeline.
+
+    from repro.serving import ServingEngine, TenantSpec, chat_stream
+    engine = ServingEngine(cfg, [TenantSpec("premium", plan_a),
+                                 TenantSpec("batch", plan_b)])
+    telemetry = engine.run(chat_stream(200, tenants={"premium": 1,
+                                                     "batch": 2}))
+    telemetry.summary()["per_tenant"]["premium"]["ttft_ms"]["p99"]
+
+``repro.serving.soak`` packages the fault-under-traffic experiment as a
+campaign (``python -m repro.campaign --grid serving_soak``).
+"""
+from repro.serving.batcher import ContinuousBatcher, Slot
+from repro.serving.engine import (FaultInjection, ServingEngine,
+                                  TenantSpec, tenant_weights)
+from repro.serving.queue import AdmissionQueue
+from repro.serving.telemetry import (InjectionRecord, RequestRecord,
+                                     StepEvent, Telemetry, percentiles_ms)
+from repro.serving.workload import (ARRIVALS, Request, bursty_arrivals,
+                                    chat_stream, dlrm_stream,
+                                    make_arrivals, poisson_arrivals,
+                                    sample_tenants, trace_arrivals)
+
+__all__ = [
+    "ServingEngine", "TenantSpec", "FaultInjection", "tenant_weights",
+    "ContinuousBatcher", "Slot", "AdmissionQueue",
+    "Telemetry", "RequestRecord", "StepEvent", "InjectionRecord",
+    "percentiles_ms",
+    "Request", "ARRIVALS", "chat_stream", "dlrm_stream", "make_arrivals",
+    "poisson_arrivals", "bursty_arrivals", "trace_arrivals",
+    "sample_tenants",
+]

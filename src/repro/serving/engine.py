@@ -1,0 +1,567 @@
+"""The protected serving engine: continuous batching over plan lanes.
+
+:class:`ServingEngine` turns the repo's models into a request-serving
+stack.  Tenants (traffic classes) carry their own
+:class:`~repro.protect.ProtectionPlan` — per-tenant policies and
+thresholds, the V-ABFT direction — and tenants sharing a plan share a
+**lane**: one jitted prefill/decode pair compiled against that plan (the
+plan rides in the jit-static ``Ctx``, so distinct plans are necessarily
+distinct compiled programs) and one fixed-slot continuous batcher.
+
+Per engine iteration:
+
+1. arrivals whose (virtual) time has come enter the admission queue;
+2. each lane fills its free decode slots FIFO from the queue and runs a
+   batch=1 prefill per admission (first token = TTFT), inserting the
+   request's KV state into its slot of the lane's batched cache;
+3. each lane with active slots runs ONE batched decode step; detect→act
+   policies run inside (recompute retries, correct, abort — an abort
+   fails the lane's in-flight requests, never the server);
+4. finished requests retire, freeing slots for the next iteration.
+
+The clock is hybrid: arrivals are simulated offsets, service time is the
+measured wall time of the jitted steps (compiles are excluded via
+:meth:`warmup`), so SLO percentiles reflect real compute under the
+chosen protection plans.
+
+Fault injection is first-class: a :class:`FaultInjection` flips a bit in
+a plan-path-addressed weight leaf right before a chosen step and — unless
+``persistent`` — restores the clean weight right after it, so a
+recompute-policy retry measures one *transient* upset, not a permanently
+corrupted model.  Detection shows up in the same telemetry timeline as
+the latency it costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.batcher import ContinuousBatcher, Slot
+from repro.serving.queue import AdmissionQueue
+from repro.serving.telemetry import (InjectionRecord, RequestRecord,
+                                     StepEvent, Telemetry)
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One traffic class: its protection plan and relative traffic share."""
+    name: str
+    plan: object = None            # ProtectionPlan (None = default_plan())
+    weight: float = 1.0
+
+    def resolved_plan(self):
+        from repro.protect import default_plan
+        return self.plan if self.plan is not None else default_plan()
+
+
+@dataclasses.dataclass
+class FaultInjection:
+    """Flip one bit of one weight leaf before global step ``step``."""
+    step: int
+    victim: Optional[str] = None   # dotted-path pattern (core.inject)
+    persistent: bool = False
+    seed: int = 0
+
+
+def tenant_weights(tenants: Sequence[TenantSpec]) -> Dict[str, float]:
+    return {t.name: t.weight for t in tenants}
+
+
+def _counters_of(metrics: dict) -> tuple:
+    """(per-op int counters, total residual errors) from step metrics."""
+    from repro.core.policy import op_kinds
+    out: Dict[str, int] = {}
+    errors = 0
+    for k in op_kinds():
+        c = int(metrics.get(f"abft/{k}_checks", 0))
+        e = int(metrics.get(f"abft/{k}_errors", 0))
+        out[f"{k}_checks"] = c
+        out[f"{k}_errors"] = e
+        errors += e
+    out["retries"] = int(metrics.get("abft/retries", 0))
+    out["corrections"] = int(metrics.get("abft/corrections", 0))
+    return out, errors
+
+
+class _Lane:
+    """One protection plan's slice of the engine: jitted steps + batcher +
+    the jax-side decode state (cache / last tokens / positions)."""
+
+    def __init__(self, key: str, plan, tenants: List[str], n_slots: int):
+        self.key = key
+        self.plan = plan
+        self.tenants = set(tenants)
+        self.batcher = ContinuousBatcher(n_slots)
+        self.n_slots = n_slots
+        self.cache = None
+        self.tokens = None
+        self.pos = None
+        self.prefill_fn = None
+        self.decode_fn = None
+        self.insert_fn = None
+        self.forward_fn = None         # dlrm one-shot lanes
+
+    def accepts(self, req: Request) -> bool:
+        return req.tenant in self.tenants
+
+    def reset(self):
+        """Drop all jax-side state (post-abort lane reset)."""
+        self.cache = None
+        self.tokens = None
+        self.pos = None
+        return self.batcher.drain()
+
+
+class ServingEngine:
+    def __init__(self, cfg, tenants: Sequence[TenantSpec], *,
+                 n_slots: int = 4, max_prompt: int = 64,
+                 max_new_tokens: int = 32, queue_depth: int = 0,
+                 seed: int = 0, compute_dtype=None,
+                 dlrm_extras=None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.base import build_model
+        from repro.sharding import values_of
+
+        if not tenants:
+            raise ValueError("need at least one TenantSpec")
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names in {names}")
+
+        self.cfg = cfg
+        self.tenants = {t.name: t for t in tenants}
+        self.n_slots = n_slots
+        self.max_prompt = max_prompt
+        self.max_new_tokens = max_new_tokens
+        self.queue = AdmissionQueue(max_depth=queue_depth)
+        self.clock_s = 0.0
+        self.global_step = 0
+        self._compute_dtype = (jnp.bfloat16 if compute_dtype is None
+                               else compute_dtype)
+        #: applied-injection stack: [(leaf_idx, clean_leaf, persistent)]
+        #: in application order — restores pop in reverse so an earlier
+        #: fault's clean copy survives a later fault on the same leaf
+        self._injection_state: list = []
+        self._warm = False
+
+        self.is_dlrm = cfg.family == "dlrm"
+        if self.is_dlrm:
+            from repro.configs.dlrm import EXTRAS
+            self.dlrm_extras = dlrm_extras if dlrm_extras is not None \
+                else EXTRAS
+            from repro.models.dlrm import init_dlrm
+            self.model = None
+            self.cache_len = 0
+            self.params = values_of(jax.jit(
+                functools.partial(init_dlrm, ex=self.dlrm_extras,
+                                  quant=True,
+                                  table_rows=self.dlrm_extras.table_rows)
+            )(jax.random.key(seed)))
+        else:
+            extra = cfg.meta_tokens + 8
+            if cfg.family == "vlm":
+                extra += cfg.n_patches
+            self.cache_len = max_prompt + max_new_tokens + extra
+            self.model = build_model(cfg, max_pos=self.cache_len + 8)
+            self.params = values_of(jax.jit(
+                lambda k: self.model.init(k, quant=True)
+            )(jax.random.key(seed)))
+
+        # ------------------------- plan lanes --------------------------------
+        by_plan: Dict[str, List[TenantSpec]] = {}
+        for t in tenants:
+            by_plan.setdefault(t.resolved_plan().describe(), []).append(t)
+        self.lanes: List[_Lane] = []
+        for i, (pkey, specs) in enumerate(sorted(by_plan.items())):
+            lane = _Lane(key=f"lane{i}[{specs[0].resolved_plan().name or pkey}]",
+                         plan=specs[0].resolved_plan(),
+                         tenants=[t.name for t in specs],
+                         n_slots=n_slots)
+            self._build_lane_fns(lane)
+            self.lanes.append(lane)
+        self._lane_of = {name: lane for lane in self.lanes
+                         for name in lane.tenants}
+
+    # ------------------------------ compiled steps ---------------------------
+
+    def _build_lane_fns(self, lane: _Lane) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.protect import protect
+
+        if self.is_dlrm:
+            from repro.models.dlrm import dlrm_forward
+            fwd_p = protect(
+                functools.partial(dlrm_forward, ex=self.dlrm_extras),
+                lane.plan, compute_dtype=self._compute_dtype)
+
+            @jax.jit
+            def forward(params, dense, bags):
+                logit, rep = fwd_p(params, dense, bags)
+                return logit, rep.as_metrics()
+
+            lane.forward_fn = forward
+            return
+
+        cfg = self.cfg
+        prefill_p = protect(self.model.prefill, lane.plan,
+                            compute_dtype=self._compute_dtype)
+        decode_p = protect(self.model.decode, lane.plan,
+                           compute_dtype=self._compute_dtype)
+
+        @jax.jit
+        def prefill(params, batch):
+            (logits, cache), rep = prefill_p(params, batch,
+                                             cache_len=self.cache_len)
+            tok = jnp.argmax(logits[..., :cfg.vocab],
+                             axis=-1).astype(jnp.int32)
+            return tok, cache, rep.as_metrics()
+
+        @jax.jit
+        def decode(params, cache, tokens, pos):
+            (logits, new_cache), rep = decode_p(params, cache, tokens, pos)
+            tok = jnp.argmax(logits[..., :cfg.vocab],
+                             axis=-1).astype(jnp.int32)
+            return tok, new_cache, rep.as_metrics()
+
+        @jax.jit
+        def insert(full, one, slot):
+            return jax.tree.map(
+                lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+                    f, o.astype(f.dtype), slot, axis=1), full, one)
+
+        lane.prefill_fn = prefill
+        lane.decode_fn = decode
+        lane.insert_fn = insert
+
+    # ------------------------------ request payloads -------------------------
+
+    def _chat_batch(self, req: Request) -> dict:
+        import jax.numpy as jnp
+        cfg = self.cfg
+        bucket = self.max_prompt            # single prompt bucket
+        rng = np.random.default_rng(req.seed)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (1, bucket)), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.asarray(rng.standard_normal(
+                (1, cfg.n_patches, cfg.patch_dim)), jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.asarray(rng.standard_normal(
+                (1, cfg.enc_seq, cfg.d_model)), jnp.float32)
+        return batch
+
+    def _prefill_pos(self) -> int:
+        cfg = self.cfg
+        pos = self.max_prompt + cfg.meta_tokens
+        if cfg.family == "vlm":
+            pos += cfg.n_patches
+        return pos
+
+    # ------------------------------ warmup -----------------------------------
+
+    def warmup(self, sample: Optional[Request] = None) -> None:
+        """Compile every lane's steps outside the telemetry clock.
+        ``sample`` pins the dlrm payload shapes (jit traces by shape)."""
+        import jax
+        import jax.numpy as jnp
+
+        if self._warm:
+            return
+        dummy = Request(rid=-1, tenant="_warm", arrival_s=0.0,
+                        prompt_len=self.max_prompt, max_new_tokens=1,
+                        seed=0)
+        for lane in self.lanes:
+            if self.is_dlrm:
+                ex = self.dlrm_extras
+                if sample is not None and sample.payload is not None:
+                    dense = jnp.zeros(sample.payload["dense"].shape,
+                                      jnp.float32)
+                    bags = jnp.zeros(sample.payload["bags"].shape,
+                                     jnp.int32)
+                else:
+                    dense = jnp.zeros((1, ex.n_dense), jnp.float32)
+                    bags = jnp.zeros((ex.n_tables, 1, 1), jnp.int32)
+                jax.block_until_ready(
+                    lane.forward_fn(self.params, dense, bags))
+                continue
+            tok, cache1, _ = lane.prefill_fn(self.params,
+                                             self._chat_batch(dummy))
+            full = self._widened_cache(cache1, lane.n_slots)
+            full = lane.insert_fn(full, cache1, 0)
+            toks = jnp.zeros((lane.n_slots,), jnp.int32)
+            pos = jnp.full((lane.n_slots,), self._prefill_pos(), jnp.int32)
+            jax.block_until_ready(
+                lane.decode_fn(self.params, full, toks, pos))
+        self._warm = True
+
+    @staticmethod
+    def _widened_cache(cache1, n_slots: int):
+        import jax
+        import jax.numpy as jnp
+        return jax.tree.map(
+            lambda x: jnp.zeros((x.shape[0], n_slots) + x.shape[2:],
+                                x.dtype), cache1)
+
+    # ------------------------------ fault injection --------------------------
+
+    def _apply_injection(self, inj: FaultInjection, telemetry: Telemetry):
+        import jax
+
+        from repro.core.inject import random_bitflip_live, victim_leaf_index
+
+        leaves, treedef = jax.tree_util.tree_flatten(self.params)
+        idx, path = victim_leaf_index(self.params, inj.victim)
+        clean = leaves[idx]
+        leaves[idx] = random_bitflip_live(jax.random.key(inj.seed), clean,
+                                          path)
+        self.params = jax.tree_util.tree_unflatten(treedef, leaves)
+        self._injection_state.append((idx, clean, inj.persistent))
+        telemetry.add_injection(InjectionRecord(
+            step=self.global_step, victim=path, clock_s=self.clock_s,
+            persistent=inj.persistent))
+
+    def _restore_injection(self, *, include_persistent: bool = False):
+        """Undo applied injections in reverse application order —
+        transient ones always, persistent ones only on request
+        (:meth:`reset_state`)."""
+        import jax
+        keep = []
+        leaves, treedef = jax.tree_util.tree_flatten(self.params)
+        for idx, clean, persistent in reversed(self._injection_state):
+            if persistent and not include_persistent:
+                keep.append((idx, clean, persistent))
+                continue
+            leaves[idx] = clean
+        self.params = jax.tree_util.tree_unflatten(treedef, leaves)
+        self._injection_state = list(reversed(keep))
+
+    # ------------------------------ engine steps -----------------------------
+
+    def _timed(self, fn, *args):
+        import jax
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        self.clock_s += dt
+        return out, dt
+
+    def _record_slot(self, slot: Slot, telemetry: Telemetry,
+                     aborted: bool = False):
+        req = slot.request
+        telemetry.add_request(RequestRecord(
+            rid=req.rid, tenant=req.tenant, kind=req.kind,
+            arrival_s=req.arrival_s, admit_s=slot.admit_s,
+            first_token_s=slot.first_token_s, finish_s=self.clock_s,
+            prompt_len=req.prompt_len, tokens_out=slot.generated,
+            queue_wait_s=slot.queue_wait_s, aborted=aborted,
+            tokens=getattr(slot, "token_ids", None)))
+
+    def _step_event(self, kind: str, lane: _Lane, dt: float, metrics,
+                    telemetry: Telemetry, injected: bool = False,
+                    errors_override: Optional[int] = None):
+        counters, errors = (_counters_of(metrics) if metrics is not None
+                            else ({}, 0))
+        if errors_override is not None:
+            errors = errors_override
+        telemetry.add_step(StepEvent(
+            step=self.global_step, t_s=self.clock_s, kind=kind,
+            lane=lane.key, duration_s=dt,
+            occupancy=lane.batcher.occupancy(),
+            queue_depth=self.queue.depth(), counters=counters,
+            errors=errors, injected=injected))
+        return errors
+
+    def _abort_lane(self, lane: _Lane, telemetry: Telemetry, dt: float,
+                    injected: bool):
+        """Policy ``abort`` fired: fail the lane's in-flight requests,
+        reset the lane, keep serving."""
+        for slot in lane.reset():
+            self._record_slot(slot, telemetry, aborted=True)
+        self._step_event("decode", lane, dt, None, telemetry,
+                         injected=injected, errors_override=1)
+
+    def _do_prefill(self, lane: _Lane, slot: Slot, telemetry: Telemetry,
+                    injected: bool):
+        from repro.core.policy import is_fault_abort
+
+        req = slot.request
+        try:
+            (tok, cache1, metrics), dt = self._timed(
+                lane.prefill_fn, self.params, self._chat_batch(req))
+        except Exception as e:          # noqa: BLE001 - abort policy only
+            if not is_fault_abort(e):
+                raise
+            self.clock_s += 1e-6
+            lane.batcher.retire(slot.index)
+            self._record_slot(slot, telemetry, aborted=True)
+            self._step_event("prefill", lane, 0.0, None, telemetry,
+                             injected=injected, errors_override=1)
+            return
+        if lane.cache is None:
+            import jax.numpy as jnp
+            lane.cache = self._widened_cache(cache1, lane.n_slots)
+            lane.tokens = jnp.zeros((lane.n_slots,), jnp.int32)
+            lane.pos = jnp.zeros((lane.n_slots,), jnp.int32)
+        lane.cache = lane.insert_fn(lane.cache, cache1, slot.index)
+        lane.tokens = lane.tokens.at[slot.index].set(tok[0])
+        lane.pos = lane.pos.at[slot.index].set(self._prefill_pos())
+        slot.pos = self._prefill_pos()
+        slot.generated = 1
+        slot.first_token_s = self.clock_s
+        slot.token_ids = [int(tok[0])]
+        self._step_event("prefill", lane, dt, metrics, telemetry,
+                         injected=injected)
+
+    def _do_decode(self, lane: _Lane, telemetry: Telemetry,
+                   injected: bool):
+        from repro.core.policy import is_fault_abort
+
+        try:
+            (tok, cache, metrics), dt = self._timed(
+                lane.decode_fn, self.params, lane.cache, lane.tokens,
+                lane.pos)
+        except Exception as e:          # noqa: BLE001 - abort policy only
+            if not is_fault_abort(e):
+                raise
+            self.clock_s += 1e-6
+            self._abort_lane(lane, telemetry, 0.0, injected)
+            return
+        lane.cache = cache
+        lane.tokens = tok
+        lane.pos = lane.pos + 1
+        tok_host = np.asarray(tok)
+        for slot in lane.batcher.active_slots():
+            slot.generated += 1
+            slot.pos += 1
+            slot.token_ids.append(int(tok_host[slot.index]))
+        self._step_event("decode", lane, dt, metrics, telemetry,
+                         injected=injected)
+        for slot in lane.batcher.retire_finished():
+            self._record_slot(slot, telemetry)
+
+    def _do_dlrm(self, lane: _Lane, slot_like: Slot, telemetry: Telemetry,
+                 injected: bool):
+        import jax.numpy as jnp
+
+        from repro.core.policy import is_fault_abort
+
+        req = slot_like.request
+        dense = jnp.asarray(req.payload["dense"])
+        bags = jnp.asarray(req.payload["bags"])
+        aborted = False
+        metrics, dt = None, 0.0
+        try:
+            (_, metrics), dt = self._timed(
+                lane.forward_fn, self.params, dense, bags)
+        except Exception as e:          # noqa: BLE001 - abort policy only
+            if not is_fault_abort(e):
+                raise
+            self.clock_s += 1e-6
+            aborted = True
+        slot_like.first_token_s = None if aborted else self.clock_s
+        self._record_slot(slot_like, telemetry, aborted=aborted)
+        self._step_event("dlrm", lane, dt, metrics, telemetry,
+                         injected=injected,
+                         errors_override=1 if aborted else None)
+
+    def reset_state(self) -> None:
+        """Fresh run state (clock, queue, lanes) with compiled steps kept —
+        soak campaigns run a clean and a faulty pass on one engine.  Any
+        still-applied (persistent) injected fault is restored."""
+        if self._injection_state:
+            self._restore_injection(include_persistent=True)
+        self.clock_s = 0.0
+        self.global_step = 0
+        self.queue = AdmissionQueue(max_depth=self.queue.max_depth)
+        for lane in self.lanes:
+            lane.reset()
+
+    # ------------------------------ main loop --------------------------------
+
+    def run(self, requests: Sequence[Request], *,
+            inject: Optional[Sequence[FaultInjection]] = None,
+            telemetry: Optional[Telemetry] = None,
+            warmup: bool = True,
+            max_iterations: int = 1_000_000) -> Telemetry:
+        telemetry = telemetry if telemetry is not None else Telemetry()
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        for r in pending:
+            if r.tenant not in self._lane_of:
+                raise ValueError(f"request {r.rid} names unknown tenant "
+                                 f"{r.tenant!r}; have "
+                                 f"{sorted(self._lane_of)}")
+        injections = sorted(inject or [], key=lambda i: i.step)
+        inj_i = 0
+        if warmup:
+            self.warmup(pending[0] if pending else None)
+
+        i = 0
+        it = 0
+        while True:
+            it += 1
+            if it > max_iterations:
+                raise RuntimeError("engine exceeded max_iterations "
+                                   "(stuck request stream?)")
+            # 1. arrivals whose time has come; a full bounded queue sheds
+            #    load — the rejection IS the SLO story, so it is recorded
+            while i < len(pending) and pending[i].arrival_s <= self.clock_s:
+                req = pending[i]
+                if not self.queue.push(req, self.clock_s):
+                    telemetry.add_request(RequestRecord(
+                        rid=req.rid, tenant=req.tenant, kind=req.kind,
+                        arrival_s=req.arrival_s, admit_s=self.clock_s,
+                        first_token_s=None, finish_s=self.clock_s,
+                        prompt_len=req.prompt_len, tokens_out=0,
+                        queue_wait_s=0.0, aborted=True, rejected=True))
+                i += 1
+            active = any(lane.batcher.occupancy() for lane in self.lanes)
+            if not self.queue and not active:
+                if i >= len(pending):
+                    break
+                # idle: jump the virtual clock to the next arrival
+                self.clock_s = max(self.clock_s, pending[i].arrival_s)
+                continue
+
+            injected_now = (inj_i < len(injections)
+                            and injections[inj_i].step <= self.global_step)
+            if injected_now:
+                self._apply_injection(injections[inj_i], telemetry)
+                inj_i += 1
+
+            # 2. admissions + prefills (or one-shot dlrm execution)
+            for lane in self.lanes:
+                for slot in lane.batcher.admit(self.queue, self.clock_s,
+                                               accept=lane.accepts):
+                    if slot.request.kind == "dlrm":
+                        lane.batcher.retire(slot.index)
+                        self._do_dlrm(lane, slot, telemetry, injected_now)
+                    else:
+                        self._do_prefill(lane, slot, telemetry,
+                                         injected_now)
+                for slot in lane.batcher.retire_finished():
+                    self._record_slot(slot, telemetry)
+
+            # 3. one decode step per lane with active slots
+            for lane in self.lanes:
+                if lane.batcher.occupancy():
+                    self._do_decode(lane, telemetry, injected_now)
+
+            if injected_now:
+                self._restore_injection()
+            self.global_step += 1
+
+        telemetry.finalize_injections()
+        return telemetry
+
+
+__all__ = ["ServingEngine", "TenantSpec", "FaultInjection",
+           "tenant_weights"]

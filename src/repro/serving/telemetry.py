@@ -1,0 +1,204 @@
+"""Serving telemetry: SLO metrics merged with op-keyed fault counters.
+
+One timeline owns both stories.  Every engine step appends a
+:class:`StepEvent` — wall duration, batch occupancy, queue depth, and the
+step's :class:`~repro.core.policy.FaultReport` counters — and every
+finished request appends a :class:`RequestRecord`.  Because ABFT counters
+and latency samples share the clock, a mid-traffic bit flip shows up in
+the same timeline as its cost: the detection spike, the recompute retries,
+and the TTFT/per-token-latency degradation of the requests in flight.
+
+``summary()`` rolls the timeline up into per-tenant SLO percentiles
+(p50/p95/p99 TTFT, per-token latency, end-to-end latency), throughput,
+queue-depth stats, per-op fault counters, and per-injection detection
+outcome + latency.  ``to_dict()`` is the JSON artifact the soak campaign
+and the serve CLI write.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PCTS = (50.0, 95.0, 99.0)
+
+
+def percentiles_ms(xs_s: List[float]) -> Dict[str, float]:
+    """{"p50": ..., "p95": ..., "p99": ...} in milliseconds."""
+    if not xs_s:
+        return {f"p{int(p)}": float("nan") for p in PCTS}
+    arr = np.asarray(xs_s, np.float64) * 1e3
+    return {f"p{int(p)}": float(np.percentile(arr, p)) for p in PCTS}
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    tenant: str
+    kind: str
+    arrival_s: float
+    admit_s: float
+    first_token_s: Optional[float]
+    finish_s: float
+    prompt_len: int
+    tokens_out: int
+    queue_wait_s: float
+    aborted: bool = False
+    rejected: bool = False               # shed at the admission queue
+    tokens: Optional[List[int]] = None   # emitted ids (soak ground truth)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def e2e_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def per_token_s(self) -> Optional[float]:
+        if self.first_token_s is None or self.tokens_out <= 1:
+            return None
+        return ((self.finish_s - self.first_token_s)
+                / (self.tokens_out - 1))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("tokens")                  # bulky; kept host-side only
+        return d
+
+
+@dataclasses.dataclass
+class StepEvent:
+    step: int
+    t_s: float                           # clock at step end
+    kind: str                            # prefill | decode | dlrm
+    lane: str
+    duration_s: float
+    occupancy: int
+    queue_depth: int
+    counters: Dict[str, int]             # abft/<op>_{checks,errors}, ...
+    errors: int                          # total residual errors this step
+    injected: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class InjectionRecord:
+    step: int
+    victim: str
+    clock_s: float
+    persistent: bool = False
+    detected: bool = False
+    detect_step: Optional[int] = None
+    latency_steps: Optional[int] = None
+    latency_s: Optional[float] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Telemetry:
+    """Collects the request/step/injection timeline for one engine run."""
+
+    def __init__(self):
+        self.requests: List[RequestRecord] = []
+        self.steps: List[StepEvent] = []
+        self.injections: List[InjectionRecord] = []
+
+    # ------------------------------ recording -------------------------------
+
+    def add_request(self, rec: RequestRecord) -> None:
+        self.requests.append(rec)
+
+    def add_step(self, ev: StepEvent) -> None:
+        self.steps.append(ev)
+
+    def add_injection(self, rec: InjectionRecord) -> None:
+        self.injections.append(rec)
+
+    # ------------------------------ analysis --------------------------------
+
+    def finalize_injections(self) -> None:
+        """Attribute each injection to the first flagged step at-or-after
+        it (the engine's detect→act policies run online; this records how
+        long the flag took in steps and wall seconds)."""
+        for inj in self.injections:
+            for ev in self.steps:
+                if ev.step < inj.step or ev.errors <= 0:
+                    continue
+                inj.detected = True
+                inj.detect_step = ev.step
+                inj.latency_steps = ev.step - inj.step
+                inj.latency_s = ev.t_s - inj.clock_s
+                break
+
+    def fault_counters(self) -> Dict[str, int]:
+        total: Dict[str, int] = {}
+        for ev in self.steps:
+            for k, v in ev.counters.items():
+                total[k] = total.get(k, 0) + int(v)
+        return total
+
+    def detection_steps(self) -> List[int]:
+        return [ev.step for ev in self.steps if ev.errors > 0]
+
+    def _tenant_summary(self, recs: List[RequestRecord]) -> dict:
+        served = [r for r in recs if not r.rejected]
+        ttft = [r.ttft_s for r in served if r.ttft_s is not None]
+        ptl = [r.per_token_s for r in served if r.per_token_s is not None]
+        return {
+            "requests": len(recs),
+            "completed": sum(1 for r in served if not r.aborted),
+            "aborted": sum(1 for r in served if r.aborted),
+            "rejected": sum(1 for r in recs if r.rejected),
+            "tokens_out": sum(r.tokens_out for r in recs),
+            "ttft_ms": percentiles_ms(ttft),
+            "per_token_ms": percentiles_ms(ptl),
+            "e2e_ms": percentiles_ms([r.e2e_s for r in served]),
+            "queue_wait_ms": percentiles_ms(
+                [r.queue_wait_s for r in served]),
+        }
+
+    def summary(self) -> dict:
+        self.finalize_injections()
+        tenants = sorted({r.tenant for r in self.requests})
+        span = max((ev.t_s for ev in self.steps), default=0.0)
+        depths = [ev.queue_depth for ev in self.steps]
+        occ = [ev.occupancy for ev in self.steps if ev.kind == "decode"]
+        tokens = sum(r.tokens_out for r in self.requests)
+        return {
+            "requests": len(self.requests),
+            "steps": len(self.steps),
+            "span_s": span,
+            "throughput_tok_s": tokens / span if span > 0 else 0.0,
+            "queue_depth_max": max(depths, default=0),
+            "queue_depth_mean": float(np.mean(depths)) if depths else 0.0,
+            "decode_occupancy_mean": (float(np.mean(occ)) if occ else 0.0),
+            "per_tenant": {t: self._tenant_summary(
+                [r for r in self.requests if r.tenant == t])
+                for t in tenants},
+            "faults": {
+                "counters": self.fault_counters(),
+                "flagged_steps": len(self.detection_steps()),
+                "injections": [i.to_dict() for i in self.injections],
+                "injections_detected": sum(
+                    1 for i in self.injections if i.detected),
+            },
+        }
+
+    def to_dict(self) -> dict:
+        return {
+            "summary": self.summary(),
+            "requests": [r.to_dict() for r in self.requests],
+            "steps": [ev.to_dict() for ev in self.steps],
+        }
+
+
+__all__ = ["Telemetry", "RequestRecord", "StepEvent", "InjectionRecord",
+           "percentiles_ms", "PCTS"]

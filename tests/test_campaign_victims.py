@@ -1,0 +1,89 @@
+"""Victim-selection sweep: plan-path-addressed injection victims in the
+decode soak (`--grid victims`), and the live-region flip helper."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.campaign.spec import CampaignSpec, expand
+from repro.core.abft_gemm import LANE
+from repro.core.inject import (leaf_paths, random_bitflip_live,
+                               victim_leaf_index)
+
+
+def test_expand_sweeps_victims_for_selectable_targets():
+    spec = CampaignSpec(name="t", targets=("decode_step",),
+                        fault_models=("bitflip",),
+                        bit_bands=("significant",),
+                        victims=("attn.wq", "mlp.down"), samples=2)
+    plans, skipped = expand(spec)
+    assert [p.victim for p in plans] == ["attn.wq", "mlp.down"]
+    assert all("vic=" in p.cell_id for p in plans)
+    assert not skipped
+    # seeds stay stable per cell id
+    plans2, _ = expand(spec)
+    assert [(p.cell_id, p.seed) for p in plans] == \
+        [(p.cell_id, p.seed) for p in plans2]
+
+
+def test_expand_skips_victims_for_non_selectable_targets():
+    spec = CampaignSpec(name="t", targets=("gemm_packed",),
+                        victims=("attn.wq",), samples=2)
+    plans, skipped = expand(spec)
+    assert len(plans) == 1 and plans[0].victim is None
+    assert any("no selectable victim" in s["reason"] for s in skipped)
+
+
+def test_victim_leaf_index_patterns():
+    tree = {
+        "layers": {
+            "attn": {"wq": {"w_packed":
+                            jnp.zeros((2, 8, 8 + LANE), jnp.int8)},
+                     "wo": {"w_packed":
+                            jnp.zeros((2, 8, 8 + LANE), jnp.int8)}},
+            "mlp": {"down": {"w_packed":
+                             jnp.zeros((2, 16, 8 + LANE), jnp.int8)}},
+        },
+        "embed": {"table": jnp.zeros((64, 8), jnp.int8),
+                  "alphas": jnp.zeros((64,), jnp.float32)},
+    }
+    idx, path = victim_leaf_index(tree, "attn.wq")
+    assert path == "layers.attn.wq.w_packed"
+    idx2, path2 = victim_leaf_index(tree, "embed.table")
+    assert path2 == "embed.table"
+    # default: largest int8 leaf
+    _, path3 = victim_leaf_index(tree, None)
+    assert path3 == "layers.mlp.down.w_packed"
+    with pytest.raises(ValueError, match="matches no leaf"):
+        victim_leaf_index(tree, "nonexistent.thing")
+    # int8 preferred over larger float leaves
+    tree["huge_f32"] = jnp.zeros((10000,), jnp.float32)
+    _, path4 = victim_leaf_index(tree, None)
+    assert path4 == "layers.mlp.down.w_packed"
+
+
+def test_leaf_paths_cover_all_leaves_in_flatten_order():
+    tree = {"a": {"b": jnp.zeros(3)}, "c": [jnp.ones(2), jnp.ones(1)]}
+    named = leaf_paths(tree)
+    flat = jax.tree_util.tree_flatten(tree)[0]
+    assert len(named) == len(flat)
+    for (name, leaf), ref in zip(named, flat):
+        assert leaf is ref
+    assert [n for n, _ in named] == ["a.b", "c.0", "c.1"]
+
+
+def test_random_bitflip_live_avoids_dead_lanes():
+    """Every flip in a packed weight must land in the weight block or the
+    checksum column — never in the alignment-zero lanes 1..127."""
+    n = 4
+    packed = jnp.zeros((8, n + LANE), jnp.int8)
+    for s in range(64):
+        flipped = random_bitflip_live(jax.random.key(s), packed,
+                                      "layers.mlp.down.w_packed")
+        changed = jnp.argwhere(flipped != packed)
+        assert changed.shape[0] == 1
+        col = int(changed[0, 1])
+        assert col <= n, col                  # weight cols or checksum col
+    # non-packed leaves keep full-leaf semantics
+    plain = jnp.zeros((8, 8), jnp.int8)
+    flipped = random_bitflip_live(jax.random.key(0), plain, "embed.table")
+    assert int(jnp.sum(flipped != plain)) == 1

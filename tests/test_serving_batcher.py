@@ -1,0 +1,119 @@
+"""Admission-queue + continuous-batcher invariants: no slot leak, FIFO
+fairness under burst, bounded-queue load shedding."""
+import numpy as np
+import pytest
+
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.queue import AdmissionQueue
+from repro.serving.workload import Request
+
+
+def _req(rid, tenant="a", arrival=0.0, out=4):
+    return Request(rid=rid, tenant=tenant, arrival_s=arrival,
+                   max_new_tokens=out)
+
+
+def test_fifo_admission_under_burst():
+    q = AdmissionQueue()
+    for i in range(20):                      # one burst, same instant
+        q.push(_req(i), clock_s=0.0)
+    b = ContinuousBatcher(4)
+    admitted_order = []
+    clock = 0.0
+    while q or b.occupancy():
+        for s in b.admit(q, clock):
+            admitted_order.append(s.request.rid)
+        # every active request finishes after one "step"
+        for s in b.active_slots():
+            s.generated = s.request.max_new_tokens
+        b.retire_finished()
+        clock += 1.0
+    assert admitted_order == list(range(20))
+
+
+def test_no_slot_leak_random_cycles():
+    rng = np.random.default_rng(0)
+    q = AdmissionQueue()
+    b = ContinuousBatcher(3)
+    pushed = finished = 0
+    for step in range(200):
+        for _ in range(int(rng.integers(0, 3))):
+            q.push(_req(pushed), clock_s=float(step))
+            pushed += 1
+        b.admit(q, float(step))
+        b.check_invariants()
+        for s in b.active_slots():
+            if rng.random() < 0.5:
+                s.generated = s.request.max_new_tokens
+        finished += len(b.retire_finished())
+        b.check_invariants()
+        assert b.occupancy() + b.free_count() == 3
+    # drain
+    while q or b.occupancy():
+        b.admit(q, 999.0)
+        for s in b.active_slots():
+            s.generated = s.request.max_new_tokens
+        finished += len(b.retire_finished())
+    assert finished == pushed
+
+
+def test_two_lanes_preserve_per_lane_fifo():
+    q = AdmissionQueue()
+    rids = {"a": [], "b": []}
+    for i in range(30):
+        tenant = "a" if i % 3 else "b"
+        q.push(_req(i, tenant=tenant), clock_s=0.0)
+        rids[tenant].append(i)
+    lane_a = ContinuousBatcher(2)
+    lane_b = ContinuousBatcher(1)
+    seen = {"a": [], "b": []}
+    while q or lane_a.occupancy() or lane_b.occupancy():
+        for lane, t in ((lane_a, "a"), (lane_b, "b")):
+            for s in lane.admit(q, 0.0,
+                                accept=lambda r, t=t: r.tenant == t):
+                assert s.request.tenant == t
+                seen[t].append(s.request.rid)
+            for s in lane.active_slots():
+                s.generated = s.request.max_new_tokens
+            lane.retire_finished()
+    assert seen == rids                      # per-lane arrival order
+
+
+def test_queue_bound_rejects_and_counts():
+    q = AdmissionQueue(max_depth=2)
+    assert q.push(_req(0), 0.0) and q.push(_req(1), 0.0)
+    assert not q.push(_req(2, tenant="z"), 0.0)
+    assert q.rejected == {"z": 1}
+    assert q.depth() == 2
+    q.pop_next()
+    assert q.push(_req(3, tenant="z"), 0.0)
+    assert q.tenant_depths() == {"a": 1, "z": 1}
+
+
+def test_pop_next_skips_unaccepted_without_reorder():
+    q = AdmissionQueue()
+    q.push(_req(0, tenant="x"), 0.0)
+    q.push(_req(1, tenant="y"), 0.0)
+    q.push(_req(2, tenant="x"), 0.0)
+    got, _ = q.pop_next(lambda r: r.tenant == "y")
+    assert got.rid == 1
+    assert [r.rid for r in q.peek_all()] == [0, 2]
+
+
+def test_retire_unknown_slot_raises_and_double_retire():
+    b = ContinuousBatcher(2)
+    q = AdmissionQueue()
+    q.push(_req(0), 0.0)
+    (slot,) = b.admit(q, 0.0)
+    b.retire(slot.index)
+    with pytest.raises(KeyError):
+        b.retire(slot.index)
+    b.check_invariants()
+
+
+def test_queue_wait_measured_from_enqueue():
+    q = AdmissionQueue()
+    q.push(_req(0), clock_s=1.0)
+    b = ContinuousBatcher(1)
+    (slot,) = b.admit(q, clock_s=3.5)
+    assert slot.queue_wait_s == pytest.approx(2.5)

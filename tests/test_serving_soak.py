@@ -1,0 +1,96 @@
+"""serving_soak campaign: artifact structure, per-tenant SLO metrics under
+two arrival patterns, online detection of the injected fault."""
+import json
+import os
+
+import pytest
+
+from repro.campaign.artifacts import load_artifact, markdown_table
+from repro.serving.soak import (SoakSpec, quick_soak_spec,
+                                run_soak_campaign, soak_plans)
+
+
+@pytest.fixture(scope="module")
+def soak_result(tmp_path_factory):
+    out = tmp_path_factory.mktemp("soak")
+    spec = SoakSpec(name="serving_soak", arch="llama3.2-1b",
+                    arrivals=("poisson", "bursty"), n_requests=16,
+                    n_slots=2, rate_rps=300.0, max_new_tokens=8, seed=0)
+    result = run_soak_campaign(spec, out_dir=str(out))
+    return result, str(out)
+
+
+def test_artifact_written_and_round_trips(soak_result):
+    result, out = soak_result
+    path = os.path.join(out, "BENCH_campaign_serving_soak.json")
+    assert os.path.exists(path)
+    loaded = load_artifact(path)
+    assert loaded["campaign"] == "serving_soak"
+    assert [c["cell_id"] for c in loaded["cells"]] == \
+        [c["cell_id"] for c in result["cells"]]
+    json.dumps(loaded)                        # fully serializable
+    md = markdown_table(result)
+    assert "serving_soak/poisson" in md and "serving_soak/bursty" in md
+
+
+def test_two_arrival_patterns_with_per_tenant_slo(soak_result):
+    result, _ = soak_result
+    arrivals = {c["plan"]["arrival"] for c in result["cells"]}
+    assert arrivals == {"poisson", "bursty"}
+    for c in result["cells"]:
+        m = c["metrics"]
+        for block in ("slo", "slo_clean"):
+            assert set(m[block]) == {"premium", "standard"}
+            for t in m[block].values():
+                for pct in ("p50", "p95", "p99"):
+                    assert pct in t["ttft_ms"]
+                    assert pct in t["per_token_ms"]
+        assert set(m["slo_degradation"]) == {"premium", "standard"}
+        assert m["clean_samples"] > 0         # clean pass actually ran
+        assert 0.0 <= m["fp_rate"] <= 1.0
+
+
+def test_injected_fault_detected_online(soak_result):
+    result, _ = soak_result
+    detected = [c["metrics"]["detection_rate"] for c in result["cells"]]
+    assert any(d == 1.0 for d in detected), detected
+    for c in result["cells"]:
+        m = c["metrics"]
+        assert m["samples"] >= 1
+        for inj in m["injections"]:
+            assert inj["victim"]
+            if inj["detected"]:
+                assert inj["latency_steps"] >= 0
+
+
+def test_soak_plans_sweep_victims_and_patterns():
+    spec = SoakSpec(name="s", arch="llama3.2-1b",
+                    arrivals=("poisson", "bursty"), n_requests=8,
+                    n_slots=2, rate_rps=100.0, max_new_tokens=4, seed=1,
+                    victims=(None, "attn.wq"))
+    plans = soak_plans(spec)
+    assert len(plans) == 4
+    assert len({p.cell_id for p in plans}) == 4
+    assert {p.victim for p in plans} == {None, "attn.wq"}
+    for p in plans:
+        assert p.inject_steps and all(s >= 5 for s in p.inject_steps)
+
+
+def test_custom_tenant_mix_flows_into_cells():
+    from repro.serving.soak import run_soak_cell
+
+    spec = SoakSpec(name="s", arch="llama3.2-1b", arrivals=("poisson",),
+                    n_requests=4, n_slots=1, rate_rps=200.0,
+                    max_new_tokens=2, seed=2,
+                    tenants=(("vip", 1.0, "*:policy=log"),))
+    (plan,) = soak_plans(spec)
+    assert plan.tenants == (("vip", 1.0, "*:policy=log"),)
+    cell = run_soak_cell(plan)
+    assert set(cell["metrics"]["slo"]) == {"vip"}
+
+
+def test_quick_spec_defaults():
+    spec = quick_soak_spec(seed=3)
+    assert spec.n_requests == 200
+    assert set(spec.arrivals) == {"poisson", "bursty"}
+    assert spec.to_dict()["seed"] == 3

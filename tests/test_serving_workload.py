@@ -1,0 +1,99 @@
+"""Workload generators: seeded determinism, arrival-process shape, and
+payload layouts (dlrm lookups reuse the data/pipeline padded format)."""
+import numpy as np
+import pytest
+
+from repro.serving.workload import (bursty_arrivals, chat_stream,
+                                    dlrm_stream, make_arrivals,
+                                    poisson_arrivals, sample_tenants,
+                                    trace_arrivals)
+
+
+def test_poisson_rate_and_determinism():
+    rng = np.random.default_rng(7)
+    t = poisson_arrivals(50.0, 5000, rng)
+    assert np.all(np.diff(t) >= 0)
+    mean_gap = float(np.mean(np.diff(t)))
+    assert 0.8 / 50.0 < mean_gap < 1.2 / 50.0
+    t2 = poisson_arrivals(50.0, 5000, np.random.default_rng(7))
+    np.testing.assert_allclose(t, t2)
+
+
+def test_bursty_arrivals_cluster():
+    rng = np.random.default_rng(0)
+    t = bursty_arrivals(100.0, 64, rng, burst_size=8,
+                        burst_spread_s=1e-4)
+    assert np.all(np.diff(t) >= 0)
+    gaps = np.diff(t)
+    # most gaps are intra-burst (tiny), a few are inter-burst (large)
+    assert np.sum(gaps < 1e-3) >= 48
+    assert np.sum(gaps > 1e-2) >= 3
+
+
+def test_trace_replay_tiles_past_span():
+    t = trace_arrivals([0.0, 0.5, 1.0], 7, np.random.default_rng(0))
+    assert len(t) == 7
+    np.testing.assert_allclose(t[:3], [0.0, 0.5, 1.0])
+    np.testing.assert_allclose(t[3:6], [1.0, 1.5, 2.0])
+
+
+def test_make_arrivals_validates():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        make_arrivals("weird", 1.0, 4, rng)
+    with pytest.raises(ValueError):
+        make_arrivals("trace", 1.0, 4, rng)          # needs a trace
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 4, rng)
+
+
+def test_sample_tenants_weights():
+    rng = np.random.default_rng(0)
+    who = sample_tenants({"a": 3.0, "b": 1.0}, 4000, rng)
+    frac_a = who.count("a") / 4000
+    assert 0.70 < frac_a < 0.80
+    with pytest.raises(ValueError):
+        sample_tenants({"a": -1.0}, 4, rng)
+
+
+def test_chat_stream_deterministic_and_bounded():
+    kw = dict(tenants={"p": 1.0, "q": 2.0}, rate_rps=100.0, seed=3,
+              mean_prompt=16, max_prompt=32, mean_output=6, max_output=12)
+    s1 = chat_stream(50, **kw)
+    s2 = chat_stream(50, **kw)
+    assert [(r.rid, r.tenant, r.arrival_s, r.prompt_len,
+             r.max_new_tokens, r.seed) for r in s1] == \
+           [(r.rid, r.tenant, r.arrival_s, r.prompt_len,
+             r.max_new_tokens, r.seed) for r in s2]
+    for r in s1:
+        assert 4 <= r.prompt_len <= 32
+        assert 1 <= r.max_new_tokens <= 12
+        assert r.kind == "chat"
+    assert [r.arrival_s for r in s1] == sorted(r.arrival_s for r in s1)
+
+
+def test_dlrm_stream_payload_matches_pipeline_layout():
+    s = dlrm_stream(5, tenants={"rec": 1.0}, seed=0, lookup_batch=6,
+                    table_rows=100, n_tables=4, max_pool=8)
+    for r in s:
+        assert r.kind == "dlrm" and r.max_new_tokens == 0
+        dense, bags = r.payload["dense"], r.payload["bags"]
+        assert dense.shape == (6, 13)          # EXTRAS.n_dense
+        assert bags.shape == (4, 6, 8)
+        assert bags.dtype == np.int32
+        live = bags[bags >= 0]
+        assert live.size and live.max() < 100
+        assert (bags == -1).any()              # variable pooling pads
+        # pad layout: -1s trail the live prefix of each bag
+        for t in range(4):
+            for b in range(6):
+                row = bags[t, b]
+                n_live = int((row >= 0).sum())
+                assert (row[:n_live] >= 0).all()
+                assert (row[n_live:] == -1).all()
+
+
+def test_request_kind_validated():
+    from repro.serving.workload import Request
+    with pytest.raises(ValueError):
+        Request(rid=0, tenant="a", arrival_s=0.0, kind="video")
