@@ -17,8 +17,8 @@ Library use::
     result = run_campaign("my-sweep", [spec], out_dir=".")
 """
 from repro.campaign.artifacts import (cell_metrics, find_cells,
-                                      load_artifact, markdown_table,
-                                      threshold_curve,
+                                      latency_markdown, load_artifact,
+                                      markdown_table, threshold_curve,
                                       threshold_curve_markdown,
                                       write_artifacts)
 from repro.campaign.diff import diff_artifacts, format_diff, run_diff
@@ -38,6 +38,7 @@ __all__ = [
     "CellMetrics", "compute_metrics", "wilson_interval",
     "CellResult", "run_cell", "run_specs", "run_campaign",
     "load_artifact", "write_artifacts", "markdown_table", "cell_metrics",
-    "find_cells", "threshold_curve", "threshold_curve_markdown",
+    "find_cells", "latency_markdown", "threshold_curve",
+    "threshold_curve_markdown",
     "diff_artifacts", "format_diff", "run_diff",
 ]

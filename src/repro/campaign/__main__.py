@@ -7,6 +7,7 @@ Examples::
     python -m repro.campaign --grid paper --seed 7
     python -m repro.campaign --grid thresholds        # EB rel_bound sweep
     python -m repro.campaign --grid victims           # decode victim sweep
+    python -m repro.campaign --grid training --quick  # train-step seams
     python -m repro.campaign --grid serving_soak --quick   # live-traffic
     python -m repro.campaign --grid full --device-count 8 --out bench/
     python -m repro.campaign --diff OLD.json NEW.json # exit 1 on regression
@@ -27,7 +28,8 @@ def main(argv=None) -> int:
                     help="shorthand for --grid quick (the CI smoke grid)")
     ap.add_argument("--grid", default=None,
                     choices=["quick", "paper", "thresholds", "soak",
-                             "victims", "serving_soak", "full"],
+                             "victims", "training", "serving_soak",
+                             "full"],
                     help="named grid to run (see repro.campaign.grids; "
                          "serving_soak runs repro.serving.soak)")
     ap.add_argument("--seed", type=int, default=0)
@@ -70,12 +72,14 @@ def main(argv=None) -> int:
     # jax import happens after XLA_FLAGS is set
     from repro.campaign.executor import CHUNK, run_campaign
     from repro.campaign.grids import (GRIDS, paper_specs, quick_specs,
-                                      thresholds_specs, victims_specs)
+                                      thresholds_specs, training_specs,
+                                      victims_specs)
 
     grid = args.grid or ("quick" if args.quick else None)
     if grid is None:
         ap.error("pick a grid (--quick / --grid {quick,paper,thresholds,"
-                 "soak,victims,serving_soak,full}) or --diff OLD NEW")
+                 "soak,victims,training,serving_soak,full}) or "
+                 "--diff OLD NEW")
     if grid == "serving_soak":
         # live-traffic soak: the serving engine, not the vmapped executor
         from repro.campaign.artifacts import markdown_table
@@ -98,20 +102,28 @@ def main(argv=None) -> int:
                                  samples=args.samples or 400)
     elif grid == "victims":
         specs = victims_specs(seed=args.seed, samples=args.samples or 12)
+    elif grid == "training":
+        specs = training_specs(seed=args.seed, quick=args.quick,
+                               samples=args.samples or 0)
     else:
         specs = GRIDS[grid](seed=args.seed)
 
-    result = run_campaign(grid, specs, out_dir=args.out,
+    # quick training runs get their own artifact name: the committed CI
+    # baseline is the quick variant and must not collide with full runs
+    name = "training_quick" if grid == "training" and args.quick else grid
+    result = run_campaign(name, specs, out_dir=args.out,
                           chunk=args.chunk or CHUNK,
                           verbose=lambda s: print(s, flush=True))
 
-    from repro.campaign.artifacts import (markdown_table,
+    from repro.campaign.artifacts import (latency_markdown, markdown_table,
                                           threshold_curve_markdown)
     print()
     print(markdown_table(result))
     if grid == "thresholds":
         print(threshold_curve_markdown(result))
-    print(f"artifact: {os.path.join(args.out, 'BENCH_campaign_' + grid)}"
+    if grid in ("training", "full"):
+        print(latency_markdown(result))
+    print(f"artifact: {os.path.join(args.out, 'BENCH_campaign_' + name)}"
           f".json")
     return 0
 

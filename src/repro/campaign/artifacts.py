@@ -67,6 +67,9 @@ def write_artifacts(result: dict, out_dir: str = ".") -> tuple:
         f.write("\n")
     with open(md_path, "w") as f:
         f.write(markdown_table(result))
+        lat = latency_markdown(result)
+        if lat:
+            f.write("\n" + lat)
     return json_path, md_path
 
 
@@ -131,6 +134,43 @@ def markdown_table(result: dict) -> str:
     return "\n".join(lines)
 
 
+def latency_markdown(result: dict) -> str:
+    """Detection-latency + divergence summary for soak-protocol cells.
+
+    Renders every cell that carries the soak columns (``steps`` /
+    ``detection_latency_hist``), including ``steps=1`` cells — their
+    divergence ground truth has no other home in the tables; cells from
+    single-shot (``trial``) targets are omitted.  The histogram column
+    reads ``t0:n0 t1:n1 ...`` — n trials first detected t steps after
+    the upset."""
+    lines = ["# Soak cells: detection latency & divergence", "",
+             "| cell | steps | latency hist | mean lat | div (mean/max) |"
+             " loss div |",
+             "|---|---|---|---|---|---|"]
+    found = False
+    for c in result["cells"]:
+        m = c["metrics"]
+        if m.get("steps") is None:
+            continue
+        found = True
+        hist = m.get("detection_latency_hist") or []
+        hist_s = " ".join(f"{t}:{n}" for t, n in enumerate(hist) if n) \
+            or "—"
+        lat = m.get("mean_detection_latency")
+        lines.append(
+            "| `{cid}` | {steps} | {hist} | {lat} | {dm:.2e}/{dx:.2e} | "
+            "{ld:.2e} |".format(
+                cid=c["cell_id"], steps=m["steps"], hist=hist_s,
+                lat="—" if lat is None else f"{lat:.2f}",
+                dm=m.get("divergence_mean") or 0.0,
+                dx=m.get("divergence_max") or 0.0,
+                ld=m.get("loss_divergence_mean") or 0.0))
+    if not found:
+        return ""
+    lines.append("")
+    return "\n".join(lines)
+
+
 def threshold_curve(result: dict, target: str = "embedding_bag") -> dict:
     """Detection-vs-FP tradeoff per bit band from a rel_bound sweep.
 
@@ -165,5 +205,6 @@ def threshold_curve_markdown(result: dict,
 
 __all__ = ["campaign_to_dict", "write_artifacts", "load_artifact",
            "cell_metrics", "find_cells", "markdown_table",
-           "threshold_curve", "threshold_curve_markdown",
-           "environment_info", "SCHEMA_VERSION", "CellPlan"]
+           "latency_markdown", "threshold_curve",
+           "threshold_curve_markdown", "environment_info",
+           "SCHEMA_VERSION", "CellPlan"]

@@ -73,6 +73,66 @@ def _chunked_counts(fn: Callable, keys: jax.Array, chunk: int,
     return total
 
 
+def _chunked_soak(fn: Callable, keys: jax.Array, chunk: int,
+                  steps: int) -> dict:
+    """Run a soak-protocol target over all keys.
+
+    ``fn(key) -> {"detected_steps": bool [steps], "corrupted": bool,
+    "divergence": f32, "loss_divergence": f32}``.  Returns host-side
+    aggregates: detection/corruption/escape counts, the per-step
+    first-detection latency histogram, and divergence stats.  Multi-device
+    hosts split each chunk across devices with pmap(vmap(...)), like
+    :func:`_chunked_counts`.
+    """
+    def batch(ks):
+        out = jax.vmap(fn)(ks)
+        det_steps = out["detected_steps"].astype(jnp.int32)   # [B, steps]
+        detected = jnp.any(det_steps > 0, axis=1)
+        corrupted = out["corrupted"]
+        first = jnp.argmax(det_steps, axis=1)                 # [B]
+        # histogram of first-detection latency, detected trials only
+        hist = jnp.sum(
+            (first[:, None] == jnp.arange(steps)[None, :])
+            & detected[:, None], axis=0).astype(jnp.int32)
+        return {
+            "detected": jnp.sum(detected.astype(jnp.int32)),
+            "corrupted": jnp.sum(corrupted.astype(jnp.int32)),
+            "det_and_cor": jnp.sum((detected & corrupted)
+                                   .astype(jnp.int32)),
+            "hist": hist,
+            "div_sum": jnp.sum(out["divergence"]),
+            "div_max": jnp.max(out["divergence"]),
+            "loss_div_sum": jnp.sum(out["loss_divergence"]),
+        }
+
+    ndev = len(jax.local_devices())
+    jbatch = jax.jit(batch)
+    pbatch = jax.pmap(batch) if ndev > 1 else None
+
+    total = {"detected": 0, "corrupted": 0, "det_and_cor": 0,
+             "hist": np.zeros(steps, np.int64), "div_sum": 0.0,
+             "div_max": 0.0, "loss_div_sum": 0.0}
+    i, n = 0, keys.shape[0]
+    while i < n:
+        take = min(chunk * max(ndev, 1), n - i)
+        ks = keys[i:i + take]
+        if pbatch is not None and take % ndev == 0 and take >= ndev:
+            out = jax.device_get(pbatch(
+                ks.reshape((ndev, take // ndev) + ks.shape[1:])))
+            out = {k: (v.max(axis=0) if k == "div_max" else v.sum(axis=0))
+                   for k, v in out.items()}
+        else:
+            out = jax.device_get(jbatch(ks))
+        for k in ("detected", "corrupted", "det_and_cor"):
+            total[k] += int(out[k])
+        total["hist"] += np.asarray(out["hist"], np.int64)
+        total["div_sum"] += float(out["div_sum"])
+        total["div_max"] = max(total["div_max"], float(out["div_max"]))
+        total["loss_div_sum"] += float(out["loss_div_sum"])
+        i += take
+    return total
+
+
 def _median_time(fn: Callable) -> float:
     from repro.campaign.timing import median_time
     return median_time(jax.jit(fn))
@@ -86,10 +146,26 @@ def run_cell(plan: CellPlan, *, chunk: int = CHUNK) -> CellResult:
 
     state = target.build(plan, k_build)
 
-    trial_counts = _chunked_counts(
-        lambda k: target.trial(state, plan, k),
-        jax.random.split(k_trial, plan.samples), chunk, 2)
-    detected, corrupted, det_and_cor = (int(c) for c in trial_counts)
+    soak_extras: dict = {}
+    if target.soak is not None:
+        agg = _chunked_soak(
+            lambda k: target.soak(state, plan, k),
+            jax.random.split(k_trial, plan.samples), chunk, plan.steps)
+        detected = agg["detected"]
+        corrupted = agg["corrupted"]
+        det_and_cor = agg["det_and_cor"]
+        soak_extras = {
+            "steps": plan.steps,
+            "detection_latency_hist": [int(c) for c in agg["hist"]],
+            "divergence_mean": agg["div_sum"] / plan.samples,
+            "divergence_max": agg["div_max"],
+            "loss_divergence_mean": agg["loss_div_sum"] / plan.samples,
+        }
+    else:
+        trial_counts = _chunked_counts(
+            lambda k: target.trial(state, plan, k),
+            jax.random.split(k_trial, plan.samples), chunk, 2)
+        detected, corrupted, det_and_cor = (int(c) for c in trial_counts)
 
     false_positives = 0
     if plan.clean_samples > 0:
@@ -112,7 +188,8 @@ def run_cell(plan: CellPlan, *, chunk: int = CHUNK) -> CellResult:
         clean_samples=plan.clean_samples,
         false_positives=false_positives,
         analytic_bound=target.analytic_bound(plan),
-        protected_s=protected_s, unprotected_s=unprotected_s)
+        protected_s=protected_s, unprotected_s=unprotected_s,
+        **soak_extras)
     return CellResult(plan=plan, metrics=metrics,
                       seconds=time.perf_counter() - t0)
 

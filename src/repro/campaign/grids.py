@@ -8,6 +8,10 @@
 ``soak``   — the full-model decode-step sweep across fault models/bands.
 ``victims`` — decode-soak victim sweep: which leaf gets flipped, addressed
              by protect-plan path patterns (``attn.wq``, ``mlp.down``, ...).
+``training`` — training-step resilience: faults at every seam of the
+             compressed-gradient optimizer pipeline (pre/post checked_psum,
+             int8 payload, error feedback, AdamW moments) plus multi-step
+             persistent-fault soaks with detection-latency histograms.
 ``full``   — everything above plus the beyond-paper KV-cache cells.
 
 (The ``serving_soak`` grid — faults under live traffic — lives in
@@ -114,6 +118,45 @@ def victims_specs(seed: int = 0, samples: int = 12) -> List[CampaignSpec]:
         samples=samples, clean_samples=4, seed=seed)]
 
 
+#: every training-pipeline injection seam (repro.campaign.targets_training)
+TRAINING_TARGETS = ("train_grad_pre", "train_payload", "train_grad_post",
+                    "train_moments")
+
+
+def training_specs(seed: int = 0, quick: bool = False,
+                   samples: int = 0) -> List[CampaignSpec]:
+    """Training-step resilience (ROADMAP item): real optimizer steps with
+    faults at every seam of the compressed-gradient pipeline, plus a
+    multi-step soak that tracks one upset across consecutive steps until
+    detected / masked / escaped.
+
+    Two specs: single-step coverage of all four seams (the per-seam
+    detection/escape/divergence table), then the ``steps``-deep soak over
+    the stateful seams (payload transport + error feedback + moments) with
+    a transient-vs-persistent sweep — the per-step detection-latency
+    histogram lands in the artifact's soak columns.
+    """
+    n = samples or (6 if quick else 20)
+    soak_steps = 4 if quick else 8
+    single = CampaignSpec(
+        name="train-seams",
+        targets=TRAINING_TARGETS,
+        fault_models=("bitflip",),
+        bit_bands=("significant",) if quick else ("significant", "low"),
+        dtypes=("int8", "float32"),
+        samples=n, clean_samples=2, seed=seed,
+        measure_overhead=True)
+    soak = CampaignSpec(
+        name="train-soak",
+        targets=("train_payload", "train_moments"),
+        fault_models=("bitflip",),
+        bit_bands=("significant",),
+        dtypes=("int8", "float32"),
+        samples=max(4, n // 2), clean_samples=2, seed=seed,
+        steps=soak_steps, persistent=(False, True))
+    return [single, soak]
+
+
 def soak_specs(seed: int = 0) -> List[CampaignSpec]:
     return [CampaignSpec(
         name="soak",
@@ -132,7 +175,8 @@ def full_specs(seed: int = 0) -> List[CampaignSpec]:
         bit_bands=("all", "low", "significant", "exponent"),
         dtypes=("int8", "float32"),
         samples=400, seed=seed, measure_overhead=True)
-    return paper_specs(seed) + [kv] + soak_specs(seed)
+    return paper_specs(seed) + [kv] + soak_specs(seed) \
+        + training_specs(seed)
 
 
 GRIDS: Dict[str, object] = {
@@ -141,5 +185,6 @@ GRIDS: Dict[str, object] = {
     "thresholds": thresholds_specs,
     "soak": soak_specs,
     "victims": victims_specs,
+    "training": training_specs,
     "full": full_specs,
 }

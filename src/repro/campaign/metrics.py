@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 
 def wilson_interval(k: int, n: int, z: float = 1.96) -> Tuple[float, float]:
@@ -50,6 +50,21 @@ class CellMetrics:
     overhead: Optional[float] = None
     protected_s: Optional[float] = None
     unprotected_s: Optional[float] = None
+    # ------- multi-step soak columns (None for single-shot cells) -------
+    #: steps per trial the cell actually ran
+    steps: Optional[int] = None
+    #: hist[t] = trials whose FIRST detection fired t steps after the
+    #: upset — the per-step detection-latency histogram; undetected trials
+    #: are not in the histogram (they are the escape/masked columns)
+    detection_latency_hist: Optional[List[int]] = None
+    #: mean of the histogram above (None when nothing was detected)
+    mean_detection_latency: Optional[float] = None
+    #: relative L2 parameter divergence from the clean twin run, over
+    #: faulty trials (the training ground truth: how far did it drift)
+    divergence_mean: Optional[float] = None
+    divergence_max: Optional[float] = None
+    #: max |loss_faulty - loss_clean| over the soak, averaged over trials
+    loss_divergence_mean: Optional[float] = None
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -68,13 +83,25 @@ def compute_metrics(*, samples: int, detected: int, corrupted: int,
                     false_positives: int,
                     analytic_bound: Optional[float] = None,
                     protected_s: Optional[float] = None,
-                    unprotected_s: Optional[float] = None) -> CellMetrics:
+                    unprotected_s: Optional[float] = None,
+                    steps: Optional[int] = None,
+                    detection_latency_hist: Optional[List[int]] = None,
+                    divergence_mean: Optional[float] = None,
+                    divergence_max: Optional[float] = None,
+                    loss_divergence_mean: Optional[float] = None
+                    ) -> CellMetrics:
     # |detected ∪ masked| = samples - |corrupted ∩ undetected|
     escapes = corrupted - detected_and_corrupted
     effective = samples - escapes
     overhead = None
     if protected_s is not None and unprotected_s and unprotected_s > 0:
         overhead = protected_s / unprotected_s - 1.0
+    mean_latency = None
+    if detection_latency_hist is not None:
+        n_det = sum(detection_latency_hist)
+        if n_det:
+            mean_latency = sum(t * c for t, c in
+                               enumerate(detection_latency_hist)) / n_det
     return CellMetrics(
         samples=samples,
         corrupted=corrupted,
@@ -92,4 +119,10 @@ def compute_metrics(*, samples: int, detected: int, corrupted: int,
         overhead=overhead,
         protected_s=protected_s,
         unprotected_s=unprotected_s,
+        steps=steps,
+        detection_latency_hist=detection_latency_hist,
+        mean_detection_latency=mean_latency,
+        divergence_mean=divergence_mean,
+        divergence_max=divergence_max,
+        loss_divergence_mean=loss_divergence_mean,
     )

@@ -72,6 +72,15 @@ class CampaignSpec:
     #: (``attn.wq``, ``mlp.down``, ``embed.table``, ...); () = each
     #: target's default victim (largest int8 leaf)
     victims: Tuple[str, ...] = ()
+    #: multi-step soak depth (soak-capable targets only): each trial runs
+    #: ``steps`` consecutive train/decode steps and reports per-step
+    #: detection so a single upset's latency is measured, not just its
+    #: eventual fate.  1 = the classic single-shot trial.
+    steps: int = 1
+    #: fault-persistence sweep (soak-capable targets only): False = one
+    #: transient upset at step 0; True = the fault re-strikes the same
+    #: site every step (a failing cell re-corrupting each access).
+    persistent: Tuple[bool, ...] = (False,)
 
     def __post_init__(self):
         if self.samples < 1:
@@ -80,9 +89,11 @@ class CampaignSpec:
             raise ValueError("flips_per_trial must be >= 1")
         if any(b <= 0 for b in self.rel_bounds):
             raise ValueError("rel_bounds must be positive")
+        if self.steps < 1:
+            raise ValueError("steps must be >= 1")
         # tolerate lists from JSON round-trips / hand-written specs
         for f in ("targets", "fault_models", "bit_bands", "dtypes",
-                  "rel_bounds", "victims"):
+                  "rel_bounds", "victims", "persistent"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -115,6 +126,10 @@ class CellPlan:
     rel_bound: Optional[float] = None
     #: injection-victim leaf-path pattern (None = target default)
     victim: Optional[str] = None
+    #: consecutive steps per trial (soak-capable targets; 1 = single shot)
+    steps: int = 1
+    #: True = the fault re-strikes the same site every step of the soak
+    persistent: bool = False
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -130,13 +145,18 @@ def cell_seed(spec_seed: int, cell_id: str) -> int:
 def _cell_id(target: str, model: str, band: str,
              shape: Sequence[int], dtype: str,
              rel_bound: Optional[float] = None,
-             victim: Optional[str] = None) -> str:
+             victim: Optional[str] = None,
+             steps: int = 1, persistent: bool = False) -> str:
     s = "x".join(str(d) for d in shape) if shape else "default"
     base = f"{target}/{model}/{band}/{s}/{dtype}"
     if rel_bound is not None:
         base += f"/rb{rel_bound:g}"
     if victim is not None:
         base += f"/vic={victim}"
+    if steps > 1:
+        base += f"/steps{steps}"
+    if persistent:
+        base += "/persistent"
     return base
 
 
@@ -170,10 +190,35 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
                 "cell_id": _cell_id(tname, model, band, (), dtype),
                 "reason": f"target {tname} has no selectable victim "
                           f"(victims sweep ignored)"})
-        for shape, rel_bound, victim in itertools.product(shapes, bounds,
-                                                          victims):
+        soakable = target.soak is not None
+        steps = spec.steps if soakable else 1
+        if spec.steps > 1 and not soakable:
+            skipped.append({
+                "cell_id": _cell_id(tname, model, band, (), dtype),
+                "reason": f"target {tname} is single-step "
+                          f"(steps={spec.steps} ignored)"})
+        persistence = tuple(dict.fromkeys(spec.persistent)) if soakable \
+            else (False,)
+        if any(spec.persistent) and not soakable:
+            skipped.append({
+                "cell_id": _cell_id(tname, model, band, (), dtype),
+                "reason": f"target {tname} cannot carry a persistent "
+                          f"fault (persistent sweep ignored)"})
+        if steps == 1 and any(persistence):
+            # a fault that re-strikes "every step" of a 1-step trial IS
+            # the transient fault — a /persistent cell here would be a
+            # duplicate measurement under a misleading label
+            persistence = (False,)
+            skipped.append({
+                "cell_id": _cell_id(tname, model, band, (), dtype,
+                                    persistent=True),
+                "reason": "persistent is indistinguishable from "
+                          "transient at steps=1 (duplicate cell "
+                          "dropped)"})
+        for shape, rel_bound, victim, persistent in itertools.product(
+                shapes, bounds, victims, persistence):
             cid = _cell_id(tname, model, band, shape, dtype, rel_bound,
-                           victim)
+                           victim, steps, persistent)
             if cid in seen:
                 continue
             seen.add(cid)
@@ -217,5 +262,6 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
                 flips=spec.flips_per_trial,
                 seed=cell_seed(spec.seed, cid),
                 measure_overhead=spec.measure_overhead,
-                rel_bound=rel_bound, victim=victim))
+                rel_bound=rel_bound, victim=victim,
+                steps=steps, persistent=persistent))
     return plans, skipped

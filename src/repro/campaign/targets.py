@@ -55,11 +55,12 @@ def apply_fault(key: jax.Array, x: jax.Array, plan: CellPlan,
 class InjectableTarget:
     name: str
     build: Callable[[CellPlan, jax.Array], Any]
-    trial: Callable[[Any, CellPlan, jax.Array],
-                    Tuple[jax.Array, jax.Array]]
-    clean: Callable[[Any, CellPlan, jax.Array], jax.Array]
-    default_shapes: Tuple[Tuple[int, ...], ...]
-    shape_arity: int
+    #: single-shot trial (exactly one of ``trial`` / ``soak`` must be set)
+    trial: Optional[Callable[[Any, CellPlan, jax.Array],
+                             Tuple[jax.Array, jax.Array]]] = None
+    clean: Optional[Callable[[Any, CellPlan, jax.Array], jax.Array]] = None
+    default_shapes: Tuple[Tuple[int, ...], ...] = ()
+    shape_arity: int = 0
     dtypes: Tuple[str, ...] = ("int8",)
     fault_models: Tuple[str, ...] = ("bitflip", "random_value")
     bands: Tuple[str, ...] = ("all", "low", "significant", "sign")
@@ -76,6 +77,21 @@ class InjectableTarget:
     #: pattern (protect-plan vocabulary) — expand() sweeps spec.victims
     #: over them only
     victim_selectable: bool = False
+    #: multi-step soak protocol (replaces ``trial`` when set): one call =
+    #: ``plan.steps`` consecutive steps with the fault injected at step 0
+    #: (re-struck every step when ``plan.persistent``).  Must return a dict
+    #: of fixed-shape arrays: ``detected_steps`` (bool [steps]),
+    #: ``corrupted`` (bool), ``divergence`` / ``loss_divergence`` (f32
+    #: scalars vs the clean twin run).  expand() routes spec.steps /
+    #: spec.persistent sweeps to these targets only.
+    soak: Optional[Callable[[Any, CellPlan, jax.Array], dict]] = None
+
+    def __post_init__(self):
+        if (self.trial is None) == (self.soak is None):
+            raise ValueError(
+                f"target {self.name!r}: exactly one of trial/soak required")
+        if self.clean is None:
+            raise ValueError(f"target {self.name!r}: clean is required")
 
 
 TARGETS: dict = {}
@@ -475,3 +491,8 @@ register_target(InjectableTarget(
 
 __all__ = ["InjectableTarget", "TARGETS", "register_target", "get_target",
            "apply_fault", "DLRM_GEMM_SHAPES", "DECODE_ARCH"]
+
+# training-step targets register themselves on import (kept in their own
+# module — they pull in launch/optim/runtime machinery this module's
+# operator targets never need)
+from repro.campaign import targets_training  # noqa: E402,F401

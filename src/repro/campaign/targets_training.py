@@ -1,0 +1,315 @@
+"""Training-step injectable targets — faults in the optimizer pipeline.
+
+The operator targets in :mod:`repro.campaign.targets` answer "does one
+protected op call catch its own fault".  These targets answer the training
+question the ROADMAP left open: a real optimizer step — ``model.loss`` →
+grad → int8 error-feedback compression → :func:`checked_psum` →
+decompress → clip → AdamW, the same primitives in the same order as
+``launch.steps.make_train_step(compress=True)`` / ``launch.train``, built
+here with injection seams between the stages (intentional deviations from
+the production step: fixed ``TRAIN_LR`` instead of the warmup-cosine
+schedule, ``accum=1``, single-device collective) — run for ``plan.steps``
+consecutive steps over the seeded data pipeline, with a bit flip injected
+at a chosen seam:
+
+* ``train_grad_pre``   — the raw f32 gradient BEFORE compression.  The
+  payload checksum is computed *after* the corruption, so the collective
+  verifies a consistently-wrong payload: undetectable by construction
+  (analytic bound 0).  What saves training here is masking — int8
+  quantization rounds low-bit flips away (the clean-twin ground truth
+  counts those as masked, not escaped).
+* ``train_grad_post``  — the mean gradient AFTER the verified collective:
+  the post-verify window.  Also bound 0; its escape rate prices the gap
+  between "collective verified" and "update applied".
+* ``train_payload``    — dtype ``int8``: the compressed payload between
+  checksum encode and the all-reduce — transport corruption, exactly what
+  the mod-8191 additivity check covers (any single int8 bit flip shifts
+  the residue: bound 1).  dtype ``float32``: the error-feedback residual —
+  local state outside the checksum (bound 0) whose corruption only
+  surfaces one step later, which is why it is a soak target.
+* ``train_moments``    — the AdamW first moment: silent optimizer-state
+  corruption (Ma et al. 2023's parameter-corruption regime, one level
+  up).  Bound 0; divergence measures how hard the moment EMA smears one
+  upset across subsequent steps.
+
+Ground truth is a **clean twin**: the same scan over the same batches with
+injection masked off, computed once per cell at build time.  ``corrupted``
+is exact final-parameter mismatch; ``divergence`` (relative L2 parameter
+drift) and ``loss_divergence`` quantify *how far* the fault propagated —
+the metrics the artifact's soak columns carry.
+
+Multi-step semantics (``plan.steps`` > 1): transient faults strike once at
+step 0; ``plan.persistent`` re-strikes the same element/bit every step (a
+failing cell re-corrupting each access).  ``detected_steps`` feeds the
+executor's per-step detection-latency histogram.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.campaign.spec import CellPlan
+from repro.campaign.targets import (InjectableTarget, apply_fault,
+                                    register_target)
+from repro.core.inject import victim_leaf_index
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.runtime.compression import (CompressionState, checked_psum,
+                                       compress_grads, decompress_grads,
+                                       init_compression)
+
+TRAIN_ARCH = "llama3.2-1b"
+TRAIN_LR = 1e-3
+MAX_GRAD_NORM = 1.0
+
+#: default injection victim: an MLP projection, NOT the largest leaf.
+#: The largest leaf is the token embedding whose gradient is ~95% zeros
+#: (only accessed rows get gradient), and a bit flip on a 0.0 element
+#: yields a subnormal that AdamW's eps crushes to an exactly-zero update
+#: — every trial masked, the cell uninformative.  MLP gradients are
+#: dense, so the default measures live faults; sweep
+#: ``victims=("embed.table",)`` to measure the sparsity-masking effect
+#: itself.
+TRAIN_DEFAULT_VICTIM = "mlp"
+
+#: injection seams, in pipeline order (module doc above)
+INJECT_POINTS = ("grad_pre", "payload", "error_feedback", "grad_post",
+                 "moment")
+
+
+def _flip_leaf(tree, victim_idx: int, key: jax.Array, plan: CellPlan,
+               do_inject: jax.Array, path: str = ""):
+    """Flip the spec'd fault into leaf ``victim_idx``; identity when
+    ``do_inject`` is False (the transient-vs-persistent step mask)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    victim = leaves[victim_idx]
+    bad = apply_fault(key, victim, plan, path=path)
+    leaves[victim_idx] = jnp.where(do_inject, bad, victim)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _inject_point(plan: CellPlan) -> str:
+    """The seam a cell injects at.  ``train_payload`` uses the dtype axis
+    to pick payload (int8) vs error-feedback residual (float32), the same
+    trick the kv_cache target plays with its scales."""
+    point = {"train_grad_pre": "grad_pre", "train_grad_post": "grad_post",
+             "train_moments": "moment"}.get(plan.target)
+    if point is not None:
+        return point
+    return "payload" if plan.dtype == "int8" else "error_feedback"
+
+
+def _train_build(plan: CellPlan, key: jax.Array):
+    from repro.configs import reduce_cfg
+    from repro.configs.base import ShapeConfig
+    from repro.configs.registry import get_arch
+    from repro.data import make_dataset
+    from repro.layers.common import Ctx
+    from repro.models.base import build_model
+    from repro.protect import default_plan
+    from repro.sharding import values_of
+
+    batch, seq_len = plan.shape
+    cfg = reduce_cfg(get_arch(TRAIN_ARCH))
+    model = build_model(cfg, max_pos=seq_len + cfg.meta_tokens + 8)
+    ctx = Ctx(plan=default_plan(), quant=False,
+              compute_dtype=jnp.float32)
+
+    params = values_of(jax.jit(lambda k: model.init(k))(key))
+    opt = adamw_init(params)
+    comm = init_compression(params)
+
+    # the real seeded pipeline, stacked to [steps, ...] for the scan,
+    # plus one held-out batch (step index ``steps``) to evaluate the
+    # post-soak loss on — without it a steps=1 cell could never observe
+    # a loss effect (per-step losses are computed on PRE-update params,
+    # and every seam injects after that point)
+    dataset = make_dataset(cfg, ShapeConfig("campaign", "train",
+                                            seq_len, batch))
+    per_step = [dataset.batch_at(t) for t in range(plan.steps + 1)]
+    batches = {k: jnp.stack([jnp.asarray(b[k]) for b in per_step[:-1]])
+               for k in per_step[0]}
+    eval_batch = {k: jnp.asarray(per_step[-1][k]) for k in per_step[-1]}
+
+    def loss_fn(p, mb):
+        loss, (metrics, rep) = model.loss(p, mb, ctx)
+        return loss, rep.total_errors()
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    # all injection trees (grads / payload q / residuals / moments) mirror
+    # the param tree, so one victim index addresses every seam
+    victim_idx, victim_path = victim_leaf_index(
+        params, plan.victim or TRAIN_DEFAULT_VICTIM, prefer_int8=False)
+
+    state = {"params": params, "opt": opt, "comm": comm,
+             "batches": batches, "eval_batch": eval_batch,
+             "grad_fn": grad_fn,
+             "loss_only": lambda p, mb: loss_fn(p, mb)[0],
+             "victim_idx": victim_idx, "victim_path": victim_path}
+
+    # clean twin: same scan, injection masked off everywhere
+    zeros = jnp.zeros((plan.steps,), bool)
+    clean_params, clean_errs, clean_losses, clean_final = jax.jit(
+        lambda: _run_soak(state, plan, jax.random.key(0), zeros))()
+    state.update(clean_params=clean_params, clean_errs=clean_errs,
+                 clean_losses=clean_losses, clean_final_loss=clean_final)
+    return state
+
+
+def _run_soak(state, plan: CellPlan, key: jax.Array,
+              inject_mask: jax.Array) -> Tuple:
+    """``plan.steps`` train steps with the fault struck where
+    ``inject_mask`` is True.  -> (final_params, errs [steps], losses
+    [steps], final_loss) — ``final_loss`` evaluates the post-soak params
+    on the held-out batch, the only loss a fault in the LAST step's
+    update can move.  The same key every step means a persistent fault
+    re-strikes the SAME element/bit (stuck-site semantics, not a fresh
+    random upset).
+    """
+    point = _inject_point(plan)
+    vidx, vpath = state["victim_idx"], state["victim_path"]
+    grad_fn = state["grad_fn"]
+
+    def flip(tree, do_inj, path=""):
+        return _flip_leaf(tree, vidx, key, plan, do_inj, path=path)
+
+    def body(carry, inp):
+        params, opt, comm = carry
+        mb, do_inj = inp
+        (loss, fwd_errs), grads = grad_fn(params, mb)
+        if point == "grad_pre":
+            grads = flip(grads, do_inj, path=vpath)
+        payload, comm = compress_grads(grads, comm)
+        if point == "payload":
+            payload = dict(payload, q=flip(payload["q"], do_inj))
+        if point == "error_feedback":
+            comm = CompressionState(error=flip(comm.error, do_inj))
+        summed, scale_sum, comm_errs = checked_psum(payload, None)
+        mean = decompress_grads(summed, scale_sum, 1)
+        if point == "grad_post":
+            mean = flip(mean, do_inj)
+        clipped, _ = clip_by_global_norm(mean, MAX_GRAD_NORM)
+        new_params, new_opt = adamw_update(clipped, opt, params, TRAIN_LR)
+        if point == "moment":
+            new_opt = dict(new_opt, m=flip(new_opt["m"], do_inj))
+        return (new_params, new_opt, comm), (fwd_errs + comm_errs, loss)
+
+    carry = (state["params"], state["opt"], state["comm"])
+    (params_f, _, _), (errs, losses) = jax.lax.scan(
+        body, carry, (state["batches"], inject_mask))
+    final_loss = state["loss_only"](params_f, state["eval_batch"])
+    return params_f, errs, losses, final_loss
+
+
+def _divergence(params_f, params_c) -> Tuple[jax.Array, jax.Array]:
+    """(relative L2 drift, exact-mismatch bool) vs the clean twin."""
+    lf, lc = jax.tree.leaves(params_f), jax.tree.leaves(params_c)
+    num = sum(jnp.sum(jnp.square(a.astype(jnp.float32)
+                                 - b.astype(jnp.float32)))
+              for a, b in zip(lf, lc))
+    den = sum(jnp.sum(jnp.square(b.astype(jnp.float32))) for b in lc)
+    rel = jnp.sqrt(num) / jnp.maximum(jnp.sqrt(den), 1e-30)
+    changed = sum((jnp.any(a != b).astype(jnp.int32)
+                   for a, b in zip(lf, lc)), jnp.zeros((), jnp.int32)) > 0
+    return rel, changed
+
+
+def _train_soak_fn(state, plan: CellPlan, key: jax.Array) -> dict:
+    steps = plan.steps
+    mask = jnp.ones((steps,), bool) if plan.persistent \
+        else jnp.arange(steps) == 0
+    params_f, errs, losses, final_loss = _run_soak(state, plan, key, mask)
+    div, changed = _divergence(params_f, state["clean_params"])
+    loss_div = jnp.maximum(
+        jnp.max(jnp.abs(losses - state["clean_losses"])),
+        jnp.abs(final_loss - state["clean_final_loss"]))
+    return {
+        "detected_steps": errs > 0,
+        "corrupted": changed,
+        "divergence": div,
+        "loss_divergence": loss_div,
+    }
+
+
+def _train_clean(state, plan: CellPlan, key: jax.Array):
+    # the clean trajectory is deterministic (seeded batches, no key use):
+    # its flags were computed once at build; any flag = a false positive
+    del key
+    return jnp.any(state["clean_errs"] > 0)
+
+
+def _train_overhead(state, plan: CellPlan):
+    """One protected (compress + checked psum) vs one plain train step.
+    Both return the updated params so XLA cannot dead-code the update.
+
+    The thunks do not depend on the cell's seam/band/dtype, so timing
+    them per cell would just re-measure one pipeline N times and ship N
+    contradictory noise samples (plus two extra train-step compiles per
+    cell).  Only the canonical cell — the int8 payload seam at the
+    significant band, single step — reports the number; every other cell
+    returns None and the executor leaves its overhead column empty."""
+    if not (_inject_point(plan) == "payload"
+            and plan.bit_band == "significant" and plan.steps == 1):
+        return None
+    grad_fn = state["grad_fn"]
+    params, opt, comm = state["params"], state["opt"], state["comm"]
+    mb = jax.tree.map(lambda x: x[0], state["batches"])
+
+    def protected():
+        (_, _), grads = grad_fn(params, mb)
+        payload, comm2 = compress_grads(grads, comm)
+        summed, scale_sum, errs = checked_psum(payload, None)
+        mean = decompress_grads(summed, scale_sum, 1)
+        clipped, _ = clip_by_global_norm(mean, MAX_GRAD_NORM)
+        new_params, _ = adamw_update(clipped, opt, params, TRAIN_LR)
+        return new_params, errs
+
+    def unprotected():
+        (_, _), grads = grad_fn(params, mb)
+        clipped, _ = clip_by_global_norm(grads, MAX_GRAD_NORM)
+        new_params, _ = adamw_update(clipped, opt, params, TRAIN_LR)
+        return new_params
+
+    return protected, unprotected
+
+
+def _train_bound(target: str):
+    def bound(plan: CellPlan):
+        point = _inject_point(plan)
+        if point == "payload":
+            if plan.fault_model == "bitflip" and plan.flips == 1:
+                # |Δ| = 2^k ≤ 128 < 8191: the residue always moves
+                return 1.0
+            return None
+        # every other seam is outside the transport checksum by design
+        return 0.0
+    return bound
+
+
+_F32_BANDS = ("all", "low", "significant", "sign", "exponent", "mantissa",
+              "high_mantissa")
+_TRAIN_SHAPES = ((2, 16),)     # (batch, seq_len) of the reduced LM
+
+
+def _register(name: str, dtypes: Tuple[str, ...],
+              bands: Tuple[str, ...]) -> None:
+    register_target(InjectableTarget(
+        name=name,
+        build=_train_build, soak=_train_soak_fn, clean=_train_clean,
+        default_shapes=_TRAIN_SHAPES, shape_arity=2,
+        dtypes=dtypes, bands=bands,
+        analytic_bound=_train_bound(name), overhead=_train_overhead,
+        multi_flip=True, victim_selectable=True))
+
+
+_register("train_grad_pre", ("float32",), _F32_BANDS)
+_register("train_grad_post", ("float32",), _F32_BANDS)
+_register("train_payload", ("int8", "float32"),
+          ("all", "low", "significant", "sign", "exponent", "mantissa",
+           "high_mantissa"))
+_register("train_moments", ("float32",), _F32_BANDS)
+
+
+__all__ = ["TRAIN_ARCH", "TRAIN_LR", "INJECT_POINTS"]

@@ -19,13 +19,24 @@ from repro.optim.schedule import warmup_cosine
 
 def make_train_step(model: Model, ctx: Ctx, *, accum: int = 1,
                     peak_lr: float = 3e-4, warmup: int = 100,
-                    total_steps: int = 10000, max_grad_norm: float = 1.0):
+                    total_steps: int = 10000, max_grad_norm: float = 1.0,
+                    compress: bool = False, axis_name=None,
+                    n_replicas: int = 1):
     """(state, batch) -> (state, metrics).
 
     state = {"params", "opt", "step"}; batch leaves lead with the global
     batch dim; with accum > 1 the batch is split into microbatches and
     gradients accumulate in f32 (scan — live activations stay one
     microbatch wide).
+
+    ``compress=True`` routes gradients through the int8 error-feedback
+    compressed, mod-checksum verified reduction of
+    :mod:`repro.runtime.compression` (state gains a ``"comm"``
+    CompressionState — init via ``init_train_state(compress=True)``) and
+    surfaces the verifier in ``metrics["comm/errors"]`` for the
+    TrainLoop's detect->act policy.  ``axis_name=None`` is the
+    single-device verify-only path; under shard_map/pmap pass the data
+    axis and its size.
     """
 
     def loss_fn(params, mb):
@@ -57,13 +68,21 @@ def make_train_step(model: Model, ctx: Ctx, *, accum: int = 1,
             metrics = jax.tree.map(
                 lambda x: jnp.mean(x.astype(jnp.float32)), metrics)
 
+        metrics = dict(metrics)
+        new_state = {}
+        if compress:
+            from repro.runtime.compression import compressed_allreduce
+            grads, new_comm, comm_errs = compressed_allreduce(
+                grads, state["comm"], axis_name, n_replicas)
+            metrics["comm/errors"] = comm_errs
+            new_state["comm"] = new_comm
+
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         lr = warmup_cosine(state["step"], peak=peak_lr, warmup=warmup,
                            total=total_steps)
         new_params, new_opt = adamw_update(grads, state["opt"], params, lr)
-        new_state = {"params": new_params, "opt": new_opt,
-                     "step": state["step"] + 1}
-        metrics = dict(metrics)
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
         metrics.update({"grad_norm": gnorm, "lr": lr, "loss_final": loss})
         return new_state, metrics
 
@@ -367,22 +386,32 @@ def make_decode_step(model: Model, ctx: Ctx):
     return decode_step
 
 
-def init_train_state(model: Model, key, *, dtype=jnp.float32):
-    """Concrete state (examples / small runs). Dry-run uses eval_shape."""
+def init_train_state(model: Model, key, *, dtype=jnp.float32,
+                     compress: bool = False):
+    """Concrete state (examples / small runs). Dry-run uses eval_shape.
+
+    ``compress=True`` adds the ``"comm"`` error-feedback residual tree for
+    ``make_train_step(compress=True)``."""
     from repro.optim import adamw_init
     from repro.sharding import values_of
 
     params = values_of(model.init(key, dtype=dtype))
-    return {"params": params, "opt": adamw_init(params),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if compress:
+        from repro.runtime.compression import init_compression
+        state["comm"] = init_compression(params)
+    return state
 
 
-def train_state_lp(model: Model, *, dtype=jnp.float32):
+def train_state_lp(model: Model, *, dtype=jnp.float32,
+                   compress: bool = False):
     """LogicalParam tree of ShapeDtypeStructs for the full train state.
 
     Moments carry the parameter's logical axes (ZeRO falls out of the FSDP
     rules); non-trainable leaves (packed int8 weights, EB tables) get
-    zero-size placeholders, matching optim.adamw_init.
+    zero-size placeholders, matching optim.adamw_init.  ``compress=True``
+    adds the f32 error-feedback residuals, sharded like their parameters.
     """
     from repro.sharding import LogicalParam, is_lp
 
@@ -399,10 +428,20 @@ def train_state_lp(model: Model, *, dtype=jnp.float32):
 
     m_lp = jax.tree.map(mom, params_lp, is_leaf=is_lp)
     scalar = LogicalParam(jax.ShapeDtypeStruct((), jnp.int32), ())
-    return {
+    state = {
         "params": params_lp,
         "opt": {"m": m_lp,
                 "v": jax.tree.map(lambda x: x, m_lp, is_leaf=is_lp),
                 "count": scalar},
         "step": scalar,
     }
+    if compress:
+        from repro.runtime.compression import CompressionState
+
+        def residual(p):
+            return LogicalParam(
+                jax.ShapeDtypeStruct(p.value.shape, jnp.float32), p.axes)
+
+        state["comm"] = CompressionState(
+            error=jax.tree.map(residual, params_lp, is_leaf=is_lp))
+    return state

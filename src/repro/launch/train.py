@@ -34,6 +34,10 @@ def main():
                     help="host mesh (data,model), e.g. 2,2")
     ap.add_argument("--float-abft", action="store_true",
                     help="float ABFT checks on training GEMMs")
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression with "
+                         "mod-checksum verification (runtime.compression; "
+                         "comm/errors feeds the loop's fault policy)")
     ap.add_argument("--fault-policy", default="recompute",
                     choices=["log", "recompute", "restore"])
     ap.add_argument("--device-count", type=int, default=0,
@@ -86,13 +90,15 @@ def main():
               compute_dtype=jnp.bfloat16)
 
     step_fn = make_train_step(model, ctx, accum=cfg.train_accum,
-                              peak_lr=args.lr, total_steps=args.steps)
-    state_lp = train_state_lp(model)
+                              peak_lr=args.lr, total_steps=args.steps,
+                              compress=args.compress)
+    state_lp = train_state_lp(model, compress=args.compress)
     state_sh = shardings_of(state_lp, rules, mesh)
     batch_sh = shardings_of(model.input_specs(shape), rules, mesh)
 
     with mesh:
-        state = init_train_state(model, jax.random.key(0))
+        state = init_train_state(model, jax.random.key(0),
+                                 compress=args.compress)
         state = jax.device_put(state, state_sh)
         jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
                          out_shardings=(state_sh, None),
@@ -104,11 +110,13 @@ def main():
                  cfg.name, n_params / 1e6, mesh.shape, cfg.train_accum)
 
         def hook(step, metrics):
-            log.info("step %d loss=%.4f gnorm=%.3f gemm_err=%d eb_err=%d",
+            log.info("step %d loss=%.4f gnorm=%.3f gemm_err=%d eb_err=%d"
+                     " comm_err=%d",
                      step, float(metrics.get("loss_final", float("nan"))),
                      float(metrics.get("grad_norm", float("nan"))),
                      int(metrics.get("abft/gemm_errors", 0)),
-                     int(metrics.get("abft/eb_errors", 0)))
+                     int(metrics.get("abft/eb_errors", 0)),
+                     int(metrics.get("comm/errors", 0)))
 
         loop = TrainLoop(
             jitted, dataset,

@@ -1,5 +1,7 @@
-from repro.optim.adamw import adamw_init, adamw_update, global_norm, clip_by_global_norm
+from repro.optim.adamw import (adamw_init, adamw_update, global_norm,
+                               clip_by_global_norm, is_trainable)
 from repro.optim.schedule import warmup_cosine, constant_lr
 
 __all__ = ["adamw_init", "adamw_update", "global_norm",
-           "clip_by_global_norm", "warmup_cosine", "constant_lr"]
+           "clip_by_global_norm", "is_trainable", "warmup_cosine",
+           "constant_lr"]

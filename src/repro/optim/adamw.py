@@ -14,8 +14,15 @@ import jax
 import jax.numpy as jnp
 
 
-def _trainable(x) -> bool:
+def is_trainable(x) -> bool:
+    """True for leaves AdamW updates: floating dtypes.  Integer / packed
+    int8 leaves (ABFT serving weights, EB tables, rowsum checksums) are
+    frozen: they get zero-size moment placeholders and pass through the
+    update untouched."""
     return jnp.issubdtype(x.dtype, jnp.floating)
+
+
+_trainable = is_trainable
 
 
 def adamw_init(params):

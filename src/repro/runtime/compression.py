@@ -19,7 +19,7 @@ All functions are shard_map/pjit-friendly: they take an ``axis_name``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,18 +95,27 @@ def verify_payload(payload: dict) -> jax.Array:
                            jnp.zeros((), jnp.int32))
 
 
-def checked_psum(payload: dict, axis_name: str):
+def checked_psum(payload: dict, axis_name: Optional[str]):
     """All-reduce the int8 payload with ABFT verification.
 
     Returns (summed_q int32 tree, mean_scale tree, err_count int32 scalar).
+
+    ``axis_name=None`` is the single-device degenerate collective: the
+    "sum" is the payload itself, but the additivity check still runs —
+    recomputing each leaf's checksum against the one encoded at compress
+    time.  That makes the mismatch branch reachable (and testable) without
+    a mesh, and is the receive-side verify for a payload that crossed any
+    transport between :func:`compress_grads` and here.
     """
+    def psum(x):
+        return x if axis_name is None else jax.lax.psum(x, axis_name)
+
     q32 = jax.tree.map(lambda q: q.astype(jnp.int32), payload["q"])
-    summed = jax.lax.psum(q32, axis_name)
-    scale_sum = jax.lax.psum(payload["scale"], axis_name)
+    summed = jax.tree.map(psum, q32)
+    scale_sum = jax.tree.map(psum, payload["scale"])
     # additivity check: checksum(psum(q)) == psum(checksum(q)) mod M
     expected = jax.tree.map(
-        lambda c: jax.lax.psum(c % MOD, axis_name) % MOD,
-        payload["checksum"])
+        lambda c: psum(c % MOD) % MOD, payload["checksum"])
     got = jax.tree.map(_mod_checksum, summed)
     errs = jax.tree.map(
         lambda e, g: (e != g).astype(jnp.int32), expected, got)
@@ -127,11 +136,13 @@ def decompress_grads(summed_q, scale_sum, n_replicas: int):
         summed_q, scale_sum)
 
 
-def compressed_allreduce(grads, state: CompressionState, axis_name: str,
-                         n_replicas: int):
+def compressed_allreduce(grads, state: CompressionState,
+                         axis_name: Optional[str], n_replicas: int):
     """One-call fused path: compress -> checked psum -> decompress.
 
-    -> (mean_grads f32, new_state, err_count)."""
+    ``axis_name=None`` with ``n_replicas=1`` is the single-device path
+    (verify-only, no collective).  -> (mean_grads f32, new_state,
+    err_count)."""
     payload, new_state = compress_grads(grads, state)
     summed, scale_sum, errs = checked_psum(payload, axis_name)
     mean = decompress_grads(summed, scale_sum, n_replicas)

@@ -64,12 +64,23 @@ class TrainLoop:
         self.stats = {"recomputes": 0, "restores": 0, "faulty_steps": 0}
 
     # ------------------------------------------------------------------
+    #: legacy alias keys FaultReport.as_metrics emits NEXT TO the keyed
+    #: counters (gemm = qgemm + float_gemm, eb = embedding_bag) — summing
+    #: them alongside the keyed set would double-count
+    _LEGACY_ALIASES = ("abft/gemm_errors", "abft/eb_errors")
+
     def _errors_in(self, metrics: Dict[str, Any]) -> int:
-        total = 0
-        for k in ("abft/gemm_errors", "abft/eb_errors", "comm/errors"):
-            if k in metrics:
-                total += int(np.asarray(jax.device_get(metrics[k])))
-        return total
+        keyed = [k for k in metrics
+                 if k.startswith("abft/") and k.endswith("_errors")
+                 and k not in self._LEGACY_ALIASES]
+        keys = keyed or [k for k in self._LEGACY_ALIASES if k in metrics]
+        keys += [k for k in ("comm/errors",) if k in metrics]
+        # grad-accum steps AVERAGE metrics over microbatches, so a single
+        # detection can arrive as a fraction (e.g. 0.25 with accum=4) —
+        # ceil instead of truncate, or the policy would never fire
+        total = sum(float(np.asarray(jax.device_get(metrics[k])))
+                    for k in keys)
+        return int(np.ceil(total))
 
     def _put_batch(self, batch):
         if self.shardings is None:

@@ -97,6 +97,34 @@ def test_spec_validation():
     with pytest.raises(ValueError):
         CampaignSpec(name="t", targets=("gemm_packed",), samples=1,
                      flips_per_trial=0)
+    with pytest.raises(ValueError):
+        CampaignSpec(name="t", targets=("gemm_packed",), samples=1,
+                     steps=0)
+
+
+def test_spec_steps_persistent_round_trip():
+    spec = CampaignSpec(name="t", targets=("train_moments",),
+                        dtypes=("float32",), samples=2, steps=5,
+                        persistent=[False, True])      # list from JSON
+    assert spec.persistent == (False, True)            # coerced to tuple
+    assert CampaignSpec.from_dict(spec.to_dict()) == spec
+    plans, _ = expand(spec)
+    assert all(p.steps == 5 for p in plans)
+    for p in plans:
+        from repro.campaign.spec import CellPlan
+        assert CellPlan(**p.to_dict()) == p            # plan round-trips
+
+
+def test_expand_drops_persistent_duplicate_at_one_step():
+    # at steps=1 a "re-strike every step" fault IS the transient fault —
+    # the would-be /persistent cell is a duplicate and must be dropped
+    spec = CampaignSpec(name="t", targets=("train_moments",),
+                        dtypes=("float32",), samples=2,
+                        persistent=(False, True))      # default steps=1
+    plans, skipped = expand(spec)
+    assert [p.persistent for p in plans] == [False]
+    assert any("indistinguishable from transient" in s["reason"]
+               for s in skipped)
 
 
 def test_dlrm_shape_set_is_paper_sized():

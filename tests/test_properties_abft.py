@@ -1,0 +1,247 @@
+"""Property tests for the ABFT encoder invariants (hypothesis-backed;
+falls back to the seeded shim in tests/helpers when hypothesis is absent).
+
+Three families, matching the detectors' actual guarantees:
+
+* int8 GEMM row/column checksums — with activations drawn from the
+  never-`≡ 0 (mod 127)` range, EVERY single-bit flip in B's live region is
+  caught, every accumulator (C) flip is caught unconditionally, and clean
+  inputs never flag (integer checksums are exact: zero FP by
+  construction);
+* EmbeddingBag Eq. (5) — clean bags pass at the default ``EB_REL_BOUND``
+  in the trained-table regime, and a significant-band flip in an accessed
+  row clears the bound by orders of magnitude (the regime is sized so
+  α·2^4 dominates the round-off tolerance);
+* packed-weight dead lanes — flips in the checksum block's alignment
+  zeros (lanes 1..127) are provably inert, and
+  :func:`repro.core.inject.random_bitflip_live` never wastes an injection
+  on them;
+
+plus the mod-8191 value checksum under the compressed gradient collective:
+additivity (the property :func:`checked_psum` relies on) and single-bit
+sensitivity (why the payload cell's analytic bound is 1.0).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from helpers import given, settings, st
+
+from repro.core import abft_gemm as ag
+from repro.core.abft_embedding import (EB_REL_BOUND, abft_embedding_bag,
+                                       table_rowsums)
+from repro.core.inject import flip_bit, random_bitflip_live
+from repro.runtime.compression import (MOD as COMM_MOD, _mod_checksum,
+                                       compress_grads, checked_psum,
+                                       init_compression)
+
+
+def _key(*ints):
+    k = jax.random.key(ints[0])
+    for i in ints[1:]:
+        k = jax.random.fold_in(k, i)
+    return k
+
+
+# Shapes come from fixed palettes (not free integer draws): every distinct
+# shape is an XLA compile, and the properties quantify over VALUES — seeds
+# explore the value space while the compile cache stays warm.
+GEMM_SHAPES = ((1, 8, 5), (2, 16, 8), (4, 32, 24), (8, 64, 48))
+EB_SHAPES = ((4, 8, 1, 2), (16, 16, 3, 5), (64, 32, 6, 10))
+
+
+# ---------------------------------------------------------------------------
+# GEMM row/column checksums
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(GEMM_SHAPES), st.integers(0, 2 ** 31 - 1))
+def test_gemm_b_flip_always_detected_for_nonvanishing_a(shape, seed):
+    """A ∈ [1, 127): no activation ≡ 0 (mod 127), so a Δ=±2^j flip in any
+    B element shifts every row's Eq. (3b) residue — detection is certain,
+    not just 1-(3/256)^m."""
+    m, k, n = shape
+    ka, kb, kf = jax.random.split(_key(seed), 3)
+    a = jax.random.randint(ka, (m, k), 1, 127, jnp.uint8)
+    b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
+    checksum = ag.encode_weight_checksum(b)
+
+    # clean never flags (exact integer identity)
+    out = ag.abft_qgemm(a, b, checksum)
+    assert int(out.err_count) == 0
+
+    i1, i2, i3 = jax.random.split(kf, 3)
+    idx = int(jax.random.randint(i1, (), 0, b.size))
+    bit = int(jax.random.randint(i2, (), 0, 8))
+    b_bad = flip_bit(b, jnp.asarray(idx), jnp.asarray(bit))
+    assert bool(jnp.any(b_bad != b))
+    out = ag.abft_qgemm(a, b_bad, checksum)   # checksum stays CLEAN
+    assert int(out.err_count) > 0, (m, k, n, idx, bit)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(GEMM_SHAPES), st.integers(0, 2 ** 31 - 1))
+def test_gemm_c_flip_always_detected(shape, seed):
+    """Accumulator flips: 2^j mod 127 != 0 for every j, so a single-bit
+    C corruption always breaks the row residue — no conditions on A."""
+    m, k, n = shape
+    ka, kb, kf = jax.random.split(_key(seed), 3)
+    a = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)
+    b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
+    b_packed = ag.pack_encoded_b(b)
+    c_full = jax.lax.dot_general(a, b_packed, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+    c, check_col = c_full[:, :n], c_full[:, n]
+    _, errs = ag.verify_rows(c, check_col)
+    assert int(errs) == 0
+
+    i1, i2 = jax.random.split(kf)
+    idx = int(jax.random.randint(i1, (), 0, c.size))
+    bit = int(jax.random.randint(i2, (), 0, 32))
+    c_bad = flip_bit(c, jnp.asarray(idx), jnp.asarray(bit))
+    _, errs = ag.verify_rows(c_bad, check_col)
+    assert int(errs) > 0, (m, n, idx, bit)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag Eq. (5) at the default bound
+# ---------------------------------------------------------------------------
+
+def _eb_regime(seed, rows, d, bags, pool):
+    kt, ka, kb, ki = jax.random.split(_key(seed), 4)
+    table = jax.random.randint(kt, (rows, d), -128, 128, jnp.int8)
+    alphas = jax.random.uniform(ka, (rows,), jnp.float32, 1e-2, 2e-2)
+    betas = jax.random.uniform(kb, (rows,), jnp.float32, 0.3, 0.7)
+    idx = jax.random.randint(ki, (bags, pool), 0, rows, jnp.int32)
+    return table, alphas, betas, idx
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(EB_SHAPES), st.integers(0, 2 ** 31 - 1))
+def test_eb_clean_respects_rel_bound(shape, seed):
+    rows, d, bags, pool = shape
+    table, alphas, betas, idx = _eb_regime(seed, rows, d, bags, pool)
+    out = abft_embedding_bag(table, alphas, betas, idx,
+                             table_rowsums(table), rel_bound=EB_REL_BOUND)
+    assert int(out.err_count) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(EB_SHAPES), st.integers(0, 2 ** 31 - 1))
+def test_eb_significant_flip_in_accessed_row_detected(shape, seed):
+    """In this regime the worst-case tolerance is rel_bound · pool · d ·
+    (0.02·127 + 0.7) ≈ 1e-2, while the smallest significant-band hit is
+    α_min · 2^4 = 0.16 — detection has a >10x margin by construction."""
+    rows, d, bags, pool = shape
+    table, alphas, betas, idx = _eb_regime(seed, rows, d, bags, pool)
+    rowsums = table_rowsums(table)              # encoded from CLEAN table
+    kf = jax.random.fold_in(_key(seed), 99)
+    k1, k2, k3 = jax.random.split(kf, 3)
+    b = int(jax.random.randint(k1, (), 0, bags))
+    p = int(jax.random.randint(k2, (), 0, pool))
+    row = int(idx[b, p])
+    col = int(jax.random.randint(k3, (), 0, d))
+    bit = int(jax.random.randint(jax.random.fold_in(k3, 1), (), 4, 8))
+    elem = table[row, col]
+    bad = flip_bit(elem[None], jnp.zeros((), jnp.int32),
+                   jnp.asarray(bit))[0]
+    table_bad = table.at[row, col].set(bad)
+    out = abft_embedding_bag(table_bad, alphas, betas, idx, rowsums,
+                             rel_bound=EB_REL_BOUND)
+    assert int(out.err_count) > 0, (rows, d, bags, pool, row, col, bit)
+
+
+# ---------------------------------------------------------------------------
+# Packed-weight dead lanes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(GEMM_SHAPES[:3]), st.integers(0, 2 ** 31 - 1))
+def test_dead_lane_flips_are_inert(shape, seed):
+    """Lanes 1..127 of the checksum block are alignment zeros the kernel
+    never reads: flipping them changes neither C nor the verdict."""
+    m, k, n = shape
+    ka, kb, kf = jax.random.split(_key(seed), 3)
+    a = jax.random.randint(ka, (m, k), 0, 256, jnp.uint8)
+    b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
+    packed = ag.pack_encoded_b(b)
+    ref = ag.abft_qgemm_packed(a, packed)
+
+    k1, k2, k3, k4 = jax.random.split(kf, 4)
+    row = int(jax.random.randint(k1, (), 0, k))
+    lane = int(jax.random.randint(k2, (), 1, ag.LANE))   # dead lanes only
+    bit = int(jax.random.randint(k3, (), 0, 8))
+    del k4
+    idx = row * packed.shape[1] + n + lane
+    packed_bad = flip_bit(packed, jnp.asarray(idx), jnp.asarray(bit))
+    assert bool(jnp.any(packed_bad != packed))
+    out = ag.abft_qgemm_packed(a, packed_bad)
+    assert bool(jnp.all(out.c == ref.c))
+    assert int(out.err_count) == int(ref.err_count) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(((4, 6), (16, 24))),
+       st.integers(0, 2 ** 31 - 1))
+def test_random_bitflip_live_avoids_dead_lanes(shape, seed):
+    """Victim positions drawn by the live-region injector always land in
+    the weight block or the checksum lane (col <= n), never lanes 1+."""
+    k, n = shape
+    kb = _key(seed)
+    b = jax.random.randint(kb, (k, n), -127, 128, jnp.int8)
+    packed = ag.pack_encoded_b(b)
+    keys = jax.random.split(jax.random.fold_in(kb, 1), 32)
+    flipped = jax.vmap(
+        lambda kk: random_bitflip_live(kk, packed, "layers.0.w_packed"))(
+            keys)
+    for f in np.asarray(flipped != np.asarray(packed)[None]):
+        pos = np.argwhere(f)
+        assert pos.shape[0] == 1          # exactly one element changed
+        assert pos[0][1] <= n, pos        # live region only
+
+
+# ---------------------------------------------------------------------------
+# Gradient-collective value checksum (mod 8191)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from((1, 7, 256, 4096)), st.integers(0, 2 ** 31 - 1))
+def test_mod_checksum_additive_and_bitflip_sensitive(size, seed):
+    ka, kb, kf = jax.random.split(_key(seed), 3)
+    qa = jax.random.randint(ka, (size,), -127, 128, jnp.int32)
+    qb = jax.random.randint(kb, (size,), -127, 128, jnp.int32)
+    # additivity: checksum(a + b) == checksum(a) + checksum(b) (mod M) —
+    # the identity checked_psum's expected-vs-got comparison relies on
+    lhs = int(_mod_checksum(qa + qb))
+    rhs = (int(_mod_checksum(qa)) + int(_mod_checksum(qb))) % COMM_MOD
+    assert lhs == rhs
+
+    # single-bit sensitivity on the int8 payload: |Δ| = 2^j <= 128 < M,
+    # so the residue always moves — payload detection is exact
+    q8 = qa.astype(jnp.int8)
+    i1, i2 = jax.random.split(kf)
+    idx = int(jax.random.randint(i1, (), 0, size))
+    bit = int(jax.random.randint(i2, (), 0, 8))
+    q8_bad = flip_bit(q8, jnp.asarray(idx), jnp.asarray(bit))
+    assert bool(jnp.any(q8_bad != q8))
+    assert int(_mod_checksum(q8_bad.astype(jnp.int32))) \
+        != int(_mod_checksum(q8.astype(jnp.int32)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from((3, 64, 512)), st.integers(0, 2 ** 31 - 1))
+def test_checked_psum_payload_flip_always_caught(size, seed):
+    """End-to-end: compress a gradient, corrupt one payload bit in
+    transit, and the single-device checked_psum flags it — every time."""
+    kg, kf = jax.random.split(_key(seed))
+    grads = {"w": jax.random.normal(kg, (size,), jnp.float32)}
+    payload, _ = compress_grads(grads, init_compression(grads))
+    _, _, errs = checked_psum(payload, None)
+    assert int(errs) == 0                     # clean payload: no flags
+
+    i1, i2 = jax.random.split(kf)
+    idx = jnp.asarray(int(jax.random.randint(i1, (), 0, size)))
+    bit = jnp.asarray(int(jax.random.randint(i2, (), 0, 8)))
+    bad = dict(payload, q={"w": flip_bit(payload["q"]["w"], idx, bit)})
+    _, _, errs = checked_psum(bad, None)
+    assert int(errs) == 1

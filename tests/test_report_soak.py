@@ -1,0 +1,126 @@
+"""FaultReport counter semantics under multi-step loops.
+
+The multi-step campaign soak and the serving engine both thread
+FaultReports through ``lax.scan`` / ``vmap`` bodies; these tests pin the
+contract they rely on: counters are a monoid (merge is associative with
+``empty_report`` as identity), they accumulate monotonically across scan
+steps (never reset mid-soak), the pytree structure stays static under
+tracing, and batch (vmap) dimensions sum cleanly.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import (FaultReport, empty_report, merge_reports,
+                               op_kinds, op_report)
+
+
+def _step_report(errs):
+    return op_report("qgemm", errs)
+
+
+def test_scan_carry_accumulates_and_never_resets():
+    """A soak body that merges each step's report into the carry: after N
+    steps the totals are the exact per-step sums, and the running totals
+    collected along the way are monotonically non-decreasing."""
+    per_step = jnp.asarray([0, 2, 0, 1, 3, 0], jnp.int32)
+
+    def body(carry, errs):
+        merged = merge_reports(carry, _step_report(errs))
+        return merged, merged.total_errors()
+
+    final, running = jax.lax.scan(body, empty_report(), per_step)
+    assert int(final.errors["qgemm"]) == int(per_step.sum())
+    assert int(final.checks["qgemm"]) == per_step.shape[0]
+    # never resets: running totals are a cumulative sum, not per-step
+    assert list(map(int, running)) == list(
+        map(int, jnp.cumsum(per_step)))
+    assert all(b >= a for a, b in zip(running[:-1], running[1:]))
+
+
+def test_scan_structure_static_across_kinds():
+    """The carry built from empty_report() must match the body's merged
+    reports structurally for EVERY registered kind — the scan/vmap safety
+    rule in the policy module docstring."""
+    def body(carry, x):
+        rep = merge_reports(
+            carry, op_report("embedding_bag", x),
+            op_report("kv_cache", x * 2, retries=1))
+        return rep, rep.total_errors()
+
+    final, _ = jax.jit(
+        lambda xs: jax.lax.scan(body, empty_report(), xs))(
+            jnp.ones((5,), jnp.int32))
+    assert sorted(final.errors) == sorted(op_kinds())
+    assert int(final.errors["embedding_bag"]) == 5
+    assert int(final.errors["kv_cache"]) == 10
+    assert int(final.retries) == 5
+
+
+def test_vmap_batched_reports_sum_to_scalar():
+    """vmap over per-trial reports produces batched counters that reduce
+    to the same totals as merging sequentially — the executor's chunked
+    trial accounting in miniature."""
+    errs = jnp.asarray([1, 0, 4, 2], jnp.int32)
+    batched = jax.vmap(_step_report)(errs)
+    assert batched.errors["qgemm"].shape == (4,)
+    total = jax.tree.map(lambda x: jnp.sum(x, axis=0), batched)
+    seq = merge_reports(*[_step_report(e) for e in errs])
+    assert int(total.total_errors()) == int(seq.total_errors()) == 7
+    assert int(total.checks["qgemm"]) == int(seq.checks["qgemm"]) == 4
+
+
+def test_merge_is_monoid():
+    a = op_report("qgemm", 2, retries=1)
+    b = op_report("embedding_bag", 3)
+    c = op_report("kv_cache", 1, corrections=2)
+
+    def totals(r: FaultReport):
+        return (int(r.total_errors()), int(r.total_checks()),
+                int(r.retries), int(r.corrections))
+
+    assert totals(merge_reports(merge_reports(a, b), c)) \
+        == totals(merge_reports(a, merge_reports(b, c)))
+    assert totals(merge_reports(a, empty_report())) == totals(
+        merge_reports(a))
+
+
+def test_loop_errors_in_counts_keyed_fractional_and_comm(tmp_path):
+    """TrainLoop's detect->act trigger: keyed counters beat legacy
+    aliases (no double count), comm/errors is included, and the
+    microbatch-AVERAGED fractions a grad-accum step emits (one error over
+    accum=4 arrives as 0.25) still trip the policy instead of truncating
+    to zero."""
+    from repro.runtime import LoopConfig, TrainLoop
+
+    loop = TrainLoop(lambda s, b: (s, {}), None,
+                     cfg=LoopConfig(ckpt_dir=str(tmp_path)))
+    # keyed + legacy aliases together (FaultReport.as_metrics emits both):
+    # only the keyed set is summed
+    assert loop._errors_in({"abft/qgemm_errors": 2,
+                            "abft/float_gemm_errors": 1,
+                            "abft/gemm_errors": 3,       # alias of the two
+                            "abft/kv_cache_errors": 1,
+                            "comm/errors": 1}) == 5
+    # legacy-only metrics (pre-protect step fns) still work
+    assert loop._errors_in({"abft/gemm_errors": 2}) == 2
+    # grad-accum averaging: 1 error / accum 4 -> 0.25 -> must still fire
+    assert loop._errors_in(
+        {"abft/qgemm_errors": jnp.asarray(0.25)}) == 1
+    assert loop._errors_in({"abft/qgemm_errors": 0,
+                            "comm/errors": 0}) == 0
+
+
+def test_scan_of_vmap_soak_counters():
+    """The full multi-step shape: scan over steps of a vmapped batch of
+    op calls — counters merge across both axes without resetting."""
+    def step(carry, errs_batch):
+        batched = jax.vmap(_step_report)(errs_batch)
+        step_rep = jax.tree.map(lambda x: jnp.sum(x, axis=0), batched)
+        merged = merge_reports(carry, step_rep)
+        return merged, merged.total_errors()
+
+    errs = jnp.arange(12, dtype=jnp.int32).reshape(4, 3)   # [steps, batch]
+    final, running = jax.lax.scan(step, empty_report(), errs)
+    assert int(final.total_errors()) == int(errs.sum())
+    assert list(map(int, running)) == list(
+        map(int, jnp.cumsum(errs.sum(axis=1))))

@@ -1,0 +1,245 @@
+"""Training-step campaign targets + multi-step soak executor + the
+checked_psum single-device verify path.
+
+Covers the ROADMAP's two missing campaign scenarios end to end: faults at
+every seam of the compressed-gradient optimizer pipeline (detection via
+the mod-8191 transport checksum, ground truth via clean-twin divergence)
+and persistent faults tracked across consecutive train steps with
+per-step detection-latency histograms.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.campaign import CampaignSpec, expand, get_target, run_cell
+from repro.campaign.grids import training_specs
+from repro.campaign.spec import CellPlan, cell_seed
+from repro.campaign.targets_training import _inject_point
+from repro.runtime.compression import (checked_psum, compress_grads,
+                                       compressed_allreduce,
+                                       init_compression)
+
+
+def _plan(target="train_payload", dtype="int8", band="significant",
+          steps=1, persistent=False, samples=2, victim=None,
+          shape=(2, 8), overhead=False):
+    cid = f"test/{target}/{dtype}/{steps}/{persistent}"
+    return CellPlan(
+        cell_id=cid, target=target, fault_model="bitflip",
+        bit_band=band, shape=shape, dtype=dtype, samples=samples,
+        clean_samples=1, flips=1, seed=cell_seed(0, cid),
+        measure_overhead=overhead, victim=victim, steps=steps,
+        persistent=persistent)
+
+
+# ---------------------------------------------------------------------------
+# spec expansion: steps / persistent routing
+# ---------------------------------------------------------------------------
+
+def test_expand_steps_and_persistence_gated_on_soak_targets():
+    spec = CampaignSpec(
+        name="t", targets=("gemm_packed", "train_payload"),
+        bit_bands=("significant",), dtypes=("int8",),
+        samples=2, steps=3, persistent=(False, True))
+    plans, skipped = expand(spec)
+    by_target = {}
+    for p in plans:
+        by_target.setdefault(p.target, []).append(p)
+    # soak target: steps honored, transient + persistent variants
+    tp = by_target["train_payload"]
+    assert sorted((p.steps, p.persistent) for p in tp) \
+        == [(3, False), (3, True)]
+    assert any(p.cell_id.endswith("/steps3/persistent") for p in tp)
+    # single-step target: one cell, steps forced to 1, sweep logged
+    gp = by_target["gemm_packed"]
+    assert [(p.steps, p.persistent) for p in gp] == [(1, False)]
+    reasons = " | ".join(s["reason"] for s in skipped)
+    assert "single-step" in reasons and "persistent" in reasons
+
+
+def test_training_grid_expands_with_soak_cells():
+    specs = training_specs(seed=0, quick=True)
+    all_plans = []
+    for s in specs:
+        plans, _ = expand(s)
+        all_plans += plans
+    targets = {p.target for p in all_plans}
+    assert {"train_grad_pre", "train_grad_post", "train_payload",
+            "train_moments"} <= targets
+    soak = [p for p in all_plans if p.steps > 1]
+    assert soak and {p.persistent for p in soak} == {False, True}
+
+
+def test_inject_point_selection():
+    assert _inject_point(_plan("train_grad_pre", "float32")) == "grad_pre"
+    assert _inject_point(_plan("train_grad_post", "float32")) \
+        == "grad_post"
+    assert _inject_point(_plan("train_moments", "float32")) == "moment"
+    assert _inject_point(_plan("train_payload", "int8")) == "payload"
+    assert _inject_point(_plan("train_payload", "float32")) \
+        == "error_feedback"
+
+
+def test_analytic_bounds_per_seam():
+    t = get_target("train_payload")
+    assert t.analytic_bound(_plan("train_payload", "int8")) == 1.0
+    assert t.analytic_bound(_plan("train_payload", "float32")) == 0.0
+    assert get_target("train_moments").analytic_bound(
+        _plan("train_moments", "float32")) == 0.0
+    assert get_target("train_grad_pre").analytic_bound(
+        _plan("train_grad_pre", "float32")) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# checked_psum single-device verify path (the fake-axis shim fix)
+# ---------------------------------------------------------------------------
+
+def test_checked_psum_single_device_mismatch_branch():
+    grads = {"w": jnp.linspace(-1.0, 1.0, 64).reshape(8, 8),
+             "b": jnp.ones((8,), jnp.float32)}
+    payload, _ = compress_grads(grads, init_compression(grads))
+    summed, scale_sum, errs = checked_psum(payload, None)
+    assert int(errs) == 0
+    # corrupt one payload leaf post-encode: the verify branch must fire
+    bad_q = dict(payload["q"], w=payload["q"]["w"].at[0, 0].add(1))
+    _, _, errs = checked_psum(dict(payload, q=bad_q), None)
+    assert int(errs) == 1
+    # corrupt the transported checksum instead: also a mismatch
+    bad_cs = dict(payload["checksum"],
+                  b=(payload["checksum"]["b"] + 1) % 8191)
+    _, _, errs = checked_psum(dict(payload, checksum=bad_cs), None)
+    assert int(errs) == 1
+
+
+def test_compressed_allreduce_single_device_roundtrip():
+    grads = {"w": jnp.linspace(-2.0, 2.0, 256).reshape(16, 16)}
+    state = init_compression(grads)
+    mean, state2, errs = compressed_allreduce(grads, state, None, 1)
+    assert int(errs) == 0
+    # int8 quantization error bounded by one step of the scale
+    scale = float(jnp.max(jnp.abs(grads["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(mean["w"] - grads["w"]))) <= scale
+    # error feedback carries exactly the quantization residual
+    assert float(jnp.max(jnp.abs(
+        state2.error["w"] - (grads["w"] - mean["w"])))) < 1e-6
+
+
+def test_checked_psum_two_device_pmap_subprocess():
+    """The real-collective path: 2 fake host devices, per-device payloads,
+    additivity across the axis, and a mid-transit corruption on one
+    replica caught by the post-psum verify."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax, jax.numpy as jnp
+        from functools import partial
+        from repro.runtime.compression import (checked_psum,
+            compress_grads, init_compression)
+
+        def payload_of(x):
+            g = {"w": x * jnp.linspace(-1.0, 1.0, 32)}
+            p, _ = compress_grads(g, init_compression(g))
+            return p
+
+        @partial(jax.pmap, axis_name="data")
+        def clean(x):
+            _, _, errs = checked_psum(payload_of(x), "data")
+            return errs
+
+        @partial(jax.pmap, axis_name="data")
+        def corrupted(x):
+            p = payload_of(x)
+            # flip one payload element on replica 0 only, AFTER encode
+            delta = jnp.where(jax.lax.axis_index("data") == 0, 7, 0)
+            p = dict(p, q={"w": p["q"]["w"].at[3].add(
+                delta.astype(jnp.int8))})
+            _, _, errs = checked_psum(p, "data")
+            return errs
+
+        xs = jnp.asarray([1.0, 2.0])
+        assert [int(e) for e in clean(xs)] == [0, 0]
+        errs = corrupted(xs)
+        assert all(int(e) == 1 for e in errs), errs
+        print("OK")
+    """)
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "OK" in r.stdout, r.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end cells (small samples — each build compiles a train scan)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_payload_cell_detects_with_zero_latency():
+    r = run_cell(_plan("train_payload", "int8", steps=2, samples=2),
+                 chunk=4)
+    m = r.metrics
+    assert m.raw_detection_rate == 1.0          # bound is exactly 1
+    assert m.escapes == 0 and m.false_positives == 0
+    assert m.steps == 2
+    assert m.detection_latency_hist == [2, 0]   # caught in-step
+    assert m.mean_detection_latency == 0.0
+
+
+@pytest.mark.slow
+def test_grad_post_cell_escapes_but_diverges():
+    """The post-verify window: nothing flags, parameters drift — the cell
+    that prices detection coverage, not detection latency."""
+    r = run_cell(_plan("train_grad_post", "float32", band="significant",
+                       samples=2), chunk=4)
+    m = r.metrics
+    assert m.raw_detection_rate == 0.0
+    assert m.corrupted == m.samples             # f32 update: always moves
+    assert m.escapes == m.samples
+    assert m.divergence_mean > 0.0
+    assert m.loss_divergence_mean >= 0.0
+
+
+@pytest.mark.slow
+def test_error_feedback_fault_surfaces_only_in_multistep():
+    """An error-feedback flip is invisible at steps=1 (it corrupts NEXT
+    step's payload input) — the soak axis exists precisely for this."""
+    r1 = run_cell(_plan("train_payload", "float32", steps=1, samples=2),
+                  chunk=4)
+    assert r1.metrics.corrupted == 0            # masked within one step
+    r2 = run_cell(_plan("train_payload", "float32", steps=3, samples=4),
+                  chunk=4)
+    # a residual flip can still be rounded away by int8 quantization, so
+    # not every trial corrupts — but corruption exists and never flags
+    assert r2.metrics.corrupted >= 1
+    assert r2.metrics.raw_detection_rate == 0.0       # outside checksum
+    assert r2.metrics.escapes == r2.metrics.corrupted
+    assert r2.metrics.divergence_mean > 0.0
+
+
+@pytest.mark.slow
+def test_persistent_moment_soak_and_artifact_columns(tmp_path):
+    from repro.campaign import (latency_markdown, load_artifact,
+                                run_campaign)
+
+    spec = CampaignSpec(
+        name="train-soak-test", targets=("train_moments",),
+        bit_bands=("significant",), dtypes=("float32",),
+        samples=2, clean_samples=1, steps=2, persistent=(True,))
+    result = run_campaign("train_soak_test", [spec],
+                          out_dir=str(tmp_path))
+    art = load_artifact(
+        os.path.join(str(tmp_path), "BENCH_campaign_train_soak_test.json"))
+    [cell] = art["cells"]
+    assert cell["plan"]["steps"] == 2 and cell["plan"]["persistent"]
+    m = cell["metrics"]
+    assert m["steps"] == 2
+    assert len(m["detection_latency_hist"]) == 2
+    assert m["divergence_mean"] > 0.0           # moments drift params
+    assert m["detection_rate"] is not None
+    md = latency_markdown(art)
+    assert "latency hist" in md and "train_moments" in md
