@@ -22,10 +22,11 @@ from repro.campaign.artifacts import (cell_metrics, find_cells,
                                       threshold_curve_markdown,
                                       write_artifacts)
 from repro.campaign.diff import diff_artifacts, format_diff, run_diff
-from repro.campaign.executor import (CellResult, run_campaign, run_cell,
-                                     run_specs)
-from repro.campaign.metrics import CellMetrics, compute_metrics, \
-    wilson_interval
+from repro.campaign.executor import (CellResult, resolve_device_count,
+                                     run_campaign, run_cell, run_specs)
+from repro.campaign.metrics import (CellMetrics, compute_metrics,
+                                    merge_shard_detections,
+                                    wilson_interval)
 from repro.campaign.spec import (CampaignSpec, CellPlan, DLRM_GEMM_SHAPES,
                                  cell_seed, expand)
 from repro.campaign.targets import (InjectableTarget, TARGETS, apply_fault,
@@ -36,7 +37,9 @@ __all__ = [
     "InjectableTarget", "TARGETS", "register_target", "get_target",
     "apply_fault",
     "CellMetrics", "compute_metrics", "wilson_interval",
+    "merge_shard_detections",
     "CellResult", "run_cell", "run_specs", "run_campaign",
+    "resolve_device_count",
     "load_artifact", "write_artifacts", "markdown_table", "cell_metrics",
     "find_cells", "latency_markdown", "threshold_curve",
     "threshold_curve_markdown",

@@ -8,6 +8,7 @@ Examples::
     python -m repro.campaign --grid thresholds        # EB rel_bound sweep
     python -m repro.campaign --grid victims           # decode victim sweep
     python -m repro.campaign --grid training --quick  # train-step seams
+    python -m repro.campaign --grid multidevice --quick  # sharded cells
     python -m repro.campaign --grid serving_soak --quick   # live-traffic
     python -m repro.campaign --grid full --device-count 8 --out bench/
     python -m repro.campaign --diff OLD.json NEW.json # exit 1 on regression
@@ -28,8 +29,8 @@ def main(argv=None) -> int:
                     help="shorthand for --grid quick (the CI smoke grid)")
     ap.add_argument("--grid", default=None,
                     choices=["quick", "paper", "thresholds", "soak",
-                             "victims", "training", "serving_soak",
-                             "full"],
+                             "victims", "training", "multidevice",
+                             "serving_soak", "full"],
                     help="named grid to run (see repro.campaign.grids; "
                          "serving_soak runs repro.serving.soak)")
     ap.add_argument("--seed", type=int, default=0)
@@ -63,6 +64,22 @@ def main(argv=None) -> int:
                         overhead_tol=args.overhead_tol,
                         out_path=args.diff_out)
 
+    grid = args.grid or ("quick" if args.quick else None)
+    if grid is None:
+        ap.error("pick a grid (--quick / --grid {quick,paper,thresholds,"
+                 "soak,victims,training,multidevice,serving_soak,full}) "
+                 "or --diff OLD NEW")
+
+    # grids with sharded cells are pointless on a 1-device host: force
+    # the 4-device host platform the multidevice baseline was produced
+    # on unless the caller chose a count themselves (full includes the
+    # multidevice specs).  Say so: the split platform also hosts the
+    # grid's overhead timings, which must not silently change regime.
+    if grid in ("multidevice", "full") and not args.device_count:
+        args.device_count = 4
+        print(f"[{grid}] forcing --device-count 4 for the sharded cells "
+              f"(overhead timings run on the split host platform; pass "
+              f"--device-count to override)", flush=True)
     if args.device_count:
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
@@ -70,16 +87,15 @@ def main(argv=None) -> int:
         ).strip()
 
     # jax import happens after XLA_FLAGS is set
-    from repro.campaign.executor import CHUNK, run_campaign
-    from repro.campaign.grids import (GRIDS, paper_specs, quick_specs,
+    from repro.campaign.executor import (CHUNK, resolve_device_count,
+                                         run_campaign)
+    from repro.campaign.grids import (GRIDS, multidevice_specs,
+                                      paper_specs, quick_specs,
                                       thresholds_specs, training_specs,
                                       victims_specs)
 
-    grid = args.grid or ("quick" if args.quick else None)
-    if grid is None:
-        ap.error("pick a grid (--quick / --grid {quick,paper,thresholds,"
-                 "soak,victims,training,serving_soak,full}) or "
-                 "--diff OLD NEW")
+    # warns and falls back when the flag landed after jax initialized
+    resolve_device_count(args.device_count or None)
     if grid == "serving_soak":
         # live-traffic soak: the serving engine, not the vmapped executor
         from repro.campaign.artifacts import markdown_table
@@ -105,12 +121,17 @@ def main(argv=None) -> int:
     elif grid == "training":
         specs = training_specs(seed=args.seed, quick=args.quick,
                                samples=args.samples or 0)
+    elif grid == "multidevice":
+        specs = multidevice_specs(seed=args.seed, quick=args.quick,
+                                  samples=args.samples or 0)
     else:
         specs = GRIDS[grid](seed=args.seed)
 
-    # quick training runs get their own artifact name: the committed CI
-    # baseline is the quick variant and must not collide with full runs
-    name = "training_quick" if grid == "training" and args.quick else grid
+    # quick training/multidevice runs get their own artifact name: the
+    # committed CI baselines are the quick variants and must not collide
+    # with full runs
+    name = f"{grid}_quick" if grid in ("training", "multidevice") \
+        and args.quick else grid
     result = run_campaign(name, specs, out_dir=args.out,
                           chunk=args.chunk or CHUNK,
                           verbose=lambda s: print(s, flush=True))
@@ -121,7 +142,7 @@ def main(argv=None) -> int:
     print(markdown_table(result))
     if grid == "thresholds":
         print(threshold_curve_markdown(result))
-    if grid in ("training", "full"):
+    if grid in ("training", "multidevice", "full"):
         print(latency_markdown(result))
     print(f"artifact: {os.path.join(args.out, 'BENCH_campaign_' + name)}"
           f".json")

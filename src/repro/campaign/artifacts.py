@@ -142,11 +142,14 @@ def latency_markdown(result: dict) -> str:
     divergence ground truth has no other home in the tables; cells from
     single-shot (``trial``) targets are omitted.  The histogram column
     reads ``t0:n0 t1:n1 ...`` — n trials first detected t steps after
-    the upset."""
+    the upset.  The shards column is ``N✓`` when the cell's
+    ``checked_psum`` ran through a real shard_map collective
+    (``collective_verified``) with per-shard receive-side attribution in
+    brackets, plain ``1`` for the single-device fallback."""
     lines = ["# Soak cells: detection latency & divergence", "",
-             "| cell | steps | latency hist | mean lat | div (mean/max) |"
-             " loss div |",
-             "|---|---|---|---|---|---|"]
+             "| cell | steps | shards | latency hist | mean lat |"
+             " div (mean/max) | loss div |",
+             "|---|---|---|---|---|---|---|"]
     found = False
     for c in result["cells"]:
         m = c["metrics"]
@@ -157,10 +160,17 @@ def latency_markdown(result: dict) -> str:
         hist_s = " ".join(f"{t}:{n}" for t, n in enumerate(hist) if n) \
             or "—"
         lat = m.get("mean_detection_latency")
+        shards_s = "—" if m.get("shards") is None else str(m["shards"])
+        if m.get("collective_verified"):
+            shards_s += "✓"
+            if m.get("shard_detections"):
+                shards_s += " [{}]".format(
+                    " ".join(str(n) for n in m["shard_detections"]))
         lines.append(
-            "| `{cid}` | {steps} | {hist} | {lat} | {dm:.2e}/{dx:.2e} | "
-            "{ld:.2e} |".format(
-                cid=c["cell_id"], steps=m["steps"], hist=hist_s,
+            "| `{cid}` | {steps} | {sh} | {hist} | {lat} | "
+            "{dm:.2e}/{dx:.2e} | {ld:.2e} |".format(
+                cid=c["cell_id"], steps=m["steps"], sh=shards_s,
+                hist=hist_s,
                 lat="—" if lat is None else f"{lat:.2f}",
                 dm=m.get("divergence_mean") or 0.0,
                 dx=m.get("divergence_max") or 0.0,

@@ -6,6 +6,14 @@ here every cell is ONE jitted ``vmap`` over a key batch (chunked to bound
 memory), and with multiple host devices the chunks are ``pmap``'d so a
 `--device-count 8` sweep runs eight chunks abreast.
 
+Multi-device is also a CELL axis, not just a trial axis: a plan with
+``data_shards`` > 1 gets its own slice of the host mesh
+(:func:`repro.sharding.make_data_mesh` over devices forced with
+``XLA_FLAGS=--xla_force_host_platform_device_count``) and its soak runs
+under shard_map so ``checked_psum`` verifies a real collective.  Cells
+are placed round-robin over the disjoint mesh slices — the sweep itself
+is sharded, which is what a fleet-scale runner needs for locality.
+
 The executor is target-agnostic: it only sees the three pure functions a
 target registers (build / trial / clean) plus optional overhead thunks it
 times with a median-of-iters wall clock.
@@ -14,13 +22,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.campaign.metrics import CellMetrics, compute_metrics
+from repro.campaign.metrics import (CellMetrics, compute_metrics,
+                                    merge_shard_detections)
 from repro.campaign.spec import CampaignSpec, CellPlan, expand
 from repro.campaign.targets import get_target
 
@@ -34,6 +44,53 @@ class CellResult:
     plan: CellPlan
     metrics: CellMetrics
     seconds: float
+
+
+def resolve_device_count(requested: Optional[int] = None) -> int:
+    """Validate a requested host-device count against what jax actually
+    has.  ``--device-count`` only works when XLA_FLAGS lands before jax
+    initializes; when it didn't (library use, jax already imported), the
+    old behavior was to trust the caller and die in a pmap reshape —
+    now we warn and fall back to ``jax.local_device_count()``."""
+    avail = jax.local_device_count()
+    if requested and requested > avail:
+        warnings.warn(
+            f"requested {requested} host devices but only {avail} exist "
+            f"(XLA_FLAGS must be set before jax initializes); falling "
+            f"back to {avail}", UserWarning, stacklevel=2)
+        return avail
+    return requested or avail
+
+
+def _cell_mesh(plan: CellPlan, slot: int = 0):
+    """-> (mesh | None, effective_shards) for one cell.
+
+    Sharded cells land on slices of the host platform assigned
+    round-robin by ``slot`` (the cell's index among sharded cells): with
+    8 devices and 2-shard cells, four cells run on four disjoint slices
+    — the sweep is sharded, not just each cell's trials.  (Disjointness
+    holds per shard width; a sweep mixing widths can overlap slices,
+    harmless while cells execute sequentially — a concurrent fleet
+    runner would need a real slice allocator.)  A host with fewer
+    devices than ``plan.data_shards`` degrades to what exists (with a
+    warning) instead of failing inside Mesh construction."""
+    if plan.data_shards <= 1:
+        return None, 1
+    shards = min(plan.data_shards, jax.local_device_count())
+    if shards < plan.data_shards:
+        warnings.warn(
+            f"cell {plan.cell_id}: data_shards={plan.data_shards} > "
+            f"{shards} available host devices; running at {shards} "
+            f"shard(s) (collective_verified will record the degradation)",
+            UserWarning, stacklevel=2)
+    if shards == 1:
+        return None, 1
+    devs = jax.local_devices()
+    n_slices = len(devs) // shards
+    start = (slot % n_slices) * shards
+    from repro.sharding import make_data_mesh
+    return make_data_mesh(shards, devices=devs[start:start + shards]), \
+        shards
 
 
 def _chunked_counts(fn: Callable, keys: jax.Array, chunk: int,
@@ -133,24 +190,71 @@ def _chunked_soak(fn: Callable, keys: jax.Array, chunk: int,
     return total
 
 
+def _sharded_soak(fn: Callable, keys: jax.Array, steps: int,
+                  shards: int) -> dict:
+    """Run a soak-protocol target whose trial executes under a shard_map
+    mesh.  Trials run one jitted call at a time (a sharded trial already
+    occupies its whole mesh slice; vmapping over shard_map would fuse
+    trial and mesh batching) and the per-shard ``shard_detected`` flags
+    are folded with :func:`merge_shard_detections` — same aggregates as
+    :func:`_chunked_soak` plus the per-shard column.
+    """
+    jfn = jax.jit(fn)
+    total = {"detected": 0, "corrupted": 0, "det_and_cor": 0,
+             "hist": np.zeros(steps, np.int64), "div_sum": 0.0,
+             "div_max": 0.0, "loss_div_sum": 0.0}
+    per_trial_shards: List[np.ndarray] = []
+    for i in range(keys.shape[0]):
+        out = jax.device_get(jfn(keys[i]))
+        det_steps = np.asarray(out["detected_steps"], bool)
+        detected = bool(det_steps.any())
+        corrupted = bool(out["corrupted"])
+        total["detected"] += detected
+        total["corrupted"] += corrupted
+        total["det_and_cor"] += detected and corrupted
+        if detected:
+            total["hist"][int(np.argmax(det_steps))] += 1
+        total["div_sum"] += float(out["divergence"])
+        total["div_max"] = max(total["div_max"],
+                               float(out["divergence"]))
+        total["loss_div_sum"] += float(out["loss_divergence"])
+        per_trial_shards.append(
+            np.asarray(out["shard_detected"], np.int64))
+    total["shard_detections"] = merge_shard_detections(per_trial_shards) \
+        or [0] * shards
+    return total
+
+
 def _median_time(fn: Callable) -> float:
     from repro.campaign.timing import median_time
     return median_time(jax.jit(fn))
 
 
-def run_cell(plan: CellPlan, *, chunk: int = CHUNK) -> CellResult:
+def run_cell(plan: CellPlan, *, chunk: int = CHUNK,
+             slot: int = 0) -> CellResult:
     target = get_target(plan.target)
     t0 = time.perf_counter()
     key = jax.random.key(plan.seed)
     k_build, k_trial, k_clean = jax.random.split(key, 3)
 
-    state = target.build(plan, k_build)
+    mesh, eff_shards = (_cell_mesh(plan, slot) if target.shardable
+                        else (None, 1))
+    if target.shardable:
+        state = target.build(plan, k_build, mesh=mesh)
+    else:
+        state = target.build(plan, k_build)
 
     soak_extras: dict = {}
     if target.soak is not None:
-        agg = _chunked_soak(
-            lambda k: target.soak(state, plan, k),
-            jax.random.split(k_trial, plan.samples), chunk, plan.steps)
+        trial_keys = jax.random.split(k_trial, plan.samples)
+        if mesh is not None:
+            agg = _sharded_soak(
+                lambda k: target.soak(state, plan, k),
+                trial_keys, plan.steps, eff_shards)
+        else:
+            agg = _chunked_soak(
+                lambda k: target.soak(state, plan, k),
+                trial_keys, chunk, plan.steps)
         detected = agg["detected"]
         corrupted = agg["corrupted"]
         det_and_cor = agg["det_and_cor"]
@@ -160,6 +264,15 @@ def run_cell(plan: CellPlan, *, chunk: int = CHUNK) -> CellResult:
             "divergence_mean": agg["div_sum"] / plan.samples,
             "divergence_max": agg["div_max"],
             "loss_divergence_mean": agg["loss_div_sum"] / plan.samples,
+            "shards": eff_shards,
+            # True only when the PLANNED multi-device collective ran: a
+            # cell degraded to fewer shards (or to the single-device
+            # fallback) must not read as mesh-verified even though a
+            # smaller real collective may have executed — `shards` says
+            # what actually ran
+            "collective_verified": (eff_shards > 1
+                                    and eff_shards == plan.data_shards),
+            "shard_detections": agg.get("shard_detections"),
         }
     else:
         trial_counts = _chunked_counts(
@@ -200,11 +313,16 @@ def run_specs(specs: Sequence[CampaignSpec], *, chunk: int = CHUNK,
     """Expand and execute a list of specs; returns (results, skipped)."""
     results: List[CellResult] = []
     skipped: List[dict] = []
+    n_sharded = 0
     for spec in specs:
         plans, skips = expand(spec)
         skipped.extend(skips)
         for plan in plans:
-            r = run_cell(plan, chunk=chunk)
+            # sharded cells take successive mesh slices (round-robin)
+            slot = n_sharded
+            if plan.data_shards > 1:
+                n_sharded += 1
+            r = run_cell(plan, chunk=chunk, slot=slot)
             results.append(r)
             if verbose:
                 m = r.metrics

@@ -12,6 +12,10 @@
              compressed-gradient optimizer pipeline (pre/post checked_psum,
              int8 payload, error feedback, AdamW moments) plus multi-step
              persistent-fault soaks with detection-latency histograms.
+``multidevice`` — mesh-sharded training soaks: cells run under shard_map
+             over a fake ``data`` axis so checked_psum verifies a REAL
+             collective per step (single-shard transit flips, the
+             post-reduction window, and a sharded-vs-single contrast).
 ``full``   — everything above plus the beyond-paper KV-cache cells.
 
 (The ``serving_soak`` grid — faults under live traffic — lives in
@@ -157,6 +161,55 @@ def training_specs(seed: int = 0, quick: bool = False,
     return [single, soak]
 
 
+#: the mesh seams (repro.campaign.targets_training): one shard's payload
+#: in transit + the post-reduction summed payload
+MULTIDEVICE_TARGETS = ("train_payload_shard", "train_reduced")
+
+
+def multidevice_specs(seed: int = 0, quick: bool = False,
+                      samples: int = 0,
+                      shards: int = 4) -> List[CampaignSpec]:
+    """Mesh-sharded campaign execution (ROADMAP items): training soaks
+    run under shard_map over a fake ``data`` axis of ``shards`` host
+    devices, so ``checked_psum`` verifies a REAL collective on every
+    step instead of the ``axis_name=None`` fallback every other grid
+    exercises.
+
+    Two specs: the mesh seams at full shard count — a single-shard int8
+    payload flip that only the post-psum additivity check can see
+    (detected after the collective, never before) and the summed payload
+    after verification (the post-reduction escape window) — then the
+    shard-contrast soak sweeping ``train_payload`` over ``mesh=(1,
+    shards)`` so the artifact holds the same seam with and without a
+    real reduction in the loop (Ma et al.: fault outcomes shift once
+    distributed reductions are real).
+
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the
+    CLI forces it for this grid when ``--device-count`` is absent); a
+    host with fewer devices degrades per cell with a warning and records
+    ``collective_verified=False``.
+    """
+    n = samples or (4 if quick else 12)
+    soak_steps = 2 if quick else 4
+    seams = CampaignSpec(
+        name="multidevice-seams",
+        targets=MULTIDEVICE_TARGETS,
+        fault_models=("bitflip",),
+        bit_bands=("significant",),
+        dtypes=("int8", "int32"),
+        samples=n, clean_samples=2, seed=seed,
+        steps=soak_steps, mesh=(shards,))
+    contrast = CampaignSpec(
+        name="multidevice-contrast",
+        targets=("train_payload",),
+        fault_models=("bitflip",),
+        bit_bands=("significant",),
+        dtypes=("int8",),
+        samples=n, clean_samples=2, seed=seed,
+        steps=soak_steps, mesh=(1, shards))
+    return [seams, contrast]
+
+
 def soak_specs(seed: int = 0) -> List[CampaignSpec]:
     return [CampaignSpec(
         name="soak",
@@ -176,7 +229,7 @@ def full_specs(seed: int = 0) -> List[CampaignSpec]:
         dtypes=("int8", "float32"),
         samples=400, seed=seed, measure_overhead=True)
     return paper_specs(seed) + [kv] + soak_specs(seed) \
-        + training_specs(seed)
+        + training_specs(seed) + multidevice_specs(seed)
 
 
 GRIDS: Dict[str, object] = {
@@ -186,5 +239,6 @@ GRIDS: Dict[str, object] = {
     "soak": soak_specs,
     "victims": victims_specs,
     "training": training_specs,
+    "multidevice": multidevice_specs,
     "full": full_specs,
 }

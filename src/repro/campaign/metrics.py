@@ -65,6 +65,22 @@ class CellMetrics:
     divergence_max: Optional[float] = None
     #: max |loss_faulty - loss_clean| over the soak, averaged over trials
     loss_divergence_mean: Optional[float] = None
+    # ------- multi-device soak columns (None for non-soak cells) --------
+    #: data shards the cell actually executed under (may be lower than
+    #: ``plan.data_shards`` when the host had fewer devices)
+    shards: Optional[int] = None
+    #: True iff ``checked_psum`` ran through a real shard_map collective
+    #: at the PLANNED shard count (``shards == plan.data_shards > 1``) —
+    #: the column that says the detection claim covers the distributed
+    #: reduction the cell id promises; any degradation (partial or to
+    #: the ``axis_name=None`` fallback) records False, with ``shards``
+    #: holding what actually ran
+    collective_verified: Optional[bool] = None
+    #: shard_detections[s] = faulty trials whose receive-side payload
+    #: verify fired on shard s (the per-shard FaultReport merge) —
+    #: attribution telemetry; the detection verdict itself is the
+    #: post-collective additivity check
+    shard_detections: Optional[List[int]] = None
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -88,7 +104,10 @@ def compute_metrics(*, samples: int, detected: int, corrupted: int,
                     detection_latency_hist: Optional[List[int]] = None,
                     divergence_mean: Optional[float] = None,
                     divergence_max: Optional[float] = None,
-                    loss_divergence_mean: Optional[float] = None
+                    loss_divergence_mean: Optional[float] = None,
+                    shards: Optional[int] = None,
+                    collective_verified: Optional[bool] = None,
+                    shard_detections: Optional[List[int]] = None
                     ) -> CellMetrics:
     # |detected ∪ masked| = samples - |corrupted ∩ undetected|
     escapes = corrupted - detected_and_corrupted
@@ -125,4 +144,29 @@ def compute_metrics(*, samples: int, detected: int, corrupted: int,
         divergence_mean=divergence_mean,
         divergence_max=divergence_max,
         loss_divergence_mean=loss_divergence_mean,
+        shards=shards,
+        collective_verified=collective_verified,
+        shard_detections=shard_detections,
     )
+
+
+def merge_shard_detections(per_trial) -> List[int]:
+    """Fold per-trial, per-shard detection flags into per-shard counts.
+
+    ``per_trial`` is an iterable of length-S bool/int vectors (one per
+    faulty trial: did shard s's receive-side verify fire).  The fold is
+    the same monoid FaultReport counters use — elementwise sum, never a
+    reset — so a sharded cell's artifact column reads as one merged
+    report across the whole soak."""
+    totals: Optional[List[int]] = None
+    for flags in per_trial:
+        vals = [int(v) for v in flags]
+        if totals is None:
+            totals = vals
+        elif len(vals) != len(totals):
+            raise ValueError(
+                f"shard count changed mid-merge: {len(totals)} != "
+                f"{len(vals)}")
+        else:
+            totals = [a + b for a, b in zip(totals, vals)]
+    return totals or []

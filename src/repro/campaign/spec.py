@@ -81,6 +81,12 @@ class CampaignSpec:
     #: transient upset at step 0; True = the fault re-strikes the same
     #: site every step (a failing cell re-corrupting each access).
     persistent: Tuple[bool, ...] = (False,)
+    #: data-shard mesh sweep (shardable targets only): each value N > 1
+    #: runs the cell's soak under ``shard_map`` over a fake ``data`` axis
+    #: of N host devices, so ``checked_psum`` verifies a REAL collective
+    #: (N = 1 is the single-device verify-only path).  The executor
+    #: places each sharded cell on its own slice of the host mesh.
+    mesh: Tuple[int, ...] = (1,)
 
     def __post_init__(self):
         if self.samples < 1:
@@ -91,9 +97,11 @@ class CampaignSpec:
             raise ValueError("rel_bounds must be positive")
         if self.steps < 1:
             raise ValueError("steps must be >= 1")
+        if any(s < 1 for s in self.mesh):
+            raise ValueError("mesh shard counts must be >= 1")
         # tolerate lists from JSON round-trips / hand-written specs
         for f in ("targets", "fault_models", "bit_bands", "dtypes",
-                  "rel_bounds", "victims", "persistent"):
+                  "rel_bounds", "victims", "persistent", "mesh"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -130,6 +138,9 @@ class CellPlan:
     steps: int = 1
     #: True = the fault re-strikes the same site every step of the soak
     persistent: bool = False
+    #: data shards the soak runs under (shardable targets; 1 = no mesh,
+    #: N > 1 = shard_map over a fake ``data`` axis of N host devices)
+    data_shards: int = 1
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -146,7 +157,8 @@ def _cell_id(target: str, model: str, band: str,
              shape: Sequence[int], dtype: str,
              rel_bound: Optional[float] = None,
              victim: Optional[str] = None,
-             steps: int = 1, persistent: bool = False) -> str:
+             steps: int = 1, persistent: bool = False,
+             data_shards: int = 1) -> str:
     s = "x".join(str(d) for d in shape) if shape else "default"
     base = f"{target}/{model}/{band}/{s}/{dtype}"
     if rel_bound is not None:
@@ -157,6 +169,8 @@ def _cell_id(target: str, model: str, band: str,
         base += f"/steps{steps}"
     if persistent:
         base += "/persistent"
+    if data_shards > 1:
+        base += f"/shards{data_shards}"
     return base
 
 
@@ -204,6 +218,13 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
                 "cell_id": _cell_id(tname, model, band, (), dtype),
                 "reason": f"target {tname} cannot carry a persistent "
                           f"fault (persistent sweep ignored)"})
+        shard_counts = tuple(dict.fromkeys(spec.mesh)) \
+            if target.shardable else (1,)
+        if any(s > 1 for s in spec.mesh) and not target.shardable:
+            skipped.append({
+                "cell_id": _cell_id(tname, model, band, (), dtype),
+                "reason": f"target {tname} cannot shard its collective "
+                          f"(mesh sweep ignored)"})
         if steps == 1 and any(persistence):
             # a fault that re-strikes "every step" of a 1-step trial IS
             # the transient fault — a /persistent cell here would be a
@@ -215,10 +236,11 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
                 "reason": "persistent is indistinguishable from "
                           "transient at steps=1 (duplicate cell "
                           "dropped)"})
-        for shape, rel_bound, victim, persistent in itertools.product(
-                shapes, bounds, victims, persistence):
+        for shape, rel_bound, victim, persistent, shards in \
+                itertools.product(shapes, bounds, victims, persistence,
+                                  shard_counts):
             cid = _cell_id(tname, model, band, shape, dtype, rel_bound,
-                           victim, steps, persistent)
+                           victim, steps, persistent, shards)
             if cid in seen:
                 continue
             seen.add(cid)
@@ -263,5 +285,6 @@ def expand(spec: CampaignSpec) -> Tuple[List[CellPlan], List[dict]]:
                 seed=cell_seed(spec.seed, cid),
                 measure_overhead=spec.measure_overhead,
                 rel_bound=rel_bound, victim=victim,
-                steps=steps, persistent=persistent))
+                steps=steps, persistent=persistent,
+                data_shards=shards))
     return plans, skipped

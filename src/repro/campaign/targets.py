@@ -85,6 +85,13 @@ class InjectableTarget:
     #: scalars vs the clean twin run).  expand() routes spec.steps /
     #: spec.persistent sweeps to these targets only.
     soak: Optional[Callable[[Any, CellPlan, jax.Array], dict]] = None
+    #: True for soak targets that can run under a data-shard mesh: their
+    #: ``build`` accepts a ``mesh=`` kwarg and their soak executes the
+    #: collective through ``shard_map`` when ``plan.data_shards > 1`` —
+    #: expand() routes spec.mesh sweeps to these targets only.  Sharded
+    #: soaks additionally return ``shard_detected`` (bool [shards]) for
+    #: the per-shard FaultReport merge.
+    shardable: bool = False
 
     def __post_init__(self):
         if (self.trial is None) == (self.soak is None):

@@ -31,6 +31,30 @@ at a chosen seam:
   corruption (Ma et al. 2023's parameter-corruption regime, one level
   up).  Bound 0; divergence measures how hard the moment EMA smears one
   upset across subsequent steps.
+* ``train_payload_shard`` — ONE shard's int8 payload, after encode and
+  before the all-reduce: corruption in transit on a real mesh.  The
+  corrupted shard's contribution shifts the summed residue while the
+  expected value — ``psum`` of per-shard checksums encoded pre-flip —
+  does not, so the flip is detected AFTER the collective by the
+  additivity check (bound 1: |Δ| = 2^k ≤ 128 < 8191), never before (a
+  sender-side recompute cannot see a wire fault).  At ``data_shards=1``
+  this degenerates to ``train_payload``.
+* ``train_reduced``    — the summed int32 payload after the verified
+  collective, before decompression: the post-reduction window.  Bound 0
+  (the additivity check already passed); its escape rate prices the gap
+  on the *reduced* side exactly as ``train_grad_post`` does one stage
+  later.
+
+Multi-device semantics (``plan.data_shards`` > 1): the whole soak runs
+under :func:`repro.sharding.shard_map` over a fake ``data`` axis — each
+shard computes gradients on its own slice of the seeded pipeline, keeps
+its own error-feedback residual, and the compressed payload goes through
+a REAL ``psum`` with the mod-8191 receive-side check live on every step
+(:func:`checked_psum_attributed` additionally reports each shard's local
+verify count, folded into the artifact's ``shard_detections`` column).
+Shard-local seams (``grad_pre``, ``payload_shard``, ``error_feedback``)
+strike shard 0 only; replicated seams (``grad_post``, ``reduced``,
+``moment``) strike every shard identically so parameters stay replicated.
 
 Ground truth is a **clean twin**: the same scan over the same batches with
 injection masked off, computed once per cell at build time.  ``corrupted``
@@ -50,12 +74,15 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.campaign.spec import CellPlan
 from repro.campaign.targets import (InjectableTarget, apply_fault,
                                     register_target)
 from repro.core.inject import victim_leaf_index
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm
 from repro.runtime.compression import (CompressionState, checked_psum,
+                                       checked_psum_attributed,
                                        compress_grads, decompress_grads,
                                        init_compression)
 
@@ -74,8 +101,13 @@ MAX_GRAD_NORM = 1.0
 TRAIN_DEFAULT_VICTIM = "mlp"
 
 #: injection seams, in pipeline order (module doc above)
-INJECT_POINTS = ("grad_pre", "payload", "error_feedback", "grad_post",
-                 "moment")
+INJECT_POINTS = ("grad_pre", "payload", "payload_shard", "error_feedback",
+                 "reduced", "grad_post", "moment")
+
+#: seams that strike local, per-shard state when the soak runs under a
+#: data mesh — the flip lands on shard 0 only; everything else strikes
+#: replicated values identically on every shard
+SHARD_LOCAL_POINTS = ("grad_pre", "payload_shard", "error_feedback")
 
 
 def _flip_leaf(tree, victim_idx: int, key: jax.Array, plan: CellPlan,
@@ -94,13 +126,15 @@ def _inject_point(plan: CellPlan) -> str:
     to pick payload (int8) vs error-feedback residual (float32), the same
     trick the kv_cache target plays with its scales."""
     point = {"train_grad_pre": "grad_pre", "train_grad_post": "grad_post",
-             "train_moments": "moment"}.get(plan.target)
+             "train_moments": "moment",
+             "train_payload_shard": "payload_shard",
+             "train_reduced": "reduced"}.get(plan.target)
     if point is not None:
         return point
     return "payload" if plan.dtype == "int8" else "error_feedback"
 
 
-def _train_build(plan: CellPlan, key: jax.Array):
+def _train_build(plan: CellPlan, key: jax.Array, mesh=None):
     from repro.configs import reduce_cfg
     from repro.configs.base import ShapeConfig
     from repro.configs.registry import get_arch
@@ -111,6 +145,7 @@ def _train_build(plan: CellPlan, key: jax.Array):
     from repro.sharding import values_of
 
     batch, seq_len = plan.shape
+    shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
     cfg = reduce_cfg(get_arch(TRAIN_ARCH))
     model = build_model(cfg, max_pos=seq_len + cfg.meta_tokens + 8)
     ctx = Ctx(plan=default_plan(), quant=False,
@@ -119,17 +154,27 @@ def _train_build(plan: CellPlan, key: jax.Array):
     params = values_of(jax.jit(lambda k: model.init(k))(key))
     opt = adamw_init(params)
     comm = init_compression(params)
+    if shards > 1:
+        # each data shard keeps its OWN error-feedback residual (that is
+        # the point of error feedback); leading [shards] axis, P("data")
+        comm = CompressionState(error=jax.tree.map(
+            lambda e: jnp.zeros((shards,) + e.shape, e.dtype), comm.error))
 
-    # the real seeded pipeline, stacked to [steps, ...] for the scan,
-    # plus one held-out batch (step index ``steps``) to evaluate the
-    # post-soak loss on — without it a steps=1 cell could never observe
-    # a loss effect (per-step losses are computed on PRE-update params,
-    # and every seam injects after that point)
+    # the real seeded pipeline, stacked to [steps, ...] (sharded cells:
+    # [steps, shards, ...] — every shard sees a DIFFERENT batch, so the
+    # psum reduces genuinely distinct payloads), plus one held-out batch
+    # to evaluate the post-soak loss on — without it a steps=1 cell could
+    # never observe a loss effect (per-step losses are computed on
+    # PRE-update params, and every seam injects after that point)
     dataset = make_dataset(cfg, ShapeConfig("campaign", "train",
                                             seq_len, batch))
-    per_step = [dataset.batch_at(t) for t in range(plan.steps + 1)]
+    per_step = [dataset.batch_at(t)
+                for t in range(plan.steps * shards + 1)]
     batches = {k: jnp.stack([jnp.asarray(b[k]) for b in per_step[:-1]])
                for k in per_step[0]}
+    if shards > 1:
+        batches = {k: v.reshape((plan.steps, shards) + v.shape[1:])
+                   for k, v in batches.items()}
     eval_batch = {k: jnp.asarray(per_step[-1][k]) for k in per_step[-1]}
 
     def loss_fn(p, mb):
@@ -138,8 +183,9 @@ def _train_build(plan: CellPlan, key: jax.Array):
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    # all injection trees (grads / payload q / residuals / moments) mirror
-    # the param tree, so one victim index addresses every seam
+    # all injection trees (grads / payload q / summed int32 / residuals /
+    # moments) mirror the param tree, so one victim index addresses every
+    # seam
     victim_idx, victim_path = victim_leaf_index(
         params, plan.victim or TRAIN_DEFAULT_VICTIM, prefer_int8=False)
 
@@ -147,11 +193,12 @@ def _train_build(plan: CellPlan, key: jax.Array):
              "batches": batches, "eval_batch": eval_batch,
              "grad_fn": grad_fn,
              "loss_only": lambda p, mb: loss_fn(p, mb)[0],
-             "victim_idx": victim_idx, "victim_path": victim_path}
+             "victim_idx": victim_idx, "victim_path": victim_path,
+             "mesh": mesh, "shards": shards}
 
-    # clean twin: same scan, injection masked off everywhere
+    # clean twin: same scan (same mesh), injection masked off everywhere
     zeros = jnp.zeros((plan.steps,), bool)
-    clean_params, clean_errs, clean_losses, clean_final = jax.jit(
+    clean_params, clean_errs, clean_losses, clean_final, _ = jax.jit(
         lambda: _run_soak(state, plan, jax.random.key(0), zeros))()
     state.update(clean_params=clean_params, clean_errs=clean_errs,
                  clean_losses=clean_losses, clean_final_loss=clean_final)
@@ -162,45 +209,132 @@ def _run_soak(state, plan: CellPlan, key: jax.Array,
               inject_mask: jax.Array) -> Tuple:
     """``plan.steps`` train steps with the fault struck where
     ``inject_mask`` is True.  -> (final_params, errs [steps], losses
-    [steps], final_loss) — ``final_loss`` evaluates the post-soak params
-    on the held-out batch, the only loss a fault in the LAST step's
-    update can move.  The same key every step means a persistent fault
-    re-strikes the SAME element/bit (stuck-site semantics, not a fresh
-    random upset).
+    [steps], final_loss, local_errs [shards, steps]) — ``final_loss``
+    evaluates the post-soak params on the held-out batch, the only loss a
+    fault in the LAST step's update can move; ``local_errs`` is the
+    per-shard receive-side verify count (attribution — which shard
+    carried a corrupted payload).  The same key every step means a
+    persistent fault re-strikes the SAME element/bit (stuck-site
+    semantics, not a fresh random upset).
     """
+    if state.get("mesh") is not None:
+        return _run_soak_sharded(state, plan, key, inject_mask)
+    body = _make_step_body(state, plan, key, on_shard=jnp.asarray(True),
+                           axis_name=None)
+    carry = (state["params"], state["opt"], state["comm"].error)
+    (params_f, _, _), (errs, losses, local) = jax.lax.scan(
+        body, carry, (state["batches"], inject_mask))
+    final_loss = state["loss_only"](params_f, state["eval_batch"])
+    return params_f, errs, losses, final_loss, local[None, :]
+
+
+def _make_step_body(state, plan: CellPlan, key: jax.Array, on_shard,
+                    axis_name):
+    """The ONE train-step body both soak variants scan: grad →
+    [grad_pre] → compress → [payload / payload_shard] →
+    [error_feedback] → checked psum → [reduced] → decompress →
+    [grad_post] → clip → AdamW → [moment], the cell's seam flipped where
+    its gate is True.
+
+    Carry = (params, opt, error-feedback tree); per-step outputs =
+    (global err count, loss, this-shard receive-side verify count).
+    ``axis_name=None`` is the single-device pipeline, where the
+    additivity check IS the receive-side verify — ``local_errs`` aliases
+    ``comm_errs`` rather than recomputing the checksums a second time.
+    Under a mesh, ``on_shard`` gates shard-local seams to shard 0 and
+    the fwd/loss aggregates reduce over the axis."""
     point = _inject_point(plan)
     vidx, vpath = state["victim_idx"], state["victim_path"]
     grad_fn = state["grad_fn"]
+    n_shards = state["shards"] if axis_name is not None else 1
 
     def flip(tree, do_inj, path=""):
         return _flip_leaf(tree, vidx, key, plan, do_inj, path=path)
 
     def body(carry, inp):
-        params, opt, comm = carry
+        params, opt, error = carry
         mb, do_inj = inp
+        do_loc = do_inj & on_shard      # shard-local seams: shard 0 only
         (loss, fwd_errs), grads = grad_fn(params, mb)
         if point == "grad_pre":
-            grads = flip(grads, do_inj, path=vpath)
-        payload, comm = compress_grads(grads, comm)
-        if point == "payload":
-            payload = dict(payload, q=flip(payload["q"], do_inj))
+            grads = flip(grads, do_loc, path=vpath)
+        payload, comm = compress_grads(grads,
+                                       CompressionState(error=error))
+        if point in ("payload", "payload_shard"):
+            # at data_shards=1 "one shard's payload" IS the payload
+            payload = dict(payload, q=flip(payload["q"], do_loc))
         if point == "error_feedback":
-            comm = CompressionState(error=flip(comm.error, do_inj))
-        summed, scale_sum, comm_errs = checked_psum(payload, None)
-        mean = decompress_grads(summed, scale_sum, 1)
+            comm = CompressionState(error=flip(comm.error, do_loc))
+        if axis_name is None:
+            summed, scale_sum, comm_errs = checked_psum(payload, None)
+            local_errs = comm_errs
+        else:
+            summed, scale_sum, comm_errs, local_errs = \
+                checked_psum_attributed(payload, axis_name)
+        if point == "reduced":
+            # post-verify: escapes; same flip on every shard (replicated)
+            summed = flip(summed, do_inj)
+        mean = decompress_grads(summed, scale_sum, n_shards)
         if point == "grad_post":
             mean = flip(mean, do_inj)
         clipped, _ = clip_by_global_norm(mean, MAX_GRAD_NORM)
         new_params, new_opt = adamw_update(clipped, opt, params, TRAIN_LR)
         if point == "moment":
             new_opt = dict(new_opt, m=flip(new_opt["m"], do_inj))
-        return (new_params, new_opt, comm), (fwd_errs + comm_errs, loss)
+        if axis_name is not None:
+            fwd_errs = jax.lax.psum(fwd_errs, axis_name)
+            loss = jax.lax.pmean(loss, axis_name)
+        return (new_params, new_opt, comm.error), \
+            (fwd_errs + comm_errs, loss, local_errs)
 
-    carry = (state["params"], state["opt"], state["comm"])
-    (params_f, _, _), (errs, losses) = jax.lax.scan(
-        body, carry, (state["batches"], inject_mask))
+    return body
+
+
+def _run_soak_sharded(state, plan: CellPlan, key: jax.Array,
+                      inject_mask: jax.Array) -> Tuple:
+    """The mesh path: the whole scan runs under ``shard_map`` over the
+    fake ``data`` axis, so every step's ``checked_psum`` is a REAL
+    collective — S distinct payloads reduced, the additivity check
+    comparing checksum(psum(q)) against psum(checksum(q)) live.
+
+    Same contract (and same step body) as :func:`_run_soak`.  Per-shard
+    inputs carry a leading [shards] axis split by ``P("data")`` (batches
+    at axis 1: ``P(None, "data")``); params/opt and the inject mask are
+    replicated.  Shard-local seams gate the flip on ``axis_index == 0``;
+    replicated seams flip with the same key on every shard so parameters
+    stay replicated through the update.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import shard_map
+
+    mesh = state["mesh"]
+    shard_local = _inject_point(plan) in SHARD_LOCAL_POINTS
+
+    def run(params, opt, error0, batches, mask):
+        # local blocks: batches [steps, 1, B, ...] -> [steps, B, ...];
+        # residual [1, ...] -> [...]
+        batches = jax.tree.map(lambda x: x[:, 0], batches)
+        error0 = jax.tree.map(lambda e: e[0], error0)
+        on_shard = jax.lax.axis_index("data") == 0 if shard_local \
+            else jnp.asarray(True)
+        body = _make_step_body(state, plan, key, on_shard=on_shard,
+                               axis_name="data")
+        (params_f, _, _), (errs, losses, local) = jax.lax.scan(
+            body, (params, opt, error0), (batches, mask))
+        # errs/losses are replicated (psum/pmean products); local is this
+        # shard's [steps] verify counts -> [1, steps] for P("data") out
+        return params_f, errs, losses, local[None, :]
+
+    sharded = shard_map(
+        run, mesh=mesh,
+        in_specs=(P(), P(), P("data"), P(None, "data"), P()),
+        out_specs=(P(), P(), P(), P("data")))
+    params_f, errs, losses, local = sharded(
+        state["params"], state["opt"], state["comm"].error,
+        state["batches"], inject_mask)
     final_loss = state["loss_only"](params_f, state["eval_batch"])
-    return params_f, errs, losses, final_loss
+    return params_f, errs, losses, final_loss, local
 
 
 def _divergence(params_f, params_c) -> Tuple[jax.Array, jax.Array]:
@@ -220,7 +354,8 @@ def _train_soak_fn(state, plan: CellPlan, key: jax.Array) -> dict:
     steps = plan.steps
     mask = jnp.ones((steps,), bool) if plan.persistent \
         else jnp.arange(steps) == 0
-    params_f, errs, losses, final_loss = _run_soak(state, plan, key, mask)
+    params_f, errs, losses, final_loss, local = _run_soak(
+        state, plan, key, mask)
     div, changed = _divergence(params_f, state["clean_params"])
     loss_div = jnp.maximum(
         jnp.max(jnp.abs(losses - state["clean_losses"])),
@@ -230,6 +365,9 @@ def _train_soak_fn(state, plan: CellPlan, key: jax.Array) -> dict:
         "corrupted": changed,
         "divergence": div,
         "loss_divergence": loss_div,
+        # per-shard attribution: did shard s's receive-side verify fire
+        # at any step (local_errs [shards, steps])
+        "shard_detected": jnp.sum(local, axis=1) > 0,
     }
 
 
@@ -249,9 +387,11 @@ def _train_overhead(state, plan: CellPlan):
     contradictory noise samples (plus two extra train-step compiles per
     cell).  Only the canonical cell — the int8 payload seam at the
     significant band, single step — reports the number; every other cell
-    returns None and the executor leaves its overhead column empty."""
+    returns None and the executor leaves its overhead column empty.
+    Sharded cells skip it too: the timing thunks are single-device."""
     if not (_inject_point(plan) == "payload"
-            and plan.bit_band == "significant" and plan.steps == 1):
+            and plan.bit_band == "significant" and plan.steps == 1
+            and plan.data_shards == 1):
         return None
     grad_fn = state["grad_fn"]
     params, opt, comm = state["params"], state["opt"], state["comm"]
@@ -278,9 +418,13 @@ def _train_overhead(state, plan: CellPlan):
 def _train_bound(target: str):
     def bound(plan: CellPlan):
         point = _inject_point(plan)
-        if point == "payload":
+        if point in ("payload", "payload_shard"):
             if plan.fault_model == "bitflip" and plan.flips == 1:
-                # |Δ| = 2^k ≤ 128 < 8191: the residue always moves
+                # |Δ| = 2^k ≤ 128 < 8191: one shard's residue shift always
+                # moves the summed residue (payload_shard), and with the
+                # same flip on every shard a cancellation mod 8191 leaves
+                # the SUM clean — masked, so the effective (detected |
+                # masked) rate the bound speaks about is still 1
                 return 1.0
             return None
         # every other seam is outside the transport checksum by design
@@ -301,7 +445,7 @@ def _register(name: str, dtypes: Tuple[str, ...],
         default_shapes=_TRAIN_SHAPES, shape_arity=2,
         dtypes=dtypes, bands=bands,
         analytic_bound=_train_bound(name), overhead=_train_overhead,
-        multi_flip=True, victim_selectable=True))
+        multi_flip=True, victim_selectable=True, shardable=True))
 
 
 _register("train_grad_pre", ("float32",), _F32_BANDS)
@@ -310,6 +454,14 @@ _register("train_payload", ("int8", "float32"),
           ("all", "low", "significant", "sign", "exponent", "mantissa",
            "high_mantissa"))
 _register("train_moments", ("float32",), _F32_BANDS)
+# mesh seams: one shard's payload in transit (caught AFTER the psum by
+# the additivity check) and the summed int32 payload after the verified
+# collective (the post-reduction escape window)
+_register("train_payload_shard", ("int8",),
+          ("all", "low", "significant", "sign"))
+_register("train_reduced", ("int32",),
+          ("all", "low", "significant", "sign"))
 
 
-__all__ = ["TRAIN_ARCH", "TRAIN_LR", "INJECT_POINTS"]
+__all__ = ["TRAIN_ARCH", "TRAIN_LR", "INJECT_POINTS",
+           "SHARD_LOCAL_POINTS"]

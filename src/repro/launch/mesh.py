@@ -25,11 +25,24 @@ def make_production_mesh(*, multi_pod: bool = False):
         return Mesh(devices, axes)
 
 
-def make_host_mesh(shape=(1, 1), axes=("data", "model")):
-    """Tiny mesh over whatever devices exist (tests / examples)."""
+def make_host_mesh(shape=(1, 1), axes=("data", "model"), devices=None):
+    """Tiny mesh over host devices (tests / examples / campaign cells).
+
+    ``devices`` picks an explicit slice (the campaign executor places
+    sharded cells on disjoint slices of the forced host platform); the
+    default is the front of ``jax.devices()``.  Asking for more devices
+    than exist is a clear error here instead of a reshape failure deep in
+    Mesh construction.
+    """
     import jax
 
     n = int(np.prod(shape))
-    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    pool = list(devices) if devices is not None else jax.devices()
+    if len(pool) < n:
+        raise ValueError(
+            f"mesh shape {tuple(shape)} needs {n} devices but only "
+            f"{len(pool)} are available (force more with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N before jax init)")
+    arr = np.asarray(pool[:n]).reshape(shape)
     from jax.sharding import Mesh
-    return Mesh(devices, axes)
+    return Mesh(arr, axes)

@@ -124,6 +124,25 @@ def checked_psum(payload: dict, axis_name: Optional[str]):
     return summed, scale_sum, err_count
 
 
+def checked_psum_attributed(payload: dict, axis_name: Optional[str]):
+    """:func:`checked_psum` + shard-local receive-side attribution.
+
+    Returns (summed_q, mean_scale, err_count, local_errs).  ``err_count``
+    is the collective additivity verdict — checksum(psum(q)) vs
+    psum(checksum(q)) — which is what detects in-transit corruption (the
+    sender's recompute cannot see a flip that happens on the wire) and is
+    replicated across the axis.  ``local_errs`` is THIS shard's
+    :func:`verify_payload` count — a per-shard recompute of the payload it
+    is about to contribute, so a staged/manual collective can attribute a
+    mismatch to the shard that carried it instead of only knowing "the
+    reduction was wrong".  Campaign soaks fold the per-shard counts into
+    the artifact's ``shard_detections`` column.
+    """
+    local_errs = verify_payload(payload)
+    summed, scale_sum, errs = checked_psum(payload, axis_name)
+    return summed, scale_sum, errs, local_errs
+
+
 def decompress_grads(summed_q, scale_sum, n_replicas: int):
     """Mean gradient: (Σ_r q_r) * (Σ_r s_r / R) / R ≈ mean(g).
 

@@ -35,8 +35,19 @@ def shard_map(f, *, mesh, in_specs, out_specs, manual_axes=None):
                check_rep=False, auto=auto)
 
 
+def make_data_mesh(n_shards: int, devices=None):
+    """One-axis ``("data",)`` mesh of ``n_shards`` host devices — the fake
+    data-parallel axis campaign soaks :func:`shard_map` over so
+    ``checked_psum`` verifies a real collective.  ``devices`` selects an
+    explicit slice (cell placement); default is the front of the host
+    platform."""
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh((n_shards,), ("data",), devices=devices)
+
+
 __all__ = [
     "LogicalParam", "is_lp", "param", "values_of",
     "spec_for", "specs_of", "shardings_of", "like_shardings", "constrain",
     "Rules", "train_rules", "serve_rules", "batch_axes", "shard_map",
+    "make_data_mesh",
 ]

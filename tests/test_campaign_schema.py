@@ -1,0 +1,97 @@
+"""Golden schema for ``BENCH_campaign_*.json`` artifacts.
+
+The cross-PR differ matches cells by id and reads metric fields by NAME;
+a silent rename would make ``--diff`` read ``None``s and report "no
+regressions" forever.  These tests pin the CellMetrics field set to a
+literal golden list (a rename breaks HERE first), assert every committed
+baseline still carries the core fields, and assert freshly-written
+artifacts emit the full set — including the multi-device ``shards`` /
+``collective_verified`` columns and the soak/latency columns.
+"""
+import dataclasses
+import glob
+import os
+
+import pytest
+
+from repro.campaign import CellMetrics, compute_metrics, load_artifact
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                            "benchmarks", "baselines")
+BASELINES = sorted(glob.glob(os.path.join(BASELINE_DIR, "*.json")))
+
+#: fields every artifact cell must carry (the differ + CI assertions
+#: read these) — a rename in metrics.py must be caught here, not by
+#: --diff silently comparing missing keys
+CORE_FIELDS = {
+    "samples", "corrupted", "detected", "effective_detected", "escapes",
+    "clean_samples", "false_positives", "detection_rate",
+    "raw_detection_rate", "escape_rate", "fp_rate", "ci95",
+    "analytic_bound", "overhead", "protected_s", "unprotected_s",
+}
+
+#: multi-step soak columns (latency histograms + clean-twin divergence)
+SOAK_FIELDS = {
+    "steps", "detection_latency_hist", "mean_detection_latency",
+    "divergence_mean", "divergence_max", "loss_divergence_mean",
+}
+
+#: multi-device soak columns
+SHARD_FIELDS = {"shards", "collective_verified", "shard_detections"}
+
+#: the fields --diff actually compares — must stay inside CORE
+DIFF_READS = {"detection_rate", "fp_rate", "overhead"}
+
+
+def test_cellmetrics_field_set_is_exactly_the_golden_schema():
+    names = {f.name for f in dataclasses.fields(CellMetrics)}
+    assert names == CORE_FIELDS | SOAK_FIELDS | SHARD_FIELDS
+    assert DIFF_READS <= CORE_FIELDS
+
+
+def test_fresh_metrics_emit_the_full_schema():
+    m = compute_metrics(samples=4, detected=3, corrupted=3,
+                        detected_and_corrupted=3, clean_samples=2,
+                        false_positives=0)
+    assert set(m.to_dict()) == CORE_FIELDS | SOAK_FIELDS | SHARD_FIELDS
+
+
+def test_baselines_exist():
+    # the schema guarantees below are vacuous without committed artifacts
+    names = {os.path.basename(p) for p in BASELINES}
+    assert {"BENCH_campaign_quick.json",
+            "BENCH_campaign_training_quick.json",
+            "BENCH_campaign_multidevice_quick.json"} <= names
+
+
+@pytest.mark.parametrize("path", BASELINES,
+                         ids=[os.path.basename(p) for p in BASELINES])
+def test_committed_baselines_carry_core_schema(path):
+    art = load_artifact(path)
+    assert art["cells"], path
+    full = CORE_FIELDS | SOAK_FIELDS | SHARD_FIELDS
+    for c in art["cells"]:
+        keys = set(c["metrics"])
+        assert CORE_FIELDS <= keys, (c["cell_id"], CORE_FIELDS - keys)
+        assert keys <= full, (c["cell_id"], keys - full)
+        # must round-trip: --diff and CI assertions load through this
+        CellMetrics.from_dict(c["metrics"])
+
+
+def test_multidevice_baseline_carries_shard_and_soak_columns():
+    art = load_artifact(os.path.join(
+        BASELINE_DIR, "BENCH_campaign_multidevice_quick.json"))
+    sharded = [c for c in art["cells"]
+               if c["plan"]["data_shards"] > 1]
+    assert sharded, "no sharded cells in the multidevice baseline"
+    for c in sharded:
+        m = c["metrics"]
+        assert m["shards"] == c["plan"]["data_shards"], c["cell_id"]
+        assert m["collective_verified"] is True, c["cell_id"]
+        assert len(m["shard_detections"]) == m["shards"], c["cell_id"]
+        assert len(m["detection_latency_hist"]) == m["steps"], \
+            c["cell_id"]
+    # the grid also holds the single-device contrast cell: fallback path
+    single = [c for c in art["cells"] if c["plan"]["data_shards"] == 1]
+    assert single and all(
+        c["metrics"]["collective_verified"] is False for c in single)

@@ -228,6 +228,35 @@ def test_mod_checksum_additive_and_bitflip_sensitive(size, seed):
         != int(_mod_checksum(q8.astype(jnp.int32)))
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from((2, 4, 8)), st.sampled_from((5, 64, 300)),
+       st.integers(0, 2 ** 31 - 1))
+def test_mod_checksum_additive_across_shards(nshards, size, seed):
+    """The N-shard identity the sharded campaign cells stand on:
+    ``sum(checksum(p_i)) ≡ checksum(psum(p)) (mod 8191)`` for any shard
+    count, and a single-bit flip in ANY one shard's int8 payload breaks
+    it — |Δ| = 2^j ≤ 128 < 8191 shifts the summed residue while the
+    expected value (the mod-sum of per-shard checksums encoded before
+    the flip) stays put, so in-transit corruption is detected after the
+    collective even though no sender-side recompute could see it."""
+    keys = jax.random.split(_key(seed), nshards + 3)
+    qs = [jax.random.randint(keys[s], (size,), -127, 128, jnp.int32)
+          for s in range(nshards)]
+    total = sum(qs)
+    expected = sum(int(_mod_checksum(q)) for q in qs) % COMM_MOD
+    assert int(_mod_checksum(total)) == expected
+
+    k1, k2, k3 = keys[nshards:]
+    shard = int(jax.random.randint(k1, (), 0, nshards))
+    idx = int(jax.random.randint(k2, (), 0, size))
+    bit = int(jax.random.randint(k3, (), 0, 8))
+    q8_bad = flip_bit(qs[shard].astype(jnp.int8), jnp.asarray(idx),
+                      jnp.asarray(bit))
+    bad_total = total - qs[shard] + q8_bad.astype(jnp.int32)
+    assert int(_mod_checksum(bad_total)) != expected, \
+        (nshards, size, shard, idx, bit)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.sampled_from((3, 64, 512)), st.integers(0, 2 ** 31 - 1))
 def test_checked_psum_payload_flip_always_caught(size, seed):

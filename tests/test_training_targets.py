@@ -174,6 +174,61 @@ def test_checked_psum_two_device_pmap_subprocess():
     assert "OK" in r.stdout, r.stderr[-2000:]
 
 
+def test_checked_psum_four_device_shard_map_subprocess():
+    """The mesh path the multidevice campaign cells run on: 4 fake host
+    devices, shard_map over a ``data`` axis, per-shard payloads.  A
+    single-shard int8 payload flip must be detected AFTER the reduction
+    (the additivity check on the summed payload) — the three clean
+    shards' receive-side recomputes see nothing, yet every shard gets
+    the post-collective verdict — and a clean run reports zero
+    ``comm/errors`` on every shard."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding import make_data_mesh, shard_map
+        from repro.runtime.compression import (checked_psum_attributed,
+            compress_grads, init_compression)
+
+        mesh = make_data_mesh(4)
+        base = jnp.linspace(-1.0, 1.0, 32)
+
+        def run(x, corrupt):
+            g = {"w": x[0] * base}         # distinct payload per shard
+            p, _ = compress_grads(g, init_compression(g))
+            delta = jnp.where(
+                (jax.lax.axis_index("data") == 0) & corrupt, 5, 0)
+            p = dict(p, q={"w": p["q"]["w"].at[3].add(
+                delta.astype(jnp.int8))})
+            summed, scales, errs, local = checked_psum_attributed(
+                p, "data")
+            return errs[None], local[None]
+
+        f = jax.jit(shard_map(run, mesh=mesh,
+                              in_specs=(P("data"), P()),
+                              out_specs=(P("data"), P("data"))))
+        xs = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+
+        errs, local = f(xs, jnp.asarray(False))
+        assert [int(e) for e in errs] == [0, 0, 0, 0], errs   # clean: 0
+        assert [int(e) for e in local] == [0, 0, 0, 0], local
+
+        errs, local = f(xs, jnp.asarray(True))
+        # detected after the collective on EVERY shard...
+        assert all(int(e) == 1 for e in errs), errs
+        # ...while before it only the corrupted shard could know: the
+        # three clean shards' local payload verifies stay silent
+        assert [int(e) for e in local] == [1, 0, 0, 0], local
+        print("OK")
+    """)
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "OK" in r.stdout, r.stderr[-2000:]
+
+
 # ---------------------------------------------------------------------------
 # end-to-end cells (small samples — each build compiles a train scan)
 # ---------------------------------------------------------------------------
