@@ -1,0 +1,63 @@
+"""Rebuild a metrics dashboard from an exported fault-event stream.
+
+Every obs-instrumented run (``--obs-dir`` on the campaign CLI or
+``launch/serve.py``, or ``Observability.write`` in code) drops an
+``obs_events.jsonl`` — one validated JSON object per fault event.  That
+file is the durable record: ``repro.obs.replay`` folds it back into a
+fresh ``MetricsRegistry``, so Prometheus text (or the JSON export) can
+be regenerated for dashboards without re-running the experiment.
+
+    PYTHONPATH=src python examples/obs_dashboard.py [obs_events.jsonl]
+
+With no argument, runs a small live-traffic soak cell first to produce
+an event stream, then replays it.
+"""
+import sys
+import tempfile
+
+from repro.obs import EventBus, Observability, replay
+
+
+def make_events() -> str:
+    """Run one quick serving-soak cell with obs and export its events."""
+    from repro.serving.soak import quick_soak_spec, run_soak_cell, soak_plans
+
+    spec = quick_soak_spec(seed=0, n_requests=24)
+    plan = soak_plans(spec)[0]
+    print(f"running soak cell {plan.cell_id} "
+          f"(inject at steps {plan.inject_steps}) ...")
+    obs = Observability.create()
+    cell = run_soak_cell(plan, obs=obs)
+    m = cell["metrics"]
+    print(f"  detected {m['detected']}/{m['samples']} injections, "
+          f"fp_rate {m['fp_rate']:.3f}")
+    out_dir = tempfile.mkdtemp(prefix="repro_obs_")
+    return obs.write(out_dir)["events"]
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else make_events()
+
+    bus = EventBus.from_jsonl(path)
+    print(f"\n{len(bus)} events from {path}")
+    by_kind: dict = {}
+    for ev in bus:
+        by_kind[ev.kind] = by_kind.get(ev.kind, 0) + 1
+    print("  " + "  ".join(f"{k}={v}" for k, v in sorted(by_kind.items())))
+    print("  residual errors by op (FaultReport-comparable): "
+          f"{bus.counters()}")
+
+    # per-request attribution lives on the detection events
+    touched = sorted({rid for ev in bus if ev.kind == "detection"
+                      for rid in ev.request_ids})
+    if touched:
+        print(f"  requests resident during flagged steps: {touched}")
+
+    registry = replay(bus)
+    print("\n--- Prometheus exposition (replayed) " + "-" * 30)
+    print(registry.to_prometheus())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

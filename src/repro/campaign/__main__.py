@@ -12,6 +12,9 @@ Examples::
     python -m repro.campaign --grid serving_soak --quick   # live-traffic
     python -m repro.campaign --grid full --device-count 8 --out bench/
     python -m repro.campaign --diff OLD.json NEW.json # exit 1 on regression
+    python -m repro.campaign --trend                  # baseline history gate
+    python -m repro.campaign --trend BASE.json ... NEW.json
+    python -m repro.campaign --quick --obs-dir obs/   # event/trace export
 """
 from __future__ import annotations
 
@@ -55,6 +58,21 @@ def main(argv=None) -> int:
                          "wall-clock noise on shared runners)")
     ap.add_argument("--diff-out", default=None,
                     help="--diff: also write the markdown report here")
+    ap.add_argument("--trend", nargs="*", metavar="ARTIFACT", default=None,
+                    help="fold artifacts (oldest..newest) into a per-cell "
+                         "history table and gate the newest against the "
+                         "prior median; with no paths, uses the committed "
+                         "benchmarks/baselines/BENCH_campaign_*.json; "
+                         "exits 1 on trend regressions")
+    ap.add_argument("--trend-out", default=None,
+                    help="--trend: also write the markdown history here")
+    ap.add_argument("--latency-tol", type=float, default=None,
+                    help="--trend: allowed overhead rise vs the prior "
+                         "median (opt-in — wall-clock noise)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="export observability artifacts (fault-event "
+                         "JSONL, Chrome trace, Prometheus text) for the "
+                         "run into this directory")
     args = ap.parse_args(argv)
 
     if args.diff:
@@ -63,6 +81,12 @@ def main(argv=None) -> int:
                         fp_tol=args.fp_tol,
                         overhead_tol=args.overhead_tol,
                         out_path=args.diff_out)
+    if args.trend is not None:
+        from repro.campaign.trend import run_trend
+        return run_trend(args.trend, det_tol=args.det_tol,
+                         fp_tol=args.fp_tol,
+                         latency_tol=args.latency_tol,
+                         out_path=args.trend_out)
 
     grid = args.grid or ("quick" if args.quick else None)
     if grid is None:
@@ -96,18 +120,25 @@ def main(argv=None) -> int:
 
     # warns and falls back when the flag landed after jax initialized
     resolve_device_count(args.device_count or None)
+
+    obs = None
+    if args.obs_dir:
+        from repro.obs import Observability
+        obs = Observability.create()
+
     if grid == "serving_soak":
         # live-traffic soak: the serving engine, not the vmapped executor
         from repro.campaign.artifacts import markdown_table
         from repro.serving.soak import run_soak_campaign
         result = run_soak_campaign(quick=args.quick, seed=args.seed,
-                                   out_dir=args.out,
+                                   out_dir=args.out, obs=obs,
                                    verbose=lambda s: print(s, flush=True))
         print()
         print(markdown_table(result))
         print(f"artifact: "
               f"{os.path.join(args.out, 'BENCH_campaign_serving_soak')}"
               f".json")
+        _write_obs(obs, args.obs_dir)
         return 0
     if grid == "quick":
         specs = quick_specs(seed=args.seed, samples=args.samples or 600)
@@ -133,10 +164,11 @@ def main(argv=None) -> int:
     name = f"{grid}_quick" if grid in ("training", "multidevice") \
         and args.quick else grid
     result = run_campaign(name, specs, out_dir=args.out,
-                          chunk=args.chunk or CHUNK,
+                          chunk=args.chunk or CHUNK, obs=obs,
                           verbose=lambda s: print(s, flush=True))
 
-    from repro.campaign.artifacts import (latency_markdown, markdown_table,
+    from repro.campaign.artifacts import (breakdown_markdown,
+                                          latency_markdown, markdown_table,
                                           threshold_curve_markdown)
     print()
     print(markdown_table(result))
@@ -144,9 +176,21 @@ def main(argv=None) -> int:
         print(threshold_curve_markdown(result))
     if grid in ("training", "multidevice", "full"):
         print(latency_markdown(result))
+    bd = breakdown_markdown(result)
+    if bd:
+        print(bd)
     print(f"artifact: {os.path.join(args.out, 'BENCH_campaign_' + name)}"
           f".json")
+    _write_obs(obs, args.obs_dir)
     return 0
+
+
+def _write_obs(obs, obs_dir) -> None:
+    if obs is None:
+        return
+    paths = obs.write(obs_dir)
+    for kind, path in sorted(paths.items()):
+        print(f"obs {kind}: {path}")
 
 
 if __name__ == "__main__":

@@ -70,6 +70,9 @@ def write_artifacts(result: dict, out_dir: str = ".") -> tuple:
         lat = latency_markdown(result)
         if lat:
             f.write("\n" + lat)
+        bd = breakdown_markdown(result)
+        if bd:
+            f.write("\n" + bd)
     return json_path, md_path
 
 
@@ -181,6 +184,40 @@ def latency_markdown(result: dict) -> str:
     return "\n".join(lines)
 
 
+def breakdown_markdown(result: dict) -> str:
+    """Per-phase overhead accounting for cells that measured it.
+
+    One row per cell carrying ``overhead_breakdown``; phase columns are
+    the union over cells (targets expose different phase names —
+    quantize/encode/gemm/verify/...), each cell showing median wall ms
+    and the phase's share of that cell's phase total.  Empty string when
+    no cell measured a breakdown (the table only appears on
+    overhead-measuring grids)."""
+    rows = [(c["cell_id"], c["metrics"]["overhead_breakdown"])
+            for c in result["cells"]
+            if c["metrics"].get("overhead_breakdown")]
+    if not rows:
+        return ""
+    phases: List[str] = []
+    for _, bd in rows:
+        for name in bd:
+            if name not in phases:
+                phases.append(name)
+    lines = ["# Protection overhead breakdown (median ms / share)", "",
+             "| cell | " + " | ".join(phases) + " |",
+             "|---|" + "---|" * len(phases)]
+    for cid, bd in rows:
+        total = sum(bd.values()) or 1.0
+        cols = []
+        for name in phases:
+            v = bd.get(name)
+            cols.append("—" if v is None else
+                        f"{1e3 * v:.3f} ({100.0 * v / total:.0f}%)")
+        lines.append(f"| `{cid}` | " + " | ".join(cols) + " |")
+    lines.append("")
+    return "\n".join(lines)
+
+
 def threshold_curve(result: dict, target: str = "embedding_bag") -> dict:
     """Detection-vs-FP tradeoff per bit band from a rel_bound sweep.
 
@@ -215,6 +252,6 @@ def threshold_curve_markdown(result: dict,
 
 __all__ = ["campaign_to_dict", "write_artifacts", "load_artifact",
            "cell_metrics", "find_cells", "markdown_table",
-           "latency_markdown", "threshold_curve",
+           "latency_markdown", "breakdown_markdown", "threshold_curve",
            "threshold_curve_markdown", "environment_info",
            "SCHEMA_VERSION", "CellPlan"]

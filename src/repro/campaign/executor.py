@@ -230,8 +230,62 @@ def _median_time(fn: Callable) -> float:
     return median_time(jax.jit(fn))
 
 
+class _NullSpan:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+def _cell_span(obs, name: str, plan: CellPlan):
+    """A tracer span for one cell phase, or a no-op without obs."""
+    if obs is None:
+        return _NullSpan()
+    return obs.tracer.span(name, cat="campaign", cell=plan.cell_id)
+
+
+def _publish_cell(obs, plan: CellPlan, metrics: CellMetrics) -> None:
+    """Land one finished cell in the obs layer: outcome counters labeled
+    by cell id (the Prometheus face of the artifact's CellMetrics) and a
+    summary ``cell`` event carrying detector value vs analytic bound."""
+    if obs is None:
+        return
+    from repro.obs import FaultEvent
+    reg = obs.registry
+    labels = {"cell": plan.cell_id}
+    reg.counter("repro_injections_total",
+                "injected faults per cell").inc(metrics.samples, **labels)
+    reg.counter("repro_detections_total",
+                "detected (or masked) faults per cell").inc(
+                    metrics.effective_detected, **labels)
+    reg.counter("repro_escapes_total",
+                "undetected corruptions (SDC) per cell").inc(
+                    metrics.escapes, **labels)
+    reg.counter("repro_false_positives_total",
+                "clean-run flags per cell").inc(
+                    metrics.false_positives, **labels)
+    obs.bus.emit(FaultEvent(
+        op=plan.target, step=0, source="campaign.executor", kind="cell",
+        t_s=obs.tracer.now_s(), errors=metrics.detected,
+        checks=metrics.samples, cell_id=plan.cell_id,
+        bit_band=plan.bit_band,
+        detector_value=metrics.detection_rate,
+        bound=metrics.analytic_bound,
+        attrs={"escapes": metrics.escapes,
+               "false_positives": metrics.false_positives,
+               "fp_rate": metrics.fp_rate}))
+    if metrics.false_positives:
+        obs.bus.emit(FaultEvent(
+            op=plan.target, step=0, source="campaign.executor",
+            kind="false_positive", t_s=obs.tracer.now_s(),
+            errors=metrics.false_positives,
+            checks=metrics.clean_samples, cell_id=plan.cell_id,
+            bit_band=plan.bit_band))
+
+
 def run_cell(plan: CellPlan, *, chunk: int = CHUNK,
-             slot: int = 0) -> CellResult:
+             slot: int = 0, obs=None) -> CellResult:
     target = get_target(plan.target)
     t0 = time.perf_counter()
     key = jax.random.key(plan.seed)
@@ -239,22 +293,24 @@ def run_cell(plan: CellPlan, *, chunk: int = CHUNK,
 
     mesh, eff_shards = (_cell_mesh(plan, slot) if target.shardable
                         else (None, 1))
-    if target.shardable:
-        state = target.build(plan, k_build, mesh=mesh)
-    else:
-        state = target.build(plan, k_build)
+    with _cell_span(obs, "build", plan):
+        if target.shardable:
+            state = target.build(plan, k_build, mesh=mesh)
+        else:
+            state = target.build(plan, k_build)
 
     soak_extras: dict = {}
     if target.soak is not None:
         trial_keys = jax.random.split(k_trial, plan.samples)
-        if mesh is not None:
-            agg = _sharded_soak(
-                lambda k: target.soak(state, plan, k),
-                trial_keys, plan.steps, eff_shards)
-        else:
-            agg = _chunked_soak(
-                lambda k: target.soak(state, plan, k),
-                trial_keys, chunk, plan.steps)
+        with _cell_span(obs, "trials", plan):
+            if mesh is not None:
+                agg = _sharded_soak(
+                    lambda k: target.soak(state, plan, k),
+                    trial_keys, plan.steps, eff_shards)
+            else:
+                agg = _chunked_soak(
+                    lambda k: target.soak(state, plan, k),
+                    trial_keys, chunk, plan.steps)
         detected = agg["detected"]
         corrupted = agg["corrupted"]
         det_and_cor = agg["det_and_cor"]
@@ -275,25 +331,36 @@ def run_cell(plan: CellPlan, *, chunk: int = CHUNK,
             "shard_detections": agg.get("shard_detections"),
         }
     else:
-        trial_counts = _chunked_counts(
-            lambda k: target.trial(state, plan, k),
-            jax.random.split(k_trial, plan.samples), chunk, 2)
+        with _cell_span(obs, "trials", plan):
+            trial_counts = _chunked_counts(
+                lambda k: target.trial(state, plan, k),
+                jax.random.split(k_trial, plan.samples), chunk, 2)
         detected, corrupted, det_and_cor = (int(c) for c in trial_counts)
 
     false_positives = 0
     if plan.clean_samples > 0:
-        clean_counts = _chunked_counts(
-            lambda k: target.clean(state, plan, k),
-            jax.random.split(k_clean, plan.clean_samples), chunk, 1)
+        with _cell_span(obs, "clean", plan):
+            clean_counts = _chunked_counts(
+                lambda k: target.clean(state, plan, k),
+                jax.random.split(k_clean, plan.clean_samples), chunk, 1)
         false_positives = int(clean_counts[0])
 
     protected_s = unprotected_s = None
+    overhead_breakdown = None
     if plan.measure_overhead and target.overhead is not None:
         pair = target.overhead(state, plan)
         if pair is not None:
             prot, unprot = pair
-            protected_s = _median_time(prot)
-            unprotected_s = _median_time(unprot)
+            with _cell_span(obs, "overhead", plan):
+                protected_s = _median_time(prot)
+                unprotected_s = _median_time(unprot)
+    if plan.measure_overhead and target.overhead_phases is not None:
+        from repro.campaign.timing import phase_breakdown
+        phases = target.overhead_phases(state, plan)
+        if phases:
+            overhead_breakdown = phase_breakdown(
+                phases, tracer=obs.tracer if obs is not None else None,
+                cell=plan.cell_id)
 
     metrics = compute_metrics(
         samples=plan.samples, detected=detected, corrupted=corrupted,
@@ -302,14 +369,16 @@ def run_cell(plan: CellPlan, *, chunk: int = CHUNK,
         false_positives=false_positives,
         analytic_bound=target.analytic_bound(plan),
         protected_s=protected_s, unprotected_s=unprotected_s,
+        overhead_breakdown=overhead_breakdown,
         **soak_extras)
+    _publish_cell(obs, plan, metrics)
     return CellResult(plan=plan, metrics=metrics,
                       seconds=time.perf_counter() - t0)
 
 
 def run_specs(specs: Sequence[CampaignSpec], *, chunk: int = CHUNK,
-              verbose: Optional[Callable[[str], None]] = None
-              ) -> Tuple[List[CellResult], List[dict]]:
+              verbose: Optional[Callable[[str], None]] = None,
+              obs=None) -> Tuple[List[CellResult], List[dict]]:
     """Expand and execute a list of specs; returns (results, skipped)."""
     results: List[CellResult] = []
     skipped: List[dict] = []
@@ -322,7 +391,7 @@ def run_specs(specs: Sequence[CampaignSpec], *, chunk: int = CHUNK,
             slot = n_sharded
             if plan.data_shards > 1:
                 n_sharded += 1
-            r = run_cell(plan, chunk=chunk, slot=slot)
+            r = run_cell(plan, chunk=chunk, slot=slot, obs=obs)
             results.append(r)
             if verbose:
                 m = r.metrics
@@ -335,12 +404,16 @@ def run_specs(specs: Sequence[CampaignSpec], *, chunk: int = CHUNK,
 
 def run_campaign(name: str, specs: Sequence[CampaignSpec], *,
                  out_dir: Optional[str] = None, chunk: int = CHUNK,
-                 verbose: Optional[Callable[[str], None]] = None) -> dict:
-    """Execute specs, assemble the artifact dict, optionally write it."""
+                 verbose: Optional[Callable[[str], None]] = None,
+                 obs=None) -> dict:
+    """Execute specs, assemble the artifact dict, optionally write it.
+    ``obs`` (a :class:`repro.obs.Observability`) records per-phase spans,
+    cell summary events, and outcome counters alongside the artifact."""
     from repro.campaign.artifacts import campaign_to_dict, write_artifacts
 
     t0 = time.perf_counter()
-    results, skipped = run_specs(specs, chunk=chunk, verbose=verbose)
+    results, skipped = run_specs(specs, chunk=chunk, verbose=verbose,
+                                 obs=obs)
     result = campaign_to_dict(
         name, list(specs),
         [{"plan": r.plan, "metrics": r.metrics, "seconds": r.seconds}

@@ -211,13 +211,29 @@ def multidevice_specs(seed: int = 0, quick: bool = False,
 
 
 def soak_specs(seed: int = 0) -> List[CampaignSpec]:
-    return [CampaignSpec(
+    """Full-model decode sweep plus a multi-step decode soak.
+
+    ``decode_step`` now runs the ``soak`` protocol, so the second spec
+    holds one upset across ``steps`` consecutive decode steps —
+    transient (strike once, watch the KV-cache residue) vs persistent
+    (flipped weight left in place) — and the per-step detection-latency
+    histogram lands in the artifact's soak columns.  The single-step
+    spec keeps ``steps=1`` and therefore the baseline cell ids/seeds."""
+    single = CampaignSpec(
         name="soak",
         targets=("decode_step",),
         fault_models=("bitflip", "random_value"),
         bit_bands=("all", "significant", "low"),
         samples=16, clean_samples=8, seed=seed,
-        measure_overhead=True)]
+        measure_overhead=True)
+    multi = CampaignSpec(
+        name="decode-soak",
+        targets=("decode_step",),
+        fault_models=("bitflip",),
+        bit_bands=("significant",),
+        samples=8, clean_samples=2, seed=seed,
+        steps=4, persistent=(False, True))
+    return [single, multi]
 
 
 def full_specs(seed: int = 0) -> List[CampaignSpec]:

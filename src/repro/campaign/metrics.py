@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 def wilson_interval(k: int, n: int, z: float = 1.96) -> Tuple[float, float]:
@@ -50,6 +50,10 @@ class CellMetrics:
     overhead: Optional[float] = None
     protected_s: Optional[float] = None
     unprotected_s: Optional[float] = None
+    #: per-phase median wall seconds (quantize/encode/gemm/verify ... —
+    #: phase names are target-specific); None when the cell didn't
+    #: measure overhead or the target has no phase thunks
+    overhead_breakdown: Optional[Dict[str, float]] = None
     # ------- multi-step soak columns (None for single-shot cells) -------
     #: steps per trial the cell actually ran
     steps: Optional[int] = None
@@ -100,6 +104,7 @@ def compute_metrics(*, samples: int, detected: int, corrupted: int,
                     analytic_bound: Optional[float] = None,
                     protected_s: Optional[float] = None,
                     unprotected_s: Optional[float] = None,
+                    overhead_breakdown: Optional[Dict[str, float]] = None,
                     steps: Optional[int] = None,
                     detection_latency_hist: Optional[List[int]] = None,
                     divergence_mean: Optional[float] = None,
@@ -138,6 +143,7 @@ def compute_metrics(*, samples: int, detected: int, corrupted: int,
         overhead=overhead,
         protected_s=protected_s,
         unprotected_s=unprotected_s,
+        overhead_breakdown=overhead_breakdown,
         steps=steps,
         detection_latency_hist=detection_latency_hist,
         mean_detection_latency=mean_latency,

@@ -67,6 +67,11 @@ class InjectableTarget:
     analytic_bound: Callable[[CellPlan], Optional[float]] = lambda p: None
     overhead: Optional[Callable[[Any, CellPlan],
                                 Tuple[Callable, Callable]]] = None
+    #: optional named phase thunks ({"encode": fn, "gemm": fn, ...}) the
+    #: executor times individually into the artifact's
+    #: ``overhead_breakdown`` column (measure_overhead cells only)
+    overhead_phases: Optional[Callable[[Any, CellPlan],
+                                       dict]] = None
     #: False for targets whose trial injects into a single element —
     #: expand() skips flips_per_trial > 1 plans for them
     multi_flip: bool = True
@@ -173,11 +178,30 @@ def _gemm_overhead(state, plan: CellPlan):
     return protected, unprotected
 
 
+def _gemm_phases(state, plan: CellPlan) -> dict:
+    """encode / gemm / verify — §IV's amortization story as numbers: the
+    encode phase is the amortized one-time cost, gemm the baseline, and
+    verify the per-call detection surcharge."""
+    a, b = state["a"], state["b"]
+    b_packed = _gemm_repack(state, b)
+    n = b.shape[1]
+    c_full = jax.lax.dot_general(
+        a, b_packed, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    c, check_col = c_full[:, :n], c_full[:, n]
+    return {
+        "encode": lambda: QGEMM.encode(b),
+        "gemm": lambda: QGEMM.unprotected(b_packed, a),
+        "verify": lambda: ag.verify_rows(c, check_col),
+    }
+
+
 register_target(InjectableTarget(
     name="gemm_packed",
     build=_gemm_build, trial=_gemm_b_trial, clean=_gemm_clean,
     default_shapes=((20, 256, 512),), shape_arity=3,
-    analytic_bound=_gemm_bound, overhead=_gemm_overhead))
+    analytic_bound=_gemm_bound, overhead=_gemm_overhead,
+    overhead_phases=_gemm_phases))
 
 
 _UNFUSED = ResolvedRule(scheme="unfused")
@@ -208,7 +232,8 @@ register_target(InjectableTarget(
     name="gemm_unfused",
     build=_gemm_build, trial=_gemm_unfused_trial, clean=_gemm_clean,
     default_shapes=((20, 256, 512),), shape_arity=3,
-    analytic_bound=_gemm_bound, overhead=_gemm_unfused_overhead))
+    analytic_bound=_gemm_bound, overhead=_gemm_unfused_overhead,
+    overhead_phases=_gemm_phases))
 
 
 def _gemm_c_build(plan: CellPlan, key: jax.Array):
@@ -316,11 +341,25 @@ def _eb_overhead(state, plan: CellPlan):
     return protected, unprotected
 
 
+def _eb_phases(state, plan: CellPlan) -> dict:
+    rows, dim, bags, pool = plan.shape
+    idx = jax.random.randint(jax.random.key(0), (bags, pool), 0, rows,
+                             jnp.int32)
+    enc, rule = _eb_enc(state), _eb_rule(plan)
+    return {
+        "encode": lambda: EMBEDDING_BAG.encode(
+            (state["table"], state["alphas"], state["betas"])),
+        "lookup": lambda: EMBEDDING_BAG.unprotected(enc, idx),
+        "lookup_verify": lambda: EMBEDDING_BAG(enc, idx, rule=rule)[0],
+    }
+
+
 register_target(InjectableTarget(
     name="embedding_bag",
     build=_eb_build, trial=_eb_trial, clean=_eb_clean,
     default_shapes=((10_000, 128, 10, 100),), shape_arity=4,
-    overhead=_eb_overhead, multi_flip=False, thresholded=True))
+    overhead=_eb_overhead, overhead_phases=_eb_phases,
+    multi_flip=False, thresholded=True))
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +373,7 @@ register_target(InjectableTarget(
 def _kv_build(plan: CellPlan, key: jax.Array):
     b, heads, s, dh = plan.shape
     x = jax.random.normal(key, (b, heads, s, dh), jnp.float32)
-    return {"kv": KV_CACHE.encode(x)}
+    return {"kv": KV_CACHE.encode(x), "x": x}
 
 
 def _kv_trial(state, plan: CellPlan, key: jax.Array):
@@ -378,6 +417,15 @@ def _kv_overhead(state, plan: CellPlan):
     return protected, unprotected
 
 
+def _kv_phases(state, plan: CellPlan) -> dict:
+    q = state["kv"]
+    return {
+        "quantize": lambda: KV_CACHE.encode(state["x"]),
+        "verify": lambda: kv.verify_kv(q),
+        "dequantize": lambda: KV_CACHE.dequantize(q),
+    }
+
+
 register_target(InjectableTarget(
     name="kv_cache",
     build=_kv_build, trial=_kv_trial, clean=_kv_clean,
@@ -385,16 +433,22 @@ register_target(InjectableTarget(
     dtypes=("int8", "float32"),
     bands=("all", "low", "significant", "sign", "exponent", "mantissa",
            "high_mantissa"),
-    analytic_bound=_kv_bound, overhead=_kv_overhead))
+    analytic_bound=_kv_bound, overhead=_kv_overhead,
+    overhead_phases=_kv_phases))
 
 
 # ---------------------------------------------------------------------------
-# Full-model decode-step soak (launch.steps + a reduced registry arch).
-# One trial = flip bits in the largest int8 weight leaf, run one decode
-# step, read the step's ABFT counters.  ``corrupted`` is the OBSERVABLE
-# output change (next token differs from the clean baseline), so the cell's
-# categories line up with the fault-injection literature: detected /
-# masked / SDC escape.
+# Full-model decode soak (launch.steps + a reduced registry arch).
+# One trial = flip bits in a weight leaf, scan ``plan.steps`` consecutive
+# decode steps (fault struck at step 0; re-struck every step when
+# ``plan.persistent``), read each step's ABFT counters.  ``corrupted`` is
+# the OBSERVABLE output change (any generated token differs from the
+# clean twin sequence), so the cell's categories line up with the
+# fault-injection literature: detected / masked / SDC escape — and the
+# soak protocol gives persistent weight faults the same per-step
+# detection-latency histograms the training targets report.  At steps=1
+# this is bit-identical to the legacy single-shot trial (same key, same
+# flip, one decode), so the committed quick baseline stays valid.
 # ---------------------------------------------------------------------------
 
 DECODE_ARCH = "llama3.2-1b"
@@ -428,7 +482,17 @@ def _decode_build(plan: CellPlan, key: jax.Array):
     pos = jnp.full((batch,), prompt_len + cfg.meta_tokens, jnp.int32)
 
     decode = make_decode_step(model, ctx)
-    clean_tok, _, _ = decode(params, cache, tok, pos)
+
+    # the clean twin: plan.steps greedy decode steps from the prefill
+    # state — the soak's per-step SDC ground truth (deterministic decode)
+    def _clean_scan(carry, _):
+        c_cache, c_tok, c_pos = carry
+        t2, c2, _ = decode(params, c_cache, c_tok, c_pos)
+        return (c2, t2, c_pos + 1), t2
+
+    (_, clean_toks) = jax.lax.scan(
+        _clean_scan, (cache, tok, pos), None, length=plan.steps)
+    clean_toks = jax.block_until_ready(clean_toks)      # [steps, batch]
 
     # victim: addressed by the plan's leaf-path pattern in the protect
     # vocabulary (``attn.wq``, ``mlp.down``, ``embed.table``, ...); the
@@ -439,7 +503,7 @@ def _decode_build(plan: CellPlan, key: jax.Array):
     state = {"leaves": leaves, "treedef": treedef,
              "victim_idx": victim_idx, "victim_path": victim_path,
              "cache": cache, "tok": tok,
-             "pos": pos, "decode": decode, "clean_tok": clean_tok}
+             "pos": pos, "decode": decode, "clean_toks": clean_toks}
     if plan.measure_overhead:
         ctx_off = Ctx(quant=True, plan=unprotected_plan(),
                       compute_dtype=jnp.bfloat16)
@@ -448,18 +512,36 @@ def _decode_build(plan: CellPlan, key: jax.Array):
     return state
 
 
-def _decode_trial(state, plan: CellPlan, key: jax.Array):
-    leaves = list(state["leaves"])
-    victim = leaves[state["victim_idx"]]
-    leaves[state["victim_idx"]] = apply_fault(key, victim, plan,
-                                              path=state["victim_path"])
-    params = jax.tree_util.tree_unflatten(state["treedef"], leaves)
-    tok, _, metrics = state["decode"](params, state["cache"],
-                                      state["tok"], state["pos"])
-    errs = metrics.get("abft/qgemm_errors", 0) \
-        + metrics.get("abft/embedding_bag_errors", 0) \
-        + metrics.get("abft/kv_cache_errors", 0)
-    return jnp.asarray(errs) > 0, jnp.any(tok != state["clean_tok"])
+def _decode_soak(state, plan: CellPlan, key: jax.Array):
+    victim = state["leaves"][state["victim_idx"]]
+    # the flip is computed ONCE from the trial key (exactly the legacy
+    # single-shot fault) and gated per step with a where-mask, so the
+    # scan body stays shape-static under vmap
+    bad = apply_fault(key, victim, plan, path=state["victim_path"])
+    strike = jnp.ones((plan.steps,), bool) if plan.persistent \
+        else (jnp.arange(plan.steps) == 0)
+
+    def body(carry, do_strike):
+        cache, tok, pos = carry
+        leaves = list(state["leaves"])
+        leaves[state["victim_idx"]] = jnp.where(do_strike, bad, victim)
+        params = jax.tree_util.tree_unflatten(state["treedef"], leaves)
+        tok2, cache2, metrics = state["decode"](params, cache, tok, pos)
+        errs = metrics.get("abft/qgemm_errors", 0) \
+            + metrics.get("abft/embedding_bag_errors", 0) \
+            + metrics.get("abft/kv_cache_errors", 0)
+        return (cache2, tok2, pos + 1), (jnp.asarray(errs) > 0, tok2)
+
+    _, (det_steps, toks) = jax.lax.scan(
+        body, (state["cache"], state["tok"], state["pos"]), strike)
+    # toks: [steps, batch] vs the clean twin sequence
+    mismatch = toks != state["clean_toks"]
+    return {
+        "detected_steps": det_steps,
+        "corrupted": jnp.any(mismatch),
+        "divergence": jnp.mean(mismatch.astype(jnp.float32)),
+        "loss_divergence": jnp.zeros((), jnp.float32),
+    }
 
 
 def _decode_clean(state, plan: CellPlan, key: jax.Array):
@@ -491,7 +573,7 @@ def _decode_overhead(state, plan: CellPlan):
 
 register_target(InjectableTarget(
     name="decode_step",
-    build=_decode_build, trial=_decode_trial, clean=_decode_clean,
+    build=_decode_build, soak=_decode_soak, clean=_decode_clean,
     default_shapes=((2, 16),), shape_arity=2,
     overhead=_decode_overhead, victim_selectable=True))
 

@@ -1,9 +1,16 @@
-"""Shared wall-clock timing helper (campaign overhead cells and the
-benchmarks/ overhead tables use the same methodology)."""
+"""Shared wall-clock timing helpers (campaign overhead cells and the
+benchmarks/ overhead tables use the same methodology).
+
+:func:`median_time` is the protected/unprotected pair's clock;
+:func:`phase_breakdown` times a dict of named phase thunks (quantize /
+encode / gemm / verify ...) with the same methodology, optionally
+landing each phase as an accounting span on a
+:class:`repro.obs.Tracer` — the source of the artifact's
+``overhead_breakdown`` column."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, Mapping
 
 import jax
 import numpy as np
@@ -28,3 +35,26 @@ def median_time(fn: Callable, *args, warmup: int = 2, iters: int = 10,
         if len(times) >= 100:
             break
     return float(np.median(times))
+
+
+def phase_breakdown(phases: Mapping[str, Callable], *,
+                    tracer=None, warmup: int = 2, iters: int = 5,
+                    min_time_s: float = 0.05,
+                    **span_args) -> Dict[str, float]:
+    """Median wall seconds per named phase thunk, in mapping order.
+
+    Each thunk is jitted and timed like :func:`median_time` (shorter
+    defaults — the breakdown is a per-cell column, not the headline
+    overhead number).  With a ``tracer``, each phase also lands as an
+    accounting span (cat ``"overhead"``, duration = the median) so the
+    breakdown shows up in the exported trace next to the cell's
+    build/trials spans."""
+    out: Dict[str, float] = {}
+    for name, fn in phases.items():
+        t0 = tracer.now_s() if tracer is not None else 0.0
+        out[name] = median_time(jax.jit(fn), warmup=warmup, iters=iters,
+                                min_time_s=min_time_s)
+        if tracer is not None:
+            tracer.add_span(f"phase:{name}", cat="overhead", start_s=t0,
+                            dur_s=out[name], **span_args)
+    return out

@@ -90,6 +90,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="write the full telemetry timeline here")
+    ap.add_argument("--obs-dir", default=None,
+                    help="export observability artifacts (fault-event "
+                         "JSONL, Chrome trace, Prometheus text) here")
     ap.add_argument("--device-count", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -184,10 +187,15 @@ def main(argv=None) -> int:
                                  persistent=args.inject_persistent,
                                  seed=args.seed)]
 
+    obs = None
+    if args.obs_dir:
+        from repro.obs import Observability
+        obs = Observability.create()
+
     log.info("serving %d %s requests (%s arrivals @ %g rps) on %d slots, "
              "%d lane(s)...", args.requests, cfg.family, args.arrival,
              args.rate, args.slots, len(engine.lanes))
-    telemetry = engine.run(stream, inject=inject)
+    telemetry = engine.run(stream, inject=inject, obs=obs)
     s = telemetry.summary()
 
     log.info("")
@@ -214,7 +222,16 @@ def main(argv=None) -> int:
         else:
             log.info(">>> injected %s at step %d: NOT detected "
                      "(masked or escaped)", inj["victim"], inj["step"])
+        if inj.get("attributed_rids"):
+            log.info("    touched request(s): %s",
+                     " ".join(str(r) for r in inj["attributed_rids"]))
+    if f.get("suspect_requests"):
+        log.info("suspect requests (resident during a flagged step): %d",
+                 f["suspect_requests"])
 
+    if args.obs_dir:
+        for kind, path in sorted(obs.write(args.obs_dir).items()):
+            log.info("obs %s: %s", kind, path)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as fp:

@@ -1,0 +1,100 @@
+"""``repro.obs`` — unified observability for the fault-detection stack.
+
+Three host-side primitives shared by campaign, training, and serving:
+
+* :class:`EventBus` + :class:`FaultEvent` (``events.py``) — typed fault
+  events with JSONL export and schema validation;
+* :class:`Tracer` (``trace.py``) — timed spans with Chrome/Perfetto
+  trace export;
+* :class:`MetricsRegistry` (``metrics.py``) — counters/gauges/histograms
+  with Prometheus-text and JSON exporters.
+
+:class:`Observability` bundles the three; pass one instance through
+``run_campaign(obs=...)`` / ``ServingEngine.run(obs=...)`` /
+``TrainLoop.run(obs=...)`` and call :meth:`Observability.write` to drop
+``events.jsonl`` / ``trace.json`` / ``metrics.prom`` / ``metrics.json``
+into a directory.  ``FaultReport`` stays the on-device monoid — obs is
+where its counters land after ``device_get``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterable, Optional, Union
+
+from repro.obs.events import (EVENT_KINDS, EVENT_SCHEMA,
+                              EVENT_SCHEMA_VERSION, EventBus, FaultEvent,
+                              events_from_metrics, validate_event)
+from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                               MetricsRegistry, default_registry)
+from repro.obs.trace import Span, Tracer
+
+
+@dataclasses.dataclass
+class Observability:
+    """One run's event bus, tracer, and metrics registry."""
+    bus: EventBus
+    tracer: Tracer
+    registry: MetricsRegistry
+
+    @classmethod
+    def create(cls) -> "Observability":
+        return cls(bus=EventBus(), tracer=Tracer(),
+                   registry=MetricsRegistry())
+
+    def write(self, out_dir: str, prefix: str = "obs") -> Dict[str, str]:
+        """Export everything; returns {artifact kind: path}."""
+        os.makedirs(out_dir, exist_ok=True)
+        join = lambda ext: os.path.join(out_dir, f"{prefix}_{ext}")  # noqa: E731
+        return {
+            "events": self.bus.to_jsonl(join("events.jsonl")),
+            "trace": self.tracer.write(join("trace.json")),
+            "prometheus": self.registry.write_prometheus(
+                join("metrics.prom")),
+            "metrics_json": self.registry.write_json(
+                join("metrics.json")),
+        }
+
+
+def replay(events: Union[str, EventBus, Iterable[FaultEvent]],
+           registry: Optional[MetricsRegistry] = None) -> MetricsRegistry:
+    """Rebuild a metrics registry from an exported event stream.
+
+    ``events`` may be a JSONL path, an :class:`EventBus`, or an iterable
+    of :class:`FaultEvent` — what ``examples/obs_dashboard.py`` uses to
+    turn a soak's ``obs_events.jsonl`` back into Prometheus text."""
+    if isinstance(events, str):
+        events = EventBus.from_jsonl(events)
+    registry = registry if registry is not None else MetricsRegistry()
+    det = registry.counter(
+        "repro_detections_total",
+        "detected faults (detection events) by op kind and source")
+    fp = registry.counter(
+        "repro_false_positives_total",
+        "clean-run flags (false_positive events) by op kind and source")
+    inj = registry.counter(
+        "repro_injections_total", "injected faults by source")
+    errs = registry.counter(
+        "repro_abft_errors_total", "residual ABFT errors by op kind")
+    checks = registry.counter(
+        "repro_abft_checks_total", "ABFT checks by op kind")
+    for ev in events:
+        labels = {"op": ev.op, "source": ev.source}
+        if ev.cell_id:
+            labels["cell"] = ev.cell_id
+        if ev.kind == "detection":
+            det.inc(1, **labels)
+            errs.inc(ev.errors, op=ev.op)
+            checks.inc(ev.checks, op=ev.op)
+        elif ev.kind == "false_positive":
+            fp.inc(1, **labels)
+        elif ev.kind == "injection":
+            inj.inc(1, source=ev.source)
+    return registry
+
+
+__all__ = ["Observability", "replay", "EventBus", "FaultEvent",
+           "events_from_metrics", "validate_event", "EVENT_SCHEMA",
+           "EVENT_SCHEMA_VERSION", "EVENT_KINDS", "Tracer", "Span",
+           "MetricsRegistry", "Counter", "Gauge", "Histogram",
+           "default_registry", "DEFAULT_BUCKETS"]

@@ -89,6 +89,43 @@ def protected_call(op: str, encoded, *inputs, ctx=None,
     return out, op_report(op, check.err_count)
 
 
+def observe_metrics(metrics, *, source: str, step: int = 0,
+                    t_s: float = 0.0, obs=None, cell_id=None,
+                    request_ids=(), bit_band=None, shard=None) -> int:
+    """Land one step's device-side FaultReport counters host-side.
+
+    ``protected_call`` runs traced (jit/scan/vmap), so per-call host
+    emission is impossible there — this is the single host-side choke
+    point the consumers (serving engine, train loop, campaign executor)
+    call with a step's ``device_get``'d metrics dict.  Increments the
+    ``repro_abft_{checks,errors}_total`` counters and emits one
+    ``detection`` :class:`~repro.obs.FaultEvent` per flagged op kind.
+    Returns the step's total residual errors; a ``None`` obs is a cheap
+    no-op path that still returns the error count.
+    """
+    from repro.obs.events import op_counts
+
+    counts = op_counts(metrics)
+    errors = sum(errs for _, _, errs in counts)
+    if obs is None:
+        return errors
+    from repro.obs import events_from_metrics
+    for kind, checks, errs in counts:
+        if checks or errs:
+            obs.registry.counter(
+                "repro_abft_checks_total",
+                "ABFT checks by op kind").inc(checks, op=kind,
+                                              source=source)
+            obs.registry.counter(
+                "repro_abft_errors_total",
+                "residual ABFT errors by op kind").inc(errs, op=kind,
+                                                       source=source)
+    obs.bus.extend(events_from_metrics(
+        metrics, step=step, source=source, t_s=t_s, cell_id=cell_id,
+        request_ids=tuple(request_ids), bit_band=bit_band, shard=shard))
+    return errors
+
+
 def kv_rule(ctx, name: str = "attn") -> ResolvedRule:
     """Convenience for attention layers: the kv_cache rule, additionally
     gated on the int8 serving path (``ctx.quant``) — a bf16 training cache

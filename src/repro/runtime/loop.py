@@ -51,12 +51,14 @@ class TrainLoop:
     """Drives (state, batch) -> (state, metrics) with fault handling."""
 
     def __init__(self, step_fn: Callable, dataset, *, cfg: LoopConfig,
-                 shardings=None, metrics_hook: Optional[Callable] = None):
+                 shardings=None, metrics_hook: Optional[Callable] = None,
+                 obs=None):
         self.step_fn = step_fn
         self.dataset = dataset
         self.cfg = cfg
         self.shardings = shardings
         self.metrics_hook = metrics_hook
+        self.obs = obs
         self.ckpt = CheckpointManager(cfg.ckpt_dir,
                                       keep_last=cfg.keep_last,
                                       save_every=cfg.save_every)
@@ -88,6 +90,26 @@ class TrainLoop:
         from repro.data import shard_batch
         return shard_batch(batch, self.shardings)
 
+    def _observe_step(self, step: int, metrics, dur_s: float) -> None:
+        """One trained step lands in the obs layer (span, step counters,
+        per-op ABFT counters, detection events) — the train-side twin of
+        the serving engine's per-step emission."""
+        if self.obs is None:
+            return
+        from repro.protect.runtime import observe_metrics
+        now = self.obs.tracer.now_s()
+        self.obs.tracer.add_span("train_step", cat="runtime",
+                                 start_s=now - dur_s, dur_s=dur_s,
+                                 step=step)
+        self.obs.registry.counter(
+            "repro_steps_total", "executed steps by kind and source"
+        ).inc(1, kind="train", source="runtime.loop")
+        self.obs.registry.histogram(
+            "repro_step_duration_ms", "step wall time (ms)"
+        ).observe(1e3 * dur_s, kind="train")
+        observe_metrics(jax.device_get(metrics), source="runtime.loop",
+                        step=step, t_s=now, obs=self.obs)
+
     # ------------------------------------------------------------------
     def run(self, state, n_steps: int, *, start_step: Optional[int] = None,
             resume: bool = True):
@@ -109,9 +131,14 @@ class TrainLoop:
             batch = self._put_batch(self.dataset.batch_at(step))
             self.straggler.step_start()
             pre_state = state
+            t_step = time.perf_counter()
             state, metrics = self.step_fn(state, batch)
 
             errs = self._errors_in(metrics)
+            # observe the PRE-policy metrics: a recompute that clears the
+            # flag must not erase the detection from the event stream
+            self._observe_step(step, metrics,
+                               time.perf_counter() - t_step)
             if errs:
                 self.stats["faulty_steps"] += 1
                 if self.cfg.fault_policy == "recompute":

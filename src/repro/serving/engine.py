@@ -150,6 +150,8 @@ class ServingEngine:
         #: fault's clean copy survives a later fault on the same leaf
         self._injection_state: list = []
         self._warm = False
+        #: Observability bundle for the CURRENT run (set by run(obs=...))
+        self._obs = None
 
         self.is_dlrm = cfg.family == "dlrm"
         if self.is_dlrm:
@@ -328,6 +330,12 @@ class ServingEngine:
         telemetry.add_injection(InjectionRecord(
             step=self.global_step, victim=path, clock_s=self.clock_s,
             persistent=inj.persistent))
+        if self._obs is not None:
+            from repro.obs import FaultEvent
+            self._obs.bus.emit(FaultEvent(
+                op=path, step=self.global_step, source="serving.engine",
+                kind="injection", t_s=self.clock_s,
+                attrs={"persistent": inj.persistent, "seed": inj.seed}))
 
     def _restore_injection(self, *, include_persistent: bool = False):
         """Undo applied injections in reverse application order —
@@ -367,7 +375,8 @@ class ServingEngine:
 
     def _step_event(self, kind: str, lane: _Lane, dt: float, metrics,
                     telemetry: Telemetry, injected: bool = False,
-                    errors_override: Optional[int] = None):
+                    errors_override: Optional[int] = None,
+                    slot_rids: tuple = ()):
         counters, errors = (_counters_of(metrics) if metrics is not None
                             else ({}, 0))
         if errors_override is not None:
@@ -377,17 +386,37 @@ class ServingEngine:
             lane=lane.key, duration_s=dt,
             occupancy=lane.batcher.occupancy(),
             queue_depth=self.queue.depth(), counters=counters,
-            errors=errors, injected=injected))
+            errors=errors, injected=injected,
+            slot_rids=tuple(slot_rids)))
+        if self._obs is not None:
+            self._obs.tracer.add_span(
+                kind, cat="serving", start_s=self.clock_s - dt, dur_s=dt,
+                lane=lane.key, step=self.global_step,
+                occupancy=lane.batcher.occupancy())
+            self._obs.registry.counter(
+                "repro_steps_total", "engine steps by kind").inc(
+                    1, kind=kind, source="serving.engine")
+            self._obs.registry.histogram(
+                "repro_step_duration_ms",
+                "engine step wall duration").observe(
+                    dt * 1e3, kind=kind)
+            if metrics is not None:
+                from repro.protect.runtime import observe_metrics
+                observe_metrics(metrics, source="serving.engine",
+                                step=self.global_step, t_s=self.clock_s,
+                                obs=self._obs,
+                                request_ids=tuple(slot_rids))
         return errors
 
     def _abort_lane(self, lane: _Lane, telemetry: Telemetry, dt: float,
-                    injected: bool):
+                    injected: bool, slot_rids: tuple = ()):
         """Policy ``abort`` fired: fail the lane's in-flight requests,
         reset the lane, keep serving."""
         for slot in lane.reset():
             self._record_slot(slot, telemetry, aborted=True)
         self._step_event("decode", lane, dt, None, telemetry,
-                         injected=injected, errors_override=1)
+                         injected=injected, errors_override=1,
+                         slot_rids=slot_rids)
 
     def _do_prefill(self, lane: _Lane, slot: Slot, telemetry: Telemetry,
                     injected: bool):
@@ -404,7 +433,8 @@ class ServingEngine:
             lane.batcher.retire(slot.index)
             self._record_slot(slot, telemetry, aborted=True)
             self._step_event("prefill", lane, 0.0, None, telemetry,
-                             injected=injected, errors_override=1)
+                             injected=injected, errors_override=1,
+                             slot_rids=(req.rid,))
             return
         if lane.cache is None:
             import jax.numpy as jnp
@@ -419,12 +449,14 @@ class ServingEngine:
         slot.first_token_s = self.clock_s
         slot.token_ids = [int(tok[0])]
         self._step_event("prefill", lane, dt, metrics, telemetry,
-                         injected=injected)
+                         injected=injected, slot_rids=(req.rid,))
 
     def _do_decode(self, lane: _Lane, telemetry: Telemetry,
                    injected: bool):
         from repro.core.policy import is_fault_abort
 
+        resident = tuple(s.request.rid
+                         for s in lane.batcher.active_slots())
         try:
             (tok, cache, metrics), dt = self._timed(
                 lane.decode_fn, self.params, lane.cache, lane.tokens,
@@ -433,7 +465,8 @@ class ServingEngine:
             if not is_fault_abort(e):
                 raise
             self.clock_s += 1e-6
-            self._abort_lane(lane, telemetry, 0.0, injected)
+            self._abort_lane(lane, telemetry, 0.0, injected,
+                             slot_rids=resident)
             return
         lane.cache = cache
         lane.tokens = tok
@@ -444,7 +477,7 @@ class ServingEngine:
             slot.pos += 1
             slot.token_ids.append(int(tok_host[slot.index]))
         self._step_event("decode", lane, dt, metrics, telemetry,
-                         injected=injected)
+                         injected=injected, slot_rids=resident)
         for slot in lane.batcher.retire_finished():
             self._record_slot(slot, telemetry)
 
@@ -471,7 +504,8 @@ class ServingEngine:
         self._record_slot(slot_like, telemetry, aborted=aborted)
         self._step_event("dlrm", lane, dt, metrics, telemetry,
                          injected=injected,
-                         errors_override=1 if aborted else None)
+                         errors_override=1 if aborted else None,
+                         slot_rids=(req.rid,))
 
     def reset_state(self) -> None:
         """Fresh run state (clock, queue, lanes) with compiled steps kept —
@@ -491,8 +525,14 @@ class ServingEngine:
             inject: Optional[Sequence[FaultInjection]] = None,
             telemetry: Optional[Telemetry] = None,
             warmup: bool = True,
-            max_iterations: int = 1_000_000) -> Telemetry:
+            max_iterations: int = 1_000_000,
+            obs=None) -> Telemetry:
+        """Serve ``requests`` to completion.  ``obs`` (an
+        :class:`repro.obs.Observability`) additionally lands every step's
+        FaultReport counters, spans, and per-request-attributed detection
+        events host-side for the duration of this run."""
         telemetry = telemetry if telemetry is not None else Telemetry()
+        self._obs = obs
         pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
         for r in pending:
             if r.tenant not in self._lane_of:
@@ -504,6 +544,14 @@ class ServingEngine:
         if warmup:
             self.warmup(pending[0] if pending else None)
 
+        try:
+            return self._run_loop(pending, injections, inj_i, telemetry,
+                                  max_iterations)
+        finally:
+            self._obs = None
+
+    def _run_loop(self, pending, injections, inj_i, telemetry,
+                  max_iterations) -> Telemetry:
         i = 0
         it = 0
         while True:

@@ -126,13 +126,63 @@ def _degradation(clean: dict, faulty: dict) -> dict:
     return out
 
 
+def _publish_soak_cell(obs, plan: SoakCellPlan, metrics: "SoakMetrics",
+                       injected: List[dict]) -> None:
+    """Land the cell's outcome in the obs registry + event bus.
+
+    Counters mirror the artifact's SoakMetrics exactly (detections =
+    flagged injections, false positives = clean-pass flags) so the
+    Prometheus text and the JSON artifact can be cross-checked; the
+    per-step/per-op detection events were already emitted live by the
+    engine during the faulty pass."""
+    if obs is None:
+        return
+    from repro.obs import FaultEvent
+
+    reg = obs.registry
+    cell = plan.cell_id
+    reg.counter("repro_injections_total",
+                "injected faults per campaign cell"
+                ).inc(metrics["samples"], cell=cell)
+    reg.counter("repro_detections_total",
+                "online-detected injected faults per campaign cell"
+                ).inc(metrics["detected"], cell=cell)
+    reg.counter("repro_escapes_total",
+                "corrupted-and-undetected faults per campaign cell"
+                ).inc(metrics["escapes"], cell=cell)
+    reg.counter("repro_false_positives_total",
+                "clean-pass flags per campaign cell"
+                ).inc(metrics["false_positives"], cell=cell)
+    for inj in injected:
+        obs.bus.emit(FaultEvent(
+            op=inj.get("victim") or "auto", kind="injection",
+            step=inj["step"], source="serving.soak",
+            cell_id=plan.cell_id, errors=int(bool(inj["detected"])),
+            checks=1, request_ids=tuple(inj.get("attributed_rids", ())),
+            attrs={"detected": inj["detected"],
+                   "latency_steps": inj["latency_steps"],
+                   "persistent": plan.persistent}))
+    obs.bus.emit(FaultEvent(
+        op=plan.target, kind="cell", step=0, source="serving.soak",
+        cell_id=plan.cell_id, errors=metrics["detected"],
+        checks=metrics["samples"],
+        detector_value=metrics["detection_rate"],
+        attrs={"escapes": metrics["escapes"],
+               "false_positives": metrics["false_positives"],
+               "fp_rate": metrics["fp_rate"]}))
+
+
 def run_soak_cell(plan: SoakCellPlan, *, engine=None,
-                  keep_telemetry: bool = False) -> dict:
+                  keep_telemetry: bool = False, obs=None) -> dict:
     """One cell: clean pass + faulty pass over the same stream.
 
     Returns ``{"plan", "metrics", "seconds"[, "telemetry"]}``; pass a
     prebuilt ``engine`` (same arch/tenants) to amortize compiles across
-    cells."""
+    cells.  With ``obs``, the FAULTY pass runs instrumented (per-step
+    detection events with resident request ids, spans, step counters) and
+    the cell outcome lands as campaign-level counters; the clean pass
+    stays uninstrumented so its flags count only as the cell's
+    false-positive column, not as detection events."""
     from repro.configs import reduce_cfg
     from repro.configs.registry import get_arch
     from repro.serving.engine import (FaultInjection, ServingEngine,
@@ -163,7 +213,7 @@ def run_soak_cell(plan: SoakCellPlan, *, engine=None,
                                  persistent=plan.persistent,
                                  seed=plan.seed + 17 * i)
                   for i, s in enumerate(plan.inject_steps)]
-    faulty = engine.run(stream, inject=injections)
+    faulty = engine.run(stream, inject=injections, obs=obs)
     engine.reset_state()          # restores any persistent fault
     faulty_summary = faulty.summary()
 
@@ -203,6 +253,7 @@ def run_soak_cell(plan: SoakCellPlan, *, engine=None,
         "slo_clean": slo_clean,
         "slo_degradation": _degradation(slo_clean, slo_faulty),
     })
+    _publish_soak_cell(obs, plan, metrics, injected)
     out = {"plan": plan, "metrics": metrics,
            "seconds": time.perf_counter() - t0}
     if keep_telemetry:
@@ -250,7 +301,7 @@ def full_soak_spec(seed: int = 0) -> SoakSpec:
 def run_soak_campaign(spec: Optional[SoakSpec] = None, *,
                       quick: bool = True, seed: int = 0,
                       out_dir: Optional[str] = None,
-                      verbose=None) -> dict:
+                      verbose=None, obs=None) -> dict:
     """Run every cell of the spec; returns (and optionally writes) the
     ``BENCH_campaign_serving_soak`` artifact dict."""
     from repro.campaign.artifacts import campaign_to_dict, write_artifacts
@@ -268,7 +319,7 @@ def run_soak_campaign(spec: Optional[SoakSpec] = None, *,
                            seed=spec.seed)
     cells = []
     for plan in soak_plans(spec):
-        cell = run_soak_cell(plan, engine=engine)
+        cell = run_soak_cell(plan, engine=engine, obs=obs)
         cells.append(cell)
         if verbose:
             m = cell["metrics"]

@@ -17,19 +17,36 @@ and the serve CLI write.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import math
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 PCTS = (50.0, 95.0, 99.0)
 
+#: bump when to_dict() gains/renames fields — the serve CLI --json output
+#: and the soak artifacts carry this so downstream parsers can dispatch
+TELEMETRY_SCHEMA_VERSION = 1
+
 
 def percentiles_ms(xs_s: List[float]) -> Dict[str, float]:
-    """{"p50": ..., "p95": ..., "p99": ...} in milliseconds."""
-    if not xs_s:
-        return {f"p{int(p)}": float("nan") for p in PCTS}
-    arr = np.asarray(xs_s, np.float64) * 1e3
-    return {f"p{int(p)}": float(np.percentile(arr, p)) for p in PCTS}
+    """{"p50": ..., "p95": ..., "p99": ..., "n": ...} in milliseconds.
+
+    NaN-free by construction: non-finite samples are dropped, an empty
+    stream returns explicit zeros (with ``n = 0`` so "no samples" stays
+    distinguishable from "zero latency"), and a single sample is every
+    percentile of itself — no reliance on np/list degenerate behavior."""
+    xs = [float(x) for x in xs_s
+          if x is not None and math.isfinite(float(x))]
+    if not xs:
+        return {**{f"p{int(p)}": 0.0 for p in PCTS}, "n": 0}
+    if len(xs) == 1:
+        v = xs[0] * 1e3
+        return {**{f"p{int(p)}": v for p in PCTS}, "n": 1}
+    arr = np.asarray(xs, np.float64) * 1e3
+    out = {f"p{int(p)}": float(np.percentile(arr, p)) for p in PCTS}
+    out["n"] = len(xs)
+    return out
 
 
 @dataclasses.dataclass
@@ -47,6 +64,11 @@ class RequestRecord:
     aborted: bool = False
     rejected: bool = False               # shed at the admission queue
     tokens: Optional[List[int]] = None   # emitted ids (soak ground truth)
+    #: flagged steps this request was resident in a slot for (attribution
+    #: runs in finalize — a fault blames the requests it touched, not
+    #: just the step)
+    detections: int = 0
+    suspect: bool = False                # detections > 0
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -83,6 +105,10 @@ class StepEvent:
     counters: Dict[str, int]             # abft/<op>_{checks,errors}, ...
     errors: int                          # total residual errors this step
     injected: bool = False
+    #: request ids resident in the step's batcher slots when it ran —
+    #: the attribution join key (prefill: the admitted request; decode:
+    #: every active slot; abort: the drained slots)
+    slot_rids: Tuple[int, ...] = ()
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -98,9 +124,13 @@ class InjectionRecord:
     detect_step: Optional[int] = None
     latency_steps: Optional[int] = None
     latency_s: Optional[float] = None
+    #: requests resident in slots at the detecting step
+    attributed_rids: Tuple[int, ...] = ()
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["attributed_rids"] = list(self.attributed_rids)
+        return d
 
 
 class Telemetry:
@@ -136,7 +166,27 @@ class Telemetry:
                 inj.detect_step = ev.step
                 inj.latency_steps = ev.step - inj.step
                 inj.latency_s = ev.t_s - inj.clock_s
+                inj.attributed_rids = tuple(ev.slot_rids)
                 break
+        self.attribute_detections()
+
+    def attribute_detections(self) -> None:
+        """Blame flagged steps on the requests resident in their slots:
+        every request whose rid appears in a flagged step's ``slot_rids``
+        gains a detection count and the ``suspect`` bit.  Idempotent —
+        recomputed from the timeline on every call."""
+        by_rid = {r.rid: r for r in self.requests}
+        for rec in by_rid.values():
+            rec.detections = 0
+            rec.suspect = False
+        for ev in self.steps:
+            if ev.errors <= 0:
+                continue
+            for rid in ev.slot_rids:
+                rec = by_rid.get(rid)
+                if rec is not None:
+                    rec.detections += 1
+                    rec.suspect = True
 
     def fault_counters(self) -> Dict[str, int]:
         total: Dict[str, int] = {}
@@ -158,6 +208,8 @@ class Telemetry:
             "aborted": sum(1 for r in served if r.aborted),
             "rejected": sum(1 for r in recs if r.rejected),
             "tokens_out": sum(r.tokens_out for r in recs),
+            "suspect": sum(1 for r in served if r.suspect),
+            "detections": sum(r.detections for r in served),
             "ttft_ms": percentiles_ms(ttft),
             "per_token_ms": percentiles_ms(ptl),
             "e2e_ms": percentiles_ms([r.e2e_s for r in served]),
@@ -189,11 +241,14 @@ class Telemetry:
                 "injections": [i.to_dict() for i in self.injections],
                 "injections_detected": sum(
                     1 for i in self.injections if i.detected),
+                "suspect_requests": sum(
+                    1 for r in self.requests if r.suspect),
             },
         }
 
     def to_dict(self) -> dict:
         return {
+            "schema_version": TELEMETRY_SCHEMA_VERSION,
             "summary": self.summary(),
             "requests": [r.to_dict() for r in self.requests],
             "steps": [ev.to_dict() for ev in self.steps],
@@ -201,4 +256,4 @@ class Telemetry:
 
 
 __all__ = ["Telemetry", "RequestRecord", "StepEvent", "InjectionRecord",
-           "percentiles_ms", "PCTS"]
+           "percentiles_ms", "PCTS", "TELEMETRY_SCHEMA_VERSION"]

@@ -230,6 +230,94 @@ def test_eb_cell_significant_band():
     assert m.fp_rate <= 0.1
 
 
+def test_decode_soak_multi_step_histogram_and_persistence():
+    """decode_step on the soak protocol: a steps-deep cell carries the
+    per-step detection-latency histogram, and the persistent variant is
+    its own cell id."""
+    spec = CampaignSpec(name="t", targets=("decode_step",),
+                        fault_models=("bitflip",),
+                        bit_bands=("significant",),
+                        samples=4, clean_samples=2, seed=0,
+                        steps=3, persistent=(False, True))
+    plans, _ = expand(spec)
+    assert len(plans) == 2
+    ids = {p.cell_id for p in plans}
+    assert any(i.endswith("/steps3") for i in ids)
+    assert any(i.endswith("/steps3/persistent") for i in ids)
+    for plan in plans:
+        m = run_cell(plan).metrics
+        assert m.steps == 3
+        assert len(m.detection_latency_hist) == 3
+        assert sum(m.detection_latency_hist) <= m.samples
+        assert m.detected >= 1          # significant-band weight flip
+        if m.detection_latency_hist[0] == m.detected:
+            assert m.mean_detection_latency == 0.0
+
+
+def test_decode_soak_steps1_keeps_baseline_cell_id():
+    """The quick grid's decode cell must keep its pre-migration id (no
+    /stepsN suffix) so committed baselines and seeds stay comparable."""
+    spec = CampaignSpec(name="t", targets=("decode_step",),
+                        fault_models=("bitflip",),
+                        bit_bands=("significant",), samples=2,
+                        clean_samples=0, seed=0)
+    (plan,), _ = expand(spec)
+    assert plan.cell_id == "decode_step/bitflip/significant/2x16/int8"
+    m = run_cell(plan).metrics
+    assert m.steps == 1 and len(m.detection_latency_hist) == 1
+
+
+def test_overhead_breakdown_phases_in_artifact(tmp_path):
+    from repro.campaign.artifacts import breakdown_markdown
+
+    spec = CampaignSpec(name="t-bd", targets=("gemm_packed",),
+                        shapes=((4, 32, 64),), samples=16, seed=1,
+                        measure_overhead=True)
+    result = run_campaign("bd", [spec], out_dir=str(tmp_path))
+    (cell,) = result["cells"]
+    bd = cell["metrics"]["overhead_breakdown"]
+    assert set(bd) == {"encode", "gemm", "verify"}
+    assert all(v > 0 for v in bd.values())
+    md = breakdown_markdown(result)
+    assert "| cell |" in md and "encode" in md and "%" in md
+    assert md in (tmp_path / "BENCH_campaign_bd.md").read_text()
+    # cells that don't measure overhead carry no breakdown
+    spec2 = CampaignSpec(name="t-nobd", targets=("gemm_packed",),
+                         shapes=((4, 32, 64),), samples=8, seed=1)
+    r2 = run_campaign("nobd", [spec2], out_dir=None)
+    assert r2["cells"][0]["metrics"]["overhead_breakdown"] is None
+    assert breakdown_markdown(r2) == ""
+
+
+def test_run_campaign_with_obs_publishes_cells(tmp_path):
+    from repro.obs import Observability
+
+    obs = Observability.create()
+    spec = CampaignSpec(name="t-obs", targets=("kv_cache",),
+                        shapes=((1, 1, 32, 32),), dtypes=("int8",),
+                        samples=16, seed=5)
+    result = run_campaign("obsrun", [spec], out_dir=None, obs=obs)
+    (cell,) = result["cells"]
+    m = cell["metrics"]
+    reg = obs.registry
+    assert reg.counter("repro_injections_total").value(
+        cell=cell["cell_id"]) == m["samples"]
+    assert reg.counter("repro_detections_total").value(
+        cell=cell["cell_id"]) == m["effective_detected"]
+    assert reg.counter("repro_false_positives_total").value(
+        cell=cell["cell_id"]) == m["false_positives"]
+    cell_evs = [e for e in obs.bus if e.kind == "cell"]
+    assert [e.cell_id for e in cell_evs] == [cell["cell_id"]]
+    assert cell_evs[0].detector_value == pytest.approx(
+        m["detection_rate"])
+    assert cell_evs[0].bound == m["analytic_bound"]
+    # phase spans recorded under the campaign category
+    names = {s.name for s in obs.tracer.spans if s.cat == "campaign"}
+    assert {"build", "trials", "clean"} <= names
+    paths = obs.write(str(tmp_path))
+    assert all(__import__("os").path.exists(p) for p in paths.values())
+
+
 def test_multi_flip_plan_runs():
     spec = CampaignSpec(name="t", targets=("gemm_packed",),
                         shapes=((4, 32, 64),), samples=32,

@@ -30,6 +30,12 @@ CORE_FIELDS = {
     "analytic_bound", "overhead", "protected_s", "unprotected_s",
 }
 
+#: per-phase overhead accounting (optional; quantize/encode/gemm/verify
+#: medians from targets exposing ``overhead_phases``) — committed
+#: baselines predate it, so it lives outside CORE: baselines assert
+#: ``CORE <= keys <= full`` and need no regeneration
+BREAKDOWN_FIELDS = {"overhead_breakdown"}
+
 #: multi-step soak columns (latency histograms + clean-twin divergence)
 SOAK_FIELDS = {
     "steps", "detection_latency_hist", "mean_detection_latency",
@@ -45,7 +51,7 @@ DIFF_READS = {"detection_rate", "fp_rate", "overhead"}
 
 def test_cellmetrics_field_set_is_exactly_the_golden_schema():
     names = {f.name for f in dataclasses.fields(CellMetrics)}
-    assert names == CORE_FIELDS | SOAK_FIELDS | SHARD_FIELDS
+    assert names == CORE_FIELDS | BREAKDOWN_FIELDS | SOAK_FIELDS | SHARD_FIELDS
     assert DIFF_READS <= CORE_FIELDS
 
 
@@ -53,7 +59,7 @@ def test_fresh_metrics_emit_the_full_schema():
     m = compute_metrics(samples=4, detected=3, corrupted=3,
                         detected_and_corrupted=3, clean_samples=2,
                         false_positives=0)
-    assert set(m.to_dict()) == CORE_FIELDS | SOAK_FIELDS | SHARD_FIELDS
+    assert set(m.to_dict()) == CORE_FIELDS | BREAKDOWN_FIELDS | SOAK_FIELDS | SHARD_FIELDS
 
 
 def test_baselines_exist():
@@ -69,7 +75,7 @@ def test_baselines_exist():
 def test_committed_baselines_carry_core_schema(path):
     art = load_artifact(path)
     assert art["cells"], path
-    full = CORE_FIELDS | SOAK_FIELDS | SHARD_FIELDS
+    full = CORE_FIELDS | BREAKDOWN_FIELDS | SOAK_FIELDS | SHARD_FIELDS
     for c in art["cells"]:
         keys = set(c["metrics"])
         assert CORE_FIELDS <= keys, (c["cell_id"], CORE_FIELDS - keys)

@@ -1,0 +1,122 @@
+"""--trend: the longitudinal detection-quality gate over artifact series."""
+import copy
+import json
+import os
+
+import pytest
+
+from repro.campaign.artifacts import load_artifact
+from repro.campaign.trend import (default_baseline_paths, format_trend,
+                                  load_history, run_trend, trend_gate)
+
+BASELINE = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "benchmarks", "baselines",
+                        "BENCH_campaign_quick.json")
+
+
+def _write(tmp_path, name, art):
+    p = tmp_path / name
+    p.write_text(json.dumps(art))
+    return str(p)
+
+
+@pytest.fixture()
+def series(tmp_path):
+    """Three-version history of the committed quick baseline."""
+    art = load_artifact(BASELINE)
+    return [_write(tmp_path, f"BENCH_campaign_quick_v{i}.json",
+                   copy.deepcopy(art)) for i in range(3)], art
+
+
+def test_pristine_series_exits_zero(series, tmp_path):
+    paths, _ = series
+    out = tmp_path / "hist.md"
+    assert run_trend(paths, out_path=str(out), emit=lambda s: None) == 0
+    md = out.read_text()
+    assert "No trend regressions" in md
+    assert "v0 det/fp" in md and "v2 det/fp" in md
+
+
+def test_detection_drop_beyond_tol_gates_nonzero(series, tmp_path):
+    paths, art = series
+    bad = copy.deepcopy(art)
+    cid = bad["cells"][0]["cell_id"]
+    bad["cells"][0]["metrics"]["detection_rate"] -= 0.10
+    paths[-1] = _write(tmp_path, "BENCH_campaign_quick_bad.json", bad)
+    out = []
+    assert run_trend(paths, emit=out.append) == 1
+    assert "Trend regressions" in out[0] and cid in out[0]
+    # the same drop inside tolerance passes
+    ok = copy.deepcopy(art)
+    ok["cells"][0]["metrics"]["detection_rate"] -= 0.01
+    paths[-1] = _write(tmp_path, "BENCH_campaign_quick_ok.json", ok)
+    assert run_trend(paths, emit=lambda s: None) == 0
+
+
+def test_fp_rise_and_optin_latency_gate(series, tmp_path):
+    paths, art = series
+    bad = copy.deepcopy(art)
+    bad["cells"][1]["metrics"]["fp_rate"] += 0.05
+    paths[-1] = _write(tmp_path, "BENCH_campaign_quick_fp.json", bad)
+    assert run_trend(paths, emit=lambda s: None) == 1
+
+    slow = copy.deepcopy(art)
+    over = [c for c in slow["cells"]
+            if c["metrics"]["overhead"] is not None]
+    assert over, "quick baseline has no overhead cells"
+    over[0]["metrics"]["overhead"] += 0.50
+    paths[-1] = _write(tmp_path, "BENCH_campaign_quick_slow.json", slow)
+    # latency gate is opt-in: off by default, fires when enabled
+    assert run_trend(paths, emit=lambda s: None) == 0
+    assert run_trend(paths, latency_tol=0.10, emit=lambda s: None) == 1
+
+
+def test_median_reference_absorbs_one_noisy_entry(series, tmp_path):
+    """One bad HISTORICAL entry must not gate a healthy newest entry —
+    the point of median-of-priors over pairwise diff."""
+    paths, art = series
+    noisy = copy.deepcopy(art)
+    noisy["cells"][0]["metrics"]["detection_rate"] -= 0.30
+    paths[1] = _write(tmp_path, "BENCH_campaign_quick_noisy.json", noisy)
+    assert run_trend(paths, emit=lambda s: None) == 0
+
+
+def test_vanished_cell_is_a_coverage_regression(series, tmp_path):
+    paths, art = series
+    pruned = copy.deepcopy(art)
+    gone = pruned["cells"].pop(0)
+    paths[-1] = _write(tmp_path, "BENCH_campaign_quick_pruned.json",
+                       pruned)
+    out = []
+    assert run_trend(paths, emit=out.append) == 1
+    assert "coverage" in out[0] and gone["cell_id"] in out[0]
+
+
+def test_single_entry_cells_listed_not_gated(tmp_path):
+    history = load_history([BASELINE])
+    report = trend_gate(history)
+    assert report["gated_cells"] == 0
+    assert report["ungated_cells"] > 0
+    assert report["regressions"] == []
+    md = format_trend(history, report)
+    assert "single" in md
+
+
+def test_default_paths_resolve_committed_baselines():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    names = [os.path.basename(p) for p in default_baseline_paths(root)]
+    assert "BENCH_campaign_quick.json" in names
+
+
+def test_cli_trend_flag(series, tmp_path, capsys):
+    from repro.campaign.__main__ import main
+
+    paths, art = series
+    assert main(["--trend", *paths]) == 0
+    assert "Detection-quality trend" in capsys.readouterr().out
+    bad = copy.deepcopy(art)
+    bad["cells"][0]["metrics"]["detection_rate"] -= 0.10
+    paths[-1] = _write(tmp_path, "BENCH_campaign_quick_cli.json", bad)
+    out = tmp_path / "cli_hist.md"
+    assert main(["--trend", *paths, "--trend-out", str(out)]) == 1
+    assert "Trend regressions" in out.read_text()

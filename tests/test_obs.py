@@ -1,0 +1,300 @@
+"""repro.obs: event schema + JSONL round-trip, the EventBus monoid
+against real scan/vmap FaultReports, the Prometheus/Chrome exporters,
+and the telemetry percentile fixes that ride along."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.policy import empty_report, merge_reports, op_report
+from repro.obs import (EVENT_SCHEMA_VERSION, EventBus, FaultEvent,
+                       MetricsRegistry, Observability, Tracer,
+                       events_from_metrics, replay, validate_event)
+
+
+# ------------------------------ events --------------------------------------
+
+def test_event_dict_round_trip_and_validates():
+    ev = FaultEvent(op="qgemm", step=7, source="serving.engine",
+                    kind="detection", errors=2, checks=5,
+                    cell_id="c", shard=1, bit_band="significant",
+                    detector_value=0.9, bound=0.99,
+                    request_ids=(3, 4), attrs={"lane": 0})
+    d = ev.to_dict()
+    assert d["schema"] == EVENT_SCHEMA_VERSION
+    assert d["request_ids"] == [3, 4]
+    validate_event(json.loads(json.dumps(d)))          # JSON-clean
+    assert FaultEvent.from_dict(d) == ev
+
+
+@pytest.mark.parametrize("mutate, msg", [
+    (lambda d: d.pop("op"), "missing key 'op'"),
+    (lambda d: d.update(kind="explosion"), "not in"),
+    (lambda d: d.update(step="seven"), "has type str"),
+    (lambda d: d.update(request_ids=[1, "x"]), "list of ints"),
+    (lambda d: d.update(schema=EVENT_SCHEMA_VERSION + 1), "newer"),
+])
+def test_validate_event_rejects(mutate, msg):
+    d = FaultEvent(op="qgemm", step=0, source="t").to_dict()
+    mutate(d)
+    with pytest.raises(ValueError, match=msg):
+        validate_event(d)
+
+
+def test_jsonl_round_trip(tmp_path):
+    bus = EventBus()
+    bus.emit(FaultEvent(op="qgemm", step=1, source="a", errors=1))
+    bus.emit(FaultEvent(op="kv_cache", step=2, source="b",
+                        kind="injection", request_ids=(9,)))
+    path = bus.to_jsonl(str(tmp_path / "ev.jsonl"))
+    back = EventBus.from_jsonl(path)
+    assert list(back) == list(bus)
+
+
+def test_from_jsonl_rejects_bad_record(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    d = FaultEvent(op="qgemm", step=0, source="t").to_dict()
+    d["kind"] = "nope"
+    p.write_text(json.dumps(d) + "\n")
+    with pytest.raises(ValueError, match="kind"):
+        EventBus.from_jsonl(str(p))
+
+
+# -------------------- the bus mirrors the FaultReport monoid -----------------
+
+def _land(report, bus, *, step, source="test"):
+    """device_get a FaultReport's metrics and land them as events."""
+    metrics = {k: int(v) for k, v in report.as_metrics().items()}
+    bus.extend(events_from_metrics(metrics, step=step, source=source))
+
+
+def test_bus_counters_match_scanned_fault_report():
+    """The soak shape from test_report_soak: scan accumulates on device,
+    then each step's REPORT lands host-side — per-op bus counters equal
+    the final merged report exactly (legacy aliases not double-counted)."""
+    per_step = jnp.asarray([0, 2, 0, 1, 3, 0], jnp.int32)
+
+    def body(carry, errs):
+        rep = op_report("qgemm", errs)
+        return merge_reports(carry, rep), rep
+
+    final, step_reports = jax.lax.scan(body, empty_report(), per_step)
+    bus = EventBus()
+    for t in range(per_step.shape[0]):
+        step_rep = jax.tree.map(lambda x: x[t], step_reports)
+        _land(step_rep, bus, step=t)
+    assert bus.counters() == {"qgemm": int(final.errors["qgemm"])}
+    # one event per FLAGGED step, stamped with that step
+    assert [e.step for e in bus] == [1, 3, 4]
+
+
+def test_merged_bus_counters_are_elementwise_sum():
+    """EventBus.merged is the host-side merge_reports: associative, the
+    empty bus is the identity, counters sum elementwise — including the
+    vmapped-batch totals from the executor's chunk accounting."""
+    errs = jnp.asarray([1, 0, 4, 2], jnp.int32)
+    batched = jax.vmap(lambda e: op_report("embedding_bag", e))(errs)
+    chunk_total = jax.tree.map(lambda x: jnp.sum(x, axis=0), batched)
+
+    a, b = EventBus(), EventBus()
+    _land(chunk_total, a, step=0)
+    b.emit(FaultEvent(op="qgemm", step=1, source="t", errors=2))
+    b.emit(FaultEvent(op="embedding_bag", step=2, source="t", errors=1,
+                      kind="false_positive"))
+
+    merged = EventBus.merged(a, b)
+    assert merged.counters() == {"embedding_bag": int(errs.sum()) + 1,
+                                 "qgemm": 2}
+    assert len(EventBus.merged(a, EventBus())) == len(a)
+    assoc_l = EventBus.merged(EventBus.merged(a, b), EventBus())
+    assoc_r = EventBus.merged(a, EventBus.merged(b, EventBus()))
+    assert list(assoc_l) == list(assoc_r)
+    # non-detection kinds never count
+    a.emit(FaultEvent(op="qgemm", step=9, source="t", kind="injection",
+                      errors=5))
+    assert a.counters().get("qgemm", 0) == 0
+
+
+def test_events_from_metrics_ignores_legacy_aliases_and_ceils():
+    evs = events_from_metrics(
+        {"abft/qgemm_errors": 0.25, "abft/qgemm_checks": 1,
+         "abft/gemm_errors": 3,                # legacy alias: ignored
+         "kv_cache_errors": 2, "kv_cache_checks": 4},  # bare spelling
+        step=5, source="runtime.loop", request_ids=(1,))
+    by_op = {e.op: e for e in evs}
+    assert set(by_op) == {"qgemm", "kv_cache"}
+    assert by_op["qgemm"].errors == 1          # 0.25 ceils, not truncates
+    assert by_op["kv_cache"].checks == 4
+    assert by_op["kv_cache"].request_ids == (1,)
+
+
+# ------------------------------ metrics -------------------------------------
+
+def test_counter_gauge_histogram_prometheus_text():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_detections_total", "detections")
+    c.inc(2, cell="a/b", op='q"x')             # label escaping
+    c.inc(1, cell="a/b", op='q"x')
+    reg.gauge("repro_queue_depth", "depth").set(3, lane="0")
+    h = reg.histogram("repro_step_duration_ms", "ms", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v, kind="decode")
+    text = reg.to_prometheus()
+    assert '# TYPE repro_detections_total counter' in text
+    assert 'repro_detections_total{cell="a/b",op="q\\"x"} 3' in text
+    assert '# TYPE repro_queue_depth gauge' in text
+    assert 'repro_step_duration_ms_bucket{kind="decode",le="1"} 1' in text
+    assert 'repro_step_duration_ms_bucket{kind="decode",le="10"} 2' \
+        in text
+    assert 'repro_step_duration_ms_bucket{kind="decode",le="+Inf"} 3' \
+        in text
+    assert 'repro_step_duration_ms_count{kind="decode"} 3' in text
+    assert 'repro_step_duration_ms_sum{kind="decode"} 55.5' in text
+
+
+def test_registry_get_or_create_and_type_guard():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    with pytest.raises(ValueError):
+        reg.counter("x").inc(-1)
+    assert reg.get("missing") is None
+
+
+def test_registry_json_round_trip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c", "h").inc(2, op="q")
+    path = reg.write_json(str(tmp_path / "m.json"))
+    d = json.load(open(path))
+    assert d["c"]["samples"] == [{"labels": {"op": "q"}, "value": 2.0}]
+
+
+# ------------------------------- tracer -------------------------------------
+
+def test_tracer_spans_and_chrome_trace(tmp_path):
+    t = Tracer()
+    with t.span("build", cat="campaign", cell="c1"):
+        pass
+    t.add_span("decode", cat="serving", start_s=1.0, dur_s=0.5, step=3)
+    trace = t.to_chrome_trace()
+    events = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    meta = [e for e in trace["traceEvents"] if e["ph"] == "M"]
+    assert {e["name"] for e in events} == {"build", "decode"}
+    assert {e["args"]["name"] for e in meta} == {"campaign", "serving"}
+    # one tid per category, µs units
+    decode = next(e for e in events if e["name"] == "decode")
+    assert decode["ts"] == 1e6 and decode["dur"] == 5e5
+    assert len({e["tid"] for e in events}) == 2
+    json.load(open(t.write(str(tmp_path / "trace.json"))))
+    assert t.total_s("serving") == pytest.approx(0.5)
+
+
+# --------------------------- bundle + replay --------------------------------
+
+def test_observability_write_and_replay(tmp_path):
+    obs = Observability.create()
+    obs.bus.emit(FaultEvent(op="qgemm", step=1, source="serving.engine",
+                            errors=2, checks=3, request_ids=(5,)))
+    obs.bus.emit(FaultEvent(op="qgemm", step=0, source="s",
+                            kind="injection"))
+    obs.registry.counter("repro_detections_total", "d").inc(1, cell="c")
+    with obs.tracer.span("phase"):
+        pass
+    paths = obs.write(str(tmp_path))
+    assert set(paths) == {"events", "trace", "prometheus", "metrics_json"}
+    for line in open(paths["events"]):
+        validate_event(json.loads(line))
+
+    reg = replay(paths["events"])
+    assert reg.counter("repro_detections_total").value(
+        op="qgemm", source="serving.engine") == 1
+    assert reg.counter("repro_abft_errors_total").value(op="qgemm") == 2
+    assert reg.counter("repro_injections_total").value(source="s") == 1
+
+
+# --------------------- telemetry percentile degenerate cases -----------------
+
+def test_percentiles_ms_degenerate_inputs():
+    import math
+
+    from repro.serving.telemetry import percentiles_ms
+
+    empty = percentiles_ms([])
+    assert empty == {"p50": 0.0, "p95": 0.0, "p99": 0.0, "n": 0}
+    one = percentiles_ms([0.004])
+    assert one["p50"] == one["p95"] == one["p99"] == pytest.approx(4.0)
+    assert one["n"] == 1
+    # None / non-finite samples are dropped, never NaN-poison the output
+    mixed = percentiles_ms([None, float("nan"), float("inf"), 0.002])
+    assert mixed["n"] == 1 and mixed["p99"] == pytest.approx(2.0)
+    assert not any(isinstance(v, float) and math.isnan(v)
+                   for v in mixed.values())
+    many = percentiles_ms([0.001 * i for i in range(1, 101)])
+    assert many["n"] == 100
+    assert many["p50"] == pytest.approx(50.5, rel=0.05)
+    assert many["p50"] <= many["p95"] <= many["p99"]
+
+
+# ------------------- channel accounting + train-loop path -------------------
+
+def test_op_counts_channel_rules():
+    from repro.obs.events import op_counts
+
+    # keyed counters win; the legacy aggregate aliases a FaultReport
+    # carries alongside them are not double-counted
+    both = {"abft/qgemm_errors": 1, "abft/qgemm_checks": 4,
+            "abft/gemm_errors": 1}
+    assert op_counts(both) == [("qgemm", 4, 1)]
+    # legacy-only metrics (hand-written step fns, pre-protect paths)
+    # still surface, under the aggregate op names _errors_in counts
+    assert op_counts({"abft/gemm_errors": 1}) == [("gemm", 0, 1)]
+    assert op_counts({"abft/eb_errors": 2}) == [("embedding_bag", 0, 2)]
+    # the checked_psum channel is its own op and ceils like the rest
+    assert ("comm", 0, 1) in op_counts({"comm/errors": 0.25})
+    evs = events_from_metrics({"comm/errors": 1}, step=2, source="s")
+    assert [(e.op, e.errors) for e in evs] == [("comm", 1)]
+
+
+def test_train_loop_observes_pre_policy_metrics(tmp_path):
+    import numpy as np
+
+    from repro.runtime.loop import LoopConfig, TrainLoop
+
+    calls = {}
+
+    def step_fn(state, batch):
+        w = state["w"] - 0.1 * (state["w"] - batch["x"].mean())
+        faulty = int(state["step"]) == 3 and calls.setdefault("f", 0) == 0
+        if faulty:
+            calls["f"] = 1
+        m = {"abft/gemm_errors": jnp.asarray(int(faulty), jnp.int32),
+             "loss": jnp.mean((w - batch["x"].mean()) ** 2)}
+        return {"w": w, "step": state["step"] + 1}, m
+
+    class DS:
+        def batch_at(self, step):
+            rng = np.random.default_rng(step)
+            return {"x": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+
+    obs = Observability.create()
+    cfg = LoopConfig(ckpt_dir=str(tmp_path / "ck"), save_every=100,
+                     fault_policy="recompute", log_every=100)
+    loop = TrainLoop(step_fn, DS(), cfg=cfg, obs=obs)
+    state0 = {"w": jnp.zeros(()), "step": jnp.zeros((), jnp.int32)}
+    state, _ = loop.run(state0, 6)
+    assert loop.stats["recomputes"] == 1
+    # the recompute cleared the flag, but the detection event (from the
+    # PRE-policy metrics) survives in the stream
+    det = [e for e in obs.bus if e.kind == "detection"]
+    assert [(e.op, e.step, e.source) for e in det] == \
+        [("gemm", 3, "runtime.loop")]
+    reg = obs.registry
+    assert reg.counter("repro_steps_total").value(
+        kind="train", source="runtime.loop") == 6
+    assert reg.counter("repro_abft_errors_total").value(
+        op="gemm", source="runtime.loop") == 1
+    assert reg.get("repro_step_duration_ms").count(kind="train") == 6
+    assert len([s for s in obs.tracer.spans
+                if s.name == "train_step"]) == 6
