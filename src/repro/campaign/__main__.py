@@ -33,10 +33,15 @@ def main(argv=None) -> int:
     ap.add_argument("--grid", default=None,
                     choices=["quick", "paper", "thresholds", "soak",
                              "victims", "training", "multidevice",
-                             "serving_soak", "full"],
+                             "serving_soak", "paging", "full"],
                     help="named grid to run (see repro.campaign.grids; "
-                         "serving_soak runs repro.serving.soak)")
+                         "serving_soak runs repro.serving.soak, paging "
+                         "runs repro.serving.paging_soak)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan", default=None,
+                    help="serving grids: override every tenant's "
+                         "protection plan — compact string, or "
+                         "@path.json holding a plan dict")
     ap.add_argument("--samples", type=int, default=0,
                     help="override the per-cell sample count "
                          "(quick / thresholds grids)")
@@ -91,8 +96,8 @@ def main(argv=None) -> int:
     grid = args.grid or ("quick" if args.quick else None)
     if grid is None:
         ap.error("pick a grid (--quick / --grid {quick,paper,thresholds,"
-                 "soak,victims,training,multidevice,serving_soak,full}) "
-                 "or --diff OLD NEW")
+                 "soak,victims,training,multidevice,serving_soak,paging,"
+                 "full}) or --diff OLD NEW")
 
     # grids with sharded cells are pointless on a 1-device host: force
     # the 4-device host platform the multidevice baseline was produced
@@ -128,9 +133,18 @@ def main(argv=None) -> int:
 
     if grid == "serving_soak":
         # live-traffic soak: the serving engine, not the vmapped executor
+        import dataclasses
+
         from repro.campaign.artifacts import markdown_table
-        from repro.serving.soak import run_soak_campaign
-        result = run_soak_campaign(quick=args.quick, seed=args.seed,
+        from repro.serving.soak import (full_soak_spec, quick_soak_spec,
+                                        run_soak_campaign)
+        spec = None
+        if args.plan is not None:
+            spec = quick_soak_spec(args.seed) if args.quick \
+                else full_soak_spec(args.seed)
+            spec = dataclasses.replace(spec, tenants=tuple(
+                (n, w, args.plan) for n, w, _ in spec.tenants))
+        result = run_soak_campaign(spec, quick=args.quick, seed=args.seed,
                                    out_dir=args.out, obs=obs,
                                    verbose=lambda s: print(s, flush=True))
         print()
@@ -138,6 +152,22 @@ def main(argv=None) -> int:
         print(f"artifact: "
               f"{os.path.join(args.out, 'BENCH_campaign_serving_soak')}"
               f".json")
+        _write_obs(obs, args.obs_dir)
+        return 0
+    if grid == "paging":
+        # paged-KV parity + repair cells (repro.serving.paging_soak)
+        from repro.campaign.artifacts import markdown_table
+        from repro.serving.paging_soak import run_paging_campaign
+        result = run_paging_campaign(quick=args.quick, seed=args.seed,
+                                     plan=args.plan, out_dir=args.out,
+                                     obs=obs,
+                                     verbose=lambda s: print(s,
+                                                             flush=True))
+        print()
+        print(markdown_table(result))
+        name = "paging_quick" if args.quick else "paging"
+        print(f"artifact: "
+              f"{os.path.join(args.out, 'BENCH_campaign_' + name)}.json")
         _write_obs(obs, args.obs_dir)
         return 0
     if grid == "quick":

@@ -22,11 +22,13 @@ from repro.core.abft_gemm import (
     abft_qgemm_packed,
     abft_qgemm_unfused,
     correct_single_error,
+    correct_weight_flip,
     detect_prob_b_bitflip,
     detect_prob_b_random,
     detect_prob_c_random,
     encode_activation_checksum,
     encode_weight_checksum,
+    encode_weight_colsum,
     pack_encoded_b,
     verify_rows,
 )
@@ -63,6 +65,7 @@ __all__ = [
     "encode_weight_checksum", "encode_activation_checksum",
     "abft_qgemm", "abft_qgemm_packed", "abft_qgemm_unfused",
     "pack_encoded_b", "verify_rows", "correct_single_error",
+    "encode_weight_colsum", "correct_weight_flip",
     "detect_prob_b_bitflip", "detect_prob_b_random", "detect_prob_c_random",
     "EB_REL_BOUND", "AbftEbOut", "table_rowsums", "embedding_bag",
     "abft_embedding_bag", "eb_overhead_model",

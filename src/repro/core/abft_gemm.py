@@ -165,6 +165,54 @@ def correct_single_error(c: jax.Array, err_rows: jax.Array,
     return c.at[i, j].add(fix), applied
 
 
+def encode_weight_colsum(b_q: jax.Array) -> jax.Array:
+    """Weight-side column encoding: exact int32 column sums of B
+    ([k, n] -> [n]), amortized at pack time like the row checksum.
+
+    Together with the packed mod-127 row checksum this makes B itself a
+    2D-checksummed block: a flipped weight is *localized* — the stale row
+    checksum flags row k, the stale column sum flags column j and yields
+    the exact additive delta — so the ``correct`` policy can repair the
+    GEMM output without re-quantizing or re-running anything.
+    """
+    return jnp.sum(b_q.astype(jnp.int32), axis=-2)
+
+
+def correct_weight_flip(c: jax.Array, a_q: jax.Array, b_packed: jax.Array,
+                        colsum_ref: jax.Array, mod: int = MOD,
+                        lanes: int = LANE) -> Tuple[jax.Array, jax.Array]:
+    """Repair C after a single corrupted *weight* (not accumulator) cell.
+
+    A flip in ``B[k0, j0]`` corrupts every row of column j0 of C — too
+    many flagged rows for :func:`correct_single_error`'s single-cell
+    model.  But the encodings of B localize it exactly:
+
+    * recomputed mod-127 row sums vs the packed checksum lane flag k0
+      (a single-bit int8 delta is ±2^b, never ≡ 0 mod 127);
+    * recomputed column sums vs ``colsum_ref`` (the exact int32 sums of
+      the clean B, stored at encode time) flag j0 *and* give the exact
+      delta;
+    * then ``C[:, j0] -= A[:, k0] * delta`` restores the clean product.
+
+    Applies only when exactly one row and one column are flagged; a flip
+    landing in the checksum lane or a multi-flip pattern leaves C
+    untouched (``applied`` False) for the recompute fallback.
+    Returns ``(corrected_c, applied)``.
+    """
+    n = b_packed.shape[1] - lanes
+    b_q = b_packed[:, :n].astype(jnp.int32)
+    row_ref = b_packed[:, n].astype(jnp.int32)
+    row_bad = (jnp.sum(b_q, axis=-1) - row_ref) % mod != 0
+    col_delta = jnp.sum(b_q, axis=0) - colsum_ref.astype(jnp.int32)
+    col_bad = col_delta != 0
+    k0 = jnp.argmax(row_bad)
+    j0 = jnp.argmax(col_bad)
+    applied = (jnp.sum(row_bad.astype(jnp.int32)) == 1) & \
+        (jnp.sum(col_bad.astype(jnp.int32)) == 1)
+    fix = jnp.where(applied, col_delta[j0], 0)
+    return c.at[:, j0].add(-a_q.astype(jnp.int32)[:, k0] * fix), applied
+
+
 # ---------------------------------------------------------------------------
 # Detection-probability model (§IV-C) — used by tests and benchmarks to
 # compare measured accuracy against the paper's analytical bounds.

@@ -71,12 +71,20 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced model + small stream")
     ap.add_argument("--plan", default=None,
-                    help="single-tenant protection plan, e.g. "
-                         "'*:policy=recompute,embedding_bag:off'")
+                    help="single-tenant protection plan: compact string "
+                         "('*:policy=recompute,embedding_bag:off') or "
+                         "@path.json holding a plan dict")
     ap.add_argument("--tenant", action="append", default=[],
                     metavar="NAME[:WEIGHT]=PLAN",
                     help="add a traffic class with its own plan "
-                         "(repeatable; replaces --plan)")
+                         "(repeatable; replaces --plan; PLAN accepts "
+                         "@path.json too)")
+    ap.add_argument("--paged-kv", type=int, default=0, metavar="PAGE_SIZE",
+                    help="serve from the paged, prefix-shared, "
+                         "per-page-checksummed KV cache with this page "
+                         "size (pair with a kv_cache_paged:on plan)")
+    ap.add_argument("--kv-pages", type=int, default=256,
+                    help="page-pool size per lane (--paged-kv)")
     ap.add_argument("--no-abft", action="store_true",
                     help="unprotected baseline (= --plan '*:off')")
     ap.add_argument("--inject-step", type=int, default=-1,
@@ -121,7 +129,7 @@ def main(argv=None) -> int:
             try:
                 name, weight, plan_text = parse_tenant(t)
                 plan = default_plan().with_rules(
-                    *ProtectionPlan.parse(plan_text).rules)
+                    *ProtectionPlan.from_any(plan_text).rules)
             except ValueError as e:
                 ap.error(str(e))
             tenants.append(TenantSpec(
@@ -129,7 +137,7 @@ def main(argv=None) -> int:
     else:
         if args.plan is not None:
             plan = default_plan().with_rules(
-                *ProtectionPlan.parse(args.plan).rules)
+                *ProtectionPlan.from_any(args.plan).rules)
         elif args.no_abft:
             plan = unprotected_plan()
         else:
@@ -153,11 +161,16 @@ def main(argv=None) -> int:
                 EXTRAS, table_rows=512, n_tables=4, emb_dim=32,
                 bottom_mlp=(64, 32), top_mlp=(64, 32, 1))
 
+    paging = None
+    if args.paged_kv:
+        from repro.paging import PagingConfig
+        paging = PagingConfig(page_size=args.paged_kv,
+                              n_pages=args.kv_pages)
     engine = ServingEngine(cfg, tenants, n_slots=args.slots,
                            max_prompt=args.prompt_len,
                            max_new_tokens=args.decode_tokens,
                            queue_depth=args.queue_depth, seed=args.seed,
-                           dlrm_extras=dlrm_extras)
+                           dlrm_extras=dlrm_extras, paging=paging)
 
     weights = tenant_weights(tenants)
     trace = None
@@ -214,6 +227,13 @@ def main(argv=None) -> int:
     f = s["faults"]
     nz = {k: v for k, v in f["counters"].items() if v}
     log.info("fault counters: %s", nz or "all zero")
+    for lane_key, st in engine.paging_stats().items():
+        log.info("paging %s: resident=%d/%d high-water=%d "
+                 "prefix-hit=%.2f evictions=%d rebuilds=%d", lane_key,
+                 st["pages_resident"],
+                 st["pages_resident"] + st["pages_free"],
+                 st["pages_high_water"], st["prefix_hit_rate"],
+                 st["page_evictions"], st["page_rebuilds"])
     for inj in f["injections"]:
         if inj["detected"]:
             log.info(">>> injected %s at step %d: DETECTED after %d "

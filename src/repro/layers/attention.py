@@ -24,8 +24,9 @@ import jax.numpy as jnp
 from repro.core import policy
 from repro.layers.common import Ctx
 from repro.layers.linear import apply_linear, maybe_qlinear_init
-from repro.protect.ops import KV_CACHE, QuantKV
-from repro.protect.runtime import kv_rule, protected_call
+from repro.paging.cache import PagedKV
+from repro.protect.ops import KV_CACHE, KV_CACHE_PAGED, QuantKV
+from repro.protect.runtime import kv_rule, paged_kv_rule, protected_call
 from repro.layers.norms import headnorm, init_headnorm
 from repro.layers.rope import apply_rope
 from repro.sharding import constrain
@@ -249,8 +250,10 @@ def attention_decode(p, x, cache, pos, ctx: Ctx, *, n_heads: int, n_kv: int,
     pos [B].  Cross-attention decode attends a static (encoder) cache.
     Returns (y [B,d], new_cache, report)."""
     b, d = x.shape
+    paged_kv = isinstance(cache["k"], PagedKV)
     quant_kv = isinstance(cache["k"], QuantKV)
-    s_max = (cache["k"].q if quant_kv else cache["k"]).shape[2]
+    s_max = 0 if paged_kv \
+        else (cache["k"].q if quant_kv else cache["k"]).shape[2]
     q, r1 = apply_linear(p["wq"], x[:, None, :], ctx, name="attn.wq")
     q = _split_heads(q, n_heads, head_dim)                  # [B,1,H,dh]
     if not cross:
@@ -267,7 +270,15 @@ def attention_decode(p, x, cache, pos, ctx: Ctx, *, n_heads: int, n_kv: int,
             q = apply_rope(q, pos[:, None], rope_theta)
             k_new = apply_rope(k_new, pos[:, None], rope_theta)
         bidx = jnp.arange(b)
-        if quant_kv:
+        if paged_kv:
+            # scatter into the mapped page (page checksum maintained
+            # incrementally); unmapped slots drop the write.  Paged mode
+            # is single-host serving — no sharding constraints.
+            cache = {
+                "k": KV_CACHE_PAGED.append(cache["k"], pos, k_new[:, 0]),
+                "v": KV_CACHE_PAGED.append(cache["v"], pos, v_new[:, 0]),
+            }
+        elif quant_kv:
             # append: quantize + checksum the new rows (Alg. 2 style)
             cache = {
                 "k": _constrain_quant_kv(
@@ -295,6 +306,18 @@ def attention_decode(p, x, cache, pos, ctx: Ctx, *, n_heads: int, n_kv: int,
         if "q_norm" in p:
             q = headnorm(p["q_norm"], q)
         reports = (r1,)
+
+    if paged_kv and not cross:
+        # verify-on-touch read off the paged pools: one checksum compare
+        # per touched page.  The rule's policy is forced to log in-jit;
+        # the engine applies evict/rebuild/abort host-side on the flag.
+        out, r_kv = protected_call(
+            "kv_cache_paged", (cache["k"], cache["v"]), q[:, 0], pos,
+            ctx=ctx, rule=paged_kv_rule(ctx), name="attn", n_heads=n_heads,
+            n_kv=n_kv, window=window, prefix_global=prefix_global)
+        out = out.reshape(b, n_heads * head_dim).astype(ctx.compute_dtype)
+        y, r4 = apply_linear(p["wo"], out, ctx, name="attn.wo")
+        return y, cache, policy.merge_reports(*reports, r_kv, r4)
 
     if quant_kv and not cross:
         # verified read + affine-expanded attention off the int8 cache;

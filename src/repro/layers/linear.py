@@ -110,8 +110,16 @@ def qlinear(p, x, ctx: Ctx, name: str = ""):
     # dynamic per-row signed-int8 quantization (kernels/quantize_rows)
     x_q, a_alpha, a_beta = kops.quantize_rows(x2)
 
-    # the plan decides scheme + policy + on/off for this call site
-    c, report = protected_call("qgemm", packed, x_q, ctx=ctx, name=name)
+    # the plan decides scheme + policy + on/off for this call site; a
+    # correct-policy site also hands over the exact int32 column sums so
+    # single weight flips are repairable, not just detectable (the f32
+    # colsum is exact for any d_in the int8 path supports: |sum| < 2^24)
+    rule = rule_for(ctx, "qgemm", name)
+    encoded = packed
+    if rule.enabled and rule.policy == "correct" and "colsum" in p:
+        encoded = (packed, jnp.round(p["colsum"]).astype(jnp.int32))
+    c, report = protected_call("qgemm", encoded, x_q, ctx=ctx, rule=rule,
+                               name=name)
 
     # Requantization rank-1 algebra (Eq. 1 with symmetric B: beta_B = 0):
     #   y = alpha_A[i] * alpha_B[j] * C[i,j] + beta_A[i] * alpha_B[j] * colsum_B[j]

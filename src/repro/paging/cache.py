@@ -1,0 +1,229 @@
+"""Device-side paged KV cache: page pools, per-page checksums, attention.
+
+Layout (per layer; the model's layer scan stacks a leading ``L`` on every
+leaf, including the page table):
+
+    q        int8  [n_pages, Kv, P, dh]   quantized rows (core.abft_kvcache)
+    alpha    f32   [n_pages, Kv, P]       per-row affine scale
+    beta     f32   [n_pages, Kv, P]       per-row affine offset
+    pagesum  int32 [n_pages, Kv]          ABFT page checksum = Σ_rows rowsum
+    table    int32 [B, max_pages]         page ids per slot, -1 = unmapped
+
+One page id names the same pool row in every layer's K and V pools — a
+page is a block of ``P`` token positions across the whole model, so the
+host allocator hands out a single id per token block.  The page checksum
+folds the paper's Alg.-2 rowsums one level further: a single int32
+compare verifies ``P`` rows (× ``dh`` int8 elements × ``L`` layers when
+merged across the scan), which is what makes verify-on-touch cheap
+enough to run on every decode read.
+
+Scatters use out-of-range sentinels (``page id == n_pages``) for "skip
+this write": JAX drops out-of-bounds scatter updates, so one compiled
+program serves any subset of shared/unshared pages.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft_kvcache import QuantKV, quantize_kv_rows
+
+NEG_INF = -1e30
+
+
+class PagedKV(NamedTuple):
+    q: jax.Array        # int8  [n_pages, Kv, P, dh]
+    alpha: jax.Array    # f32   [n_pages, Kv, P]
+    beta: jax.Array     # f32   [n_pages, Kv, P]
+    pagesum: jax.Array  # int32 [n_pages, Kv]
+    table: jax.Array    # int32 [B, max_pages], -1 = unmapped
+
+
+def paged_pool(n_pages: int, n_kv: int, page_size: int, head_dim: int,
+               n_slots: int, max_pages: int,
+               n_layers: int = 0) -> PagedKV:
+    """A zeroed pool with an all-unmapped table.  ``n_layers > 0`` stacks
+    a leading layer axis on every leaf (the shape the layer scan wants)."""
+    lead = (n_layers,) if n_layers else ()
+    return PagedKV(
+        q=jnp.zeros(lead + (n_pages, n_kv, page_size, head_dim), jnp.int8),
+        alpha=jnp.zeros(lead + (n_pages, n_kv, page_size), jnp.float32),
+        beta=jnp.zeros(lead + (n_pages, n_kv, page_size), jnp.float32),
+        pagesum=jnp.zeros(lead + (n_pages, n_kv), jnp.int32),
+        table=jnp.full(lead + (n_slots, max_pages), -1, jnp.int32),
+    )
+
+
+def pack_prompt_pages(pool: PagedKV, src, page_ids: jax.Array) -> PagedKV:
+    """Write a prefilled prompt's rows into pool pages (stacked layout).
+
+    ``pool`` leaves carry a leading L; ``src`` is the batch-1 prefill
+    cache entry — a QuantKV (or float array to quantize here) with leaves
+    [L, 1, Kv, S, dh] where S is a multiple of the page size.
+    ``page_ids`` [S // P] maps prompt chunk -> pool page; entries >=
+    n_pages are dropped (chunk already resident via the prefix tree).
+    The table is left untouched — mapping is the host allocator's job.
+    """
+    n_pages, page = pool.q.shape[1], pool.q.shape[3]
+    if not isinstance(src, QuantKV):
+        src = quantize_kv_rows(jnp.asarray(src, jnp.float32))
+    ell, _, kv, s, dh = src.q.shape
+    nc = s // page
+    q = src.q.reshape(ell, kv, nc, page, dh).transpose(0, 2, 1, 3, 4)
+    alpha = src.alpha.reshape(ell, kv, nc, page).transpose(0, 2, 1, 3)
+    beta = src.beta.reshape(ell, kv, nc, page).transpose(0, 2, 1, 3)
+    pagesum = jnp.sum(src.rowsum.reshape(ell, kv, nc, page),
+                      axis=-1).transpose(0, 2, 1).astype(jnp.int32)
+    return pool._replace(
+        q=pool.q.at[:, page_ids].set(q),
+        alpha=pool.alpha.at[:, page_ids].set(alpha),
+        beta=pool.beta.at[:, page_ids].set(beta),
+        pagesum=pool.pagesum.at[:, page_ids].set(pagesum),
+    )
+
+
+def reset_pages(pool: PagedKV, page_ids: jax.Array) -> PagedKV:
+    """Zero freshly-allocated pages (stacked layout) so decode appends
+    accumulate pagesums from a clean slate.  Sentinel ids are dropped —
+    the engine always passes a fixed-length [n_slots] vector."""
+    return pool._replace(
+        q=pool.q.at[:, page_ids].set(0),
+        alpha=pool.alpha.at[:, page_ids].set(0.0),
+        beta=pool.beta.at[:, page_ids].set(0.0),
+        pagesum=pool.pagesum.at[:, page_ids].set(0),
+    )
+
+
+def paged_append(pk: PagedKV, pos: jax.Array, new_rows: jax.Array) -> PagedKV:
+    """Decode-step append into the mapped page (per-layer layout).
+
+    new_rows [B, Kv, dh] float; pos [B] is the write position.  Unmapped
+    table entries (retired slots) turn into out-of-range scatter ids and
+    the write is dropped.  The page checksum is maintained incrementally:
+    pagesum += rowsum of the new row.
+    """
+    n_pages = pk.q.shape[0]
+    b = new_rows.shape[0]
+    nq = quantize_kv_rows(new_rows)                    # leaves [B, Kv, ...]
+    pid = pk.table[jnp.arange(b), pos // pk.q.shape[2]]
+    pid = jnp.where(pid >= 0, pid, n_pages)            # drop unmapped
+    off = pos % pk.q.shape[2]
+    return pk._replace(
+        q=pk.q.at[pid, :, off].set(nq.q),
+        alpha=pk.alpha.at[pid, :, off].set(nq.alpha),
+        beta=pk.beta.at[pid, :, off].set(nq.beta),
+        pagesum=pk.pagesum.at[pid].add(nq.rowsum),
+    )
+
+
+def page_errors(pk: PagedKV, pos: jax.Array) -> jax.Array:
+    """Per-(slot, chunk) checksum mismatches among touched pages.
+
+    pos [B] -> int32 [B, max_pages]: how many (page, kv-head) checksums
+    disagree with the recomputed fold.  Verify-on-touch masking: only
+    mapped pages at or below the read frontier count.
+    """
+    n_pages, _, page = pk.q.shape[:3]
+    tbl = pk.table
+    safe = jnp.clip(tbl, 0, n_pages - 1)
+    got = jnp.sum(pk.q[safe].astype(jnp.int32), axis=(-1, -2))  # [B,MP,Kv]
+    touched = (tbl >= 0) & (
+        jnp.arange(tbl.shape[1])[None, :] * page <= pos[:, None])
+    err = (got != pk.pagesum[safe]) & touched[..., None]
+    return jnp.sum(err.astype(jnp.int32), axis=-1)
+
+
+def attend_paged(q_heads: jax.Array, pk: PagedKV, pv: PagedKV,
+                 pos: jax.Array, *, n_heads: int, n_kv: int,
+                 verify: bool = True, window=None, prefix_global: int = 0
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode attention off the paged int8 pools.
+
+    q_heads [B, H, dh]; returns (out [B, H, dh] f32, err_count int32,
+    pages_verified int32).  Same affine score expansion as
+    :func:`~repro.core.abft_kvcache.attend_quantized` —
+    ``q·k_row = α_row (q·k_q_row) + β_row Σ_d q_d`` — but the contraction
+    runs over gathered pages and the ABFT check is ONE int32 compare per
+    touched (page, kv head) instead of one per row.  ``pages_verified``
+    counts touched pages over both pools — the verify work actually done,
+    which for short resident requests is far below the contiguous path's
+    whole-bucket re-verify.
+    """
+    b, h, dh = q_heads.shape
+    g = n_heads // n_kv
+    n_pages, kvh, page = pk.q.shape[:3]
+    mp = pk.table.shape[1]
+    tbl = pk.table
+    safe = jnp.clip(tbl, 0, n_pages - 1)
+    mapped = tbl >= 0                                          # [B, MP]
+    touched = mapped & (jnp.arange(mp)[None, :] * page <= pos[:, None])
+
+    kq = pk.q[safe]                                 # [B, MP, Kv, P, dh]
+    vq = pv.q[safe]
+
+    errs = jnp.zeros((), jnp.int32)
+    pages = jnp.zeros((), jnp.int32)
+    if verify:
+        got_k = jnp.sum(kq.astype(jnp.int32), axis=(-1, -2))   # [B,MP,Kv]
+        got_v = jnp.sum(vq.astype(jnp.int32), axis=(-1, -2))
+        err_k = (got_k != pk.pagesum[safe]) & touched[..., None]
+        err_v = (got_v != pv.pagesum[safe]) & touched[..., None]
+        errs = (jnp.sum(err_k) + jnp.sum(err_v)).astype(jnp.int32)
+        pages = (2 * jnp.sum(touched)).astype(jnp.int32)
+
+    # gathered pages -> grouped sequence layout [B, Kv, MP*P, *]
+    ks = kq.transpose(0, 2, 1, 3, 4).reshape(b, kvh, mp * page, dh)
+    vs = vq.transpose(0, 2, 1, 3, 4).reshape(b, kvh, mp * page, dh)
+    ka = pk.alpha[safe].transpose(0, 2, 1, 3).reshape(b, kvh, mp * page)
+    kb = pk.beta[safe].transpose(0, 2, 1, 3).reshape(b, kvh, mp * page)
+    va = pv.alpha[safe].transpose(0, 2, 1, 3).reshape(b, kvh, mp * page)
+    vb = pv.beta[safe].transpose(0, 2, 1, 3).reshape(b, kvh, mp * page)
+
+    qg = q_heads.reshape(b, n_kv, g, dh).astype(jnp.float32)
+    qk_int = jnp.einsum("bkgd,bksd->bkgs", qg, ks.astype(jnp.float32))
+    qsum = jnp.sum(qg, axis=-1)                                # [B, Kv, g]
+    s = (ka[:, :, None, :] * qk_int
+         + kb[:, :, None, :] * qsum[..., None]) * dh ** -0.5
+
+    kv_pos = jnp.arange(mp * page)[None, None, None, :]
+    in_map = jnp.repeat(mapped, page, axis=1)[:, None, None, :]
+    valid = in_map & (kv_pos <= pos[:, None, None, None])
+    if window is not None:
+        in_win = (pos[:, None, None, None] - kv_pos) < window
+        if prefix_global > 0:
+            in_win |= kv_pos < prefix_global
+        valid &= in_win
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)                       # [B, Kv, g, MP*P]
+
+    pv_int = jnp.einsum("bkgs,bksd->bkgd", p * va[:, :, None, :],
+                        vs.astype(jnp.float32))
+    pbeta = jnp.sum(p * vb[:, :, None, :], axis=-1)
+    out = pv_int + pbeta[..., None]
+    return out.reshape(b, h, dh), errs, pages
+
+
+def scrub_cache(cache, pos: jax.Array):
+    """Whole-pool page verify for the engine's evict/rebuild path.
+
+    ``cache`` is the stacked attn cache ({"attn": {"k": PagedKV, "v":
+    PagedKV}} with leading-L leaves); returns {"k": [B, MP], "v": ...}
+    int32 mismatch counts summed over layers — the host maps flagged
+    (slot, chunk) pairs back to page ids and applies the plan policy.
+    """
+    attn = cache["attn"]
+    per_layer = jax.vmap(page_errors, in_axes=(0, None))
+    return {"k": jnp.sum(per_layer(attn["k"], pos), axis=0),
+            "v": jnp.sum(per_layer(attn["v"], pos), axis=0)}
+
+
+def pool_page_bytes(pool: PagedKV) -> int:
+    """Bytes one page owns in this pool (table excluded) — the unit the
+    allocator's high-water mark converts to peak resident KV bytes."""
+    axis = 1 if pool.q.ndim == 5 else 0
+    total = 0
+    for leaf in (pool.q, pool.alpha, pool.beta, pool.pagesum):
+        total += (leaf.size // leaf.shape[axis]) * leaf.dtype.itemsize
+    return int(total)

@@ -27,12 +27,13 @@ import jax.numpy as jnp
 
 from repro.core import (EB_REL_BOUND, LANE, QuantKV, abft_gemm_f32,
                         attend_quantized, correct_single_error,
-                        dequantize_kv, embedding_bag,
+                        correct_weight_flip, dequantize_kv, embedding_bag,
                         encode_activation_checksum, encode_weight_f32,
                         pack_encoded_b, quantize_kv_rows, table_rowsums,
                         update_kv_row, verify_rows)
 from repro.core.policy import register_op_kind
 from repro.kernels import ops as kops
+from repro.paging.cache import attend_paged, paged_append
 from repro.protect.plan import ResolvedRule
 
 _DEFAULT_RULE = ResolvedRule()
@@ -71,6 +72,14 @@ class QGemmOp:
     Schemes: ``packed`` (fused checksum column, Pallas on TPU / XLA ref on
     CPU), ``pallas`` (force the Pallas kernel, interpret-mode off-TPU),
     ``unfused`` (the BLAS-2 baseline the paper argues against §IV-A3).
+
+    ``encoded`` may also be ``(packed, colsum_ref)`` where ``colsum_ref``
+    is the exact int32 column sums of the clean B block (amortized at
+    pack time, like the row checksum).  With it, the ``correct`` policy
+    additionally repairs single *weight* flips — a corrupted ``B[k, j]``
+    poisons a whole output column, which the single-cell accumulator
+    repair cannot handle, but the two stale B encodings localize (k, j)
+    and the exact delta (:func:`repro.core.correct_weight_flip`).
     """
     name = "qgemm"
     schemes = ("packed", "pallas", "unfused")
@@ -80,8 +89,15 @@ class QGemmOp:
     def encode(self, w_q: jax.Array) -> jax.Array:
         return pack_encoded_b(w_q)
 
-    def out_dim(self, encoded: jax.Array) -> int:
-        return encoded.shape[-1] - LANE
+    @staticmethod
+    def _unpack(encoded):
+        if isinstance(encoded, tuple):
+            return encoded
+        return encoded, None
+
+    def out_dim(self, encoded) -> int:
+        packed, _ = self._unpack(encoded)
+        return packed.shape[-1] - LANE
 
     def dequant_colsum(self, w_q: jax.Array) -> jax.Array:
         """The Eq. 1 rank-1 requantization constant: f32 column sums of
@@ -91,13 +107,20 @@ class QGemmOp:
         re-encoding) must share it."""
         return jnp.sum(w_q.astype(jnp.int32), axis=-2).astype(jnp.float32)
 
+    def _aux(self, col_check, a_q, packed, colsum_ref):
+        if col_check is not None and colsum_ref is not None:
+            return {"col_check": col_check, "a_q": a_q, "packed": packed,
+                    "colsum_ref": colsum_ref}
+        return col_check
+
     def __call__(self, encoded, a_q, *, rule: ResolvedRule = _DEFAULT_RULE):
+        packed, colsum_ref = self._unpack(encoded)
         scheme = rule.scheme or "packed"
         want_col = rule.policy == "correct"
-        n = self.out_dim(encoded)
+        n = self.out_dim(packed)
         if scheme == "unfused":
-            b_q = encoded[:, :n]
-            checksum = encoded[:, n]                       # lane 0 of block
+            b_q = packed[:, :n]
+            checksum = packed[:, n]                        # lane 0 of block
             c = jax.lax.dot_general(a_q, b_q, (((1,), (0,)), ((), ())),
                                     preferred_element_type=jnp.int32)
             check_col = jax.lax.dot_general(
@@ -110,12 +133,13 @@ class QGemmOp:
                     encode_activation_checksum(a_q),
                     b_q.astype(jnp.int32), (((0,), (0,)), ((), ())),
                     preferred_element_type=jnp.int32)
-            return c, Check(err, err_rows, col_check)
+            return c, Check(err, err_rows,
+                            self._aux(col_check, a_q, packed, colsum_ref))
         if scheme not in ("packed", "pallas"):
             raise ValueError(f"unknown qgemm scheme {scheme!r}; "
                              f"have {self.schemes}")
         use_pallas = True if scheme == "pallas" else None
-        out = kops.abft_qgemm(a_q, encoded, use_pallas=use_pallas,
+        out = kops.abft_qgemm(a_q, packed, use_pallas=use_pallas,
                               with_colcheck=want_col)
         if want_col:
             c, err_rows, col_check = out
@@ -123,17 +147,34 @@ class QGemmOp:
             (c, err_rows), col_check = out, None
         err_mask = err_rows.astype(bool)
         return c, Check(jnp.sum(err_rows).astype(jnp.int32), err_mask,
-                        col_check)
+                        self._aux(col_check, a_q, packed, colsum_ref))
 
     def unprotected(self, encoded, a_q):
-        n = self.out_dim(encoded)
-        return jax.lax.dot_general(a_q, encoded[:, :n],
+        packed, _ = self._unpack(encoded)
+        n = self.out_dim(packed)
+        return jax.lax.dot_general(a_q, packed[:, :n],
                                    (((1,), (0,)), ((), ())),
                                    preferred_element_type=jnp.int32)
 
     def correct(self, out, check: Check):
-        """Single-error repair; returns (fixed, residual_err, applied)."""
-        fixed, applied = correct_single_error(out, check.err_mask, check.aux)
+        """Single-error repair; returns (fixed, residual_err, applied).
+
+        Tries the single-cell accumulator repair first, then (when the
+        encoded side carried a column-sum reference) the weight-flip
+        repair.  The two cannot mis-fire together: a weight flip leaves
+        the accumulator column deltas self-consistent (zero), and a
+        clean B leaves the weight encodings self-consistent.
+        """
+        aux = check.aux
+        if isinstance(aux, dict):
+            fixed, cell = correct_single_error(out, check.err_mask,
+                                               aux["col_check"])
+            fixed, wflip = correct_weight_flip(fixed, aux["a_q"],
+                                               aux["packed"],
+                                               aux["colsum_ref"])
+            applied = cell | wflip
+        else:
+            fixed, applied = correct_single_error(out, check.err_mask, aux)
         residual = jnp.where(applied, 0, check.err_count).astype(jnp.int32)
         return fixed, residual, applied.astype(jnp.int32)
 
@@ -252,6 +293,54 @@ class KvCacheOp:
 
 
 # ---------------------------------------------------------------------------
+# Paged quantized KV cache (repro.paging)
+# ---------------------------------------------------------------------------
+
+class KvCachePagedOp:
+    """Page-table int8 KV cache with per-page folded checksums.
+
+    encoded = (pk, pv) :class:`repro.paging.PagedKV` pair (per-layer
+    layout); inputs = (q_heads [B, H, dh], pos [B]).  Verify-on-touch:
+    the check covers exactly the pages the attention mask reads, one
+    int32 compare per (page, kv head), and the touched-page count rides
+    the report's ``checks`` counter so telemetry can price verification
+    per decode token.  Page repair (evict/rebuild/abort-owner) is a
+    host-side allocator action — the serving engine interprets the plan
+    policy; in-jit the op only counts, so call sites pass a log-policy
+    rule.
+    """
+    name = "kv_cache_paged"
+    schemes = ("default",)
+    supports_correct = False
+
+    def encode(self, kv):
+        """Pool encoding lives in :mod:`repro.paging.cache`
+        (pack_prompt_pages / paged_append); pass pools through."""
+        return kv
+
+    def append(self, pk, pos, new_rows):
+        return paged_append(pk, pos, new_rows)
+
+    def __call__(self, encoded, q_heads, pos, *,
+                 rule: ResolvedRule = _DEFAULT_RULE, n_heads: int,
+                 n_kv: int, window=None, prefix_global: int = 0):
+        pk, pv = encoded
+        out, errs, pages = attend_paged(q_heads, pk, pv, pos,
+                                        n_heads=n_heads, n_kv=n_kv,
+                                        verify=True, window=window,
+                                        prefix_global=prefix_global)
+        return out, Check(errs, aux={"n_checks": pages})
+
+    def unprotected(self, encoded, q_heads, pos, *, n_heads: int,
+                    n_kv: int, window=None, prefix_global: int = 0):
+        pk, pv = encoded
+        out, _, _ = attend_paged(q_heads, pk, pv, pos, n_heads=n_heads,
+                                 n_kv=n_kv, verify=False, window=window,
+                                 prefix_global=prefix_global)
+        return out
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -277,8 +366,9 @@ QGEMM = register_op(QGemmOp())
 FLOAT_GEMM = register_op(FloatGemmOp())
 EMBEDDING_BAG = register_op(EmbeddingBagOp())
 KV_CACHE = register_op(KvCacheOp())
+KV_CACHE_PAGED = register_op(KvCachePagedOp())
 
 __all__ = ["Check", "ProtectedOp", "OPS", "register_op", "get_op",
            "QGemmOp", "FloatGemmOp", "EmbeddingBagOp", "KvCacheOp",
-           "QGEMM", "FLOAT_GEMM", "EMBEDDING_BAG", "KV_CACHE",
-           "QuantKV", "LANE"]
+           "KvCachePagedOp", "QGEMM", "FLOAT_GEMM", "EMBEDDING_BAG",
+           "KV_CACHE", "KV_CACHE_PAGED", "QuantKV", "LANE"]

@@ -36,8 +36,10 @@ POLICY_NAMES = ("log", "recompute", "correct", "abort")
 #: and float-GEMM ABFT adds training-path work — both are opt-in, so a
 #: plan like ``"*:policy=recompute"`` tunes the paper's serving operators
 #: without silently switching these on.  An explicit ``kv_cache:on`` (or a
-#: wildcard rule carrying ``on``/``off``) overrides.
-OPT_IN_OPS = ("float_gemm", "kv_cache")
+#: wildcard rule carrying ``on``/``off``) overrides.  The paged cache
+#: (``kv_cache_paged``) follows the same opt-in contract as the
+#: contiguous one — same representation change, same policy surface.
+OPT_IN_OPS = ("float_gemm", "kv_cache", "kv_cache_paged")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +165,37 @@ class ProtectionPlan:
     def from_dict(cls, d: dict) -> "ProtectionPlan":
         return cls(rules=tuple(OpRule(**r) for r in d.get("rules", ())),
                    name=d.get("name", ""))
+
+    @classmethod
+    def from_any(cls, spec, name: str = "") -> "ProtectionPlan":
+        """Resolve a plan from whatever a config hands us.
+
+        * a :class:`ProtectionPlan` passes through;
+        * a dict goes through :meth:`from_dict` (a bare list is treated
+          as the ``rules`` entry);
+        * a string starting with ``@`` names a JSON file holding any of
+          the above (or a compact plan string);
+        * any other string is the compact CLI form (:meth:`parse`).
+        """
+        if isinstance(spec, ProtectionPlan):
+            return spec
+        if isinstance(spec, dict):
+            return cls.from_dict(spec)
+        if isinstance(spec, (list, tuple)):
+            return cls.from_dict({"rules": list(spec), "name": name})
+        if isinstance(spec, str):
+            s = spec.strip()
+            if s.startswith("@"):
+                import json
+                import os
+                path = s[1:]
+                with open(path) as f:
+                    loaded = json.load(f)
+                base = os.path.splitext(os.path.basename(path))[0]
+                return cls.from_any(loaded, name=name or base)
+            return cls.parse(s, name=name)
+        raise TypeError(f"cannot build a ProtectionPlan from "
+                        f"{type(spec).__name__}")
 
     def describe(self) -> str:
         if not self.rules:

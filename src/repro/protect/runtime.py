@@ -34,7 +34,7 @@ def rule_for(ctx, op: str, name: str = "") -> ResolvedRule:
     # legacy Ctx flags (pre-plan behavior, byte-for-byte)
     if op == "float_gemm":
         return ResolvedRule(enabled=bool(getattr(ctx, "float_abft", False)))
-    if op == "kv_cache":
+    if op in ("kv_cache", "kv_cache_paged"):
         return ResolvedRule(enabled=False)
     return ResolvedRule(enabled=bool(getattr(ctx, "abft", True)))
 
@@ -86,7 +86,13 @@ def protected_call(op: str, encoded, *inputs, ctx=None,
     out, check = adapter(encoded, *inputs, rule=rule, **call_kwargs)
     if policy_name == "abort":
         jax.debug.callback(abort_if_errors, check.err_count)
-    return out, op_report(op, check.err_count)
+    # adapters whose one call covers a variable amount of verified state
+    # (e.g. pages touched by a paged KV read) report it via Check.aux so
+    # the checks counter prices verification work, not call count
+    n_checks = 1
+    if isinstance(check.aux, dict) and "n_checks" in check.aux:
+        n_checks = check.aux["n_checks"]
+    return out, op_report(op, check.err_count, checks=n_checks)
 
 
 def observe_metrics(metrics, *, source: str, step: int = 0,
@@ -136,3 +142,18 @@ def kv_rule(ctx, name: str = "attn") -> ResolvedRule:
                             rel_bound=r.rel_bound,
                             max_retries=r.max_retries)
     return r
+
+
+def paged_kv_rule(ctx, name: str = "attn") -> ResolvedRule:
+    """The kv_cache_paged rule with its policy forced to ``log``.
+
+    Page repair under recompute/abort is a host-side allocator action
+    (evict the flagged page, rebuild prompt pages via re-prefill, or
+    abort the owning request) — the serving engine applies it between
+    steps.  In-jit the op can only count, so the traced call always
+    logs; the plan's policy still decides what the engine does with the
+    flag."""
+    import dataclasses
+
+    r = rule_for(ctx, "kv_cache_paged", name)
+    return dataclasses.replace(r, policy="log")

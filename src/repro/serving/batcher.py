@@ -34,6 +34,12 @@ class Slot:
     generated: int = 0
     first_token_s: Optional[float] = None
     queue_wait_s: float = 0.0
+    #: prompt tokens this admission actually prefilled/quantized (the
+    #: engine refines it post-prefill: the contiguous path pays the full
+    #: bucket, the paged path only the non-shared pages) and the tokens
+    #: served from shared prefix pages instead
+    prefill_tokens: int = 0
+    shared_prefix_tokens: int = 0
 
 
 class ContinuousBatcher:
@@ -75,7 +81,8 @@ class ContinuousBatcher:
             req, enq_s = item
             idx = self._free.pop(0)
             slot = Slot(index=idx, request=req, admit_s=clock_s,
-                        queue_wait_s=max(0.0, clock_s - enq_s))
+                        queue_wait_s=max(0.0, clock_s - enq_s),
+                        prefill_tokens=req.prompt_len)
             self._active[idx] = slot
             admitted.append(slot)
         self.check_invariants()

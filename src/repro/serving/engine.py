@@ -61,11 +61,20 @@ class TenantSpec:
 
 @dataclasses.dataclass
 class FaultInjection:
-    """Flip one bit of one weight leaf before global step ``step``."""
+    """Flip one bit before global step ``step``.
+
+    ``target="weights"`` flips a bit of a plan-path-addressed weight leaf
+    (restored after the step unless ``persistent``).  ``target="kv"``
+    flips one int8 payload byte of a resident request's KV cache — a
+    memory-resident fault, inherently persistent until the row is
+    overwritten, the page evicted, or the cache dropped
+    (:meth:`ServingEngine.reset_state`); ``victim`` is ignored and the
+    flip location is drawn from ``seed``."""
     step: int
     victim: Optional[str] = None   # dotted-path pattern (core.inject)
     persistent: bool = False
     seed: int = 0
+    target: str = "weights"        # "weights" | "kv"
 
 
 def tenant_weights(tenants: Sequence[TenantSpec]) -> Dict[str, float]:
@@ -105,6 +114,12 @@ class _Lane:
         self.decode_fn = None
         self.insert_fn = None
         self.forward_fn = None         # dlrm one-shot lanes
+        # paged-KV lanes (engine fills these when paging is configured)
+        self.pager = None              # PagedKVManager
+        self.n_layers = 0
+        self.table_fn = None
+        self.reset_fn = None
+        self.scrub_fn = None
 
     def accepts(self, req: Request) -> bool:
         return req.tenant in self.tenants
@@ -114,6 +129,8 @@ class _Lane:
         self.cache = None
         self.tokens = None
         self.pos = None
+        if self.pager is not None:
+            self.pager.reset()
         return self.batcher.drain()
 
 
@@ -122,7 +139,7 @@ class ServingEngine:
                  n_slots: int = 4, max_prompt: int = 64,
                  max_new_tokens: int = 32, queue_depth: int = 0,
                  seed: int = 0, compute_dtype=None,
-                 dlrm_extras=None):
+                 dlrm_extras=None, paging=None):
         import jax
         import jax.numpy as jnp
 
@@ -153,6 +170,26 @@ class ServingEngine:
         #: Observability bundle for the CURRENT run (set by run(obs=...))
         self._obs = None
 
+        #: PagingConfig | None — paged, prefix-shared, per-page-checksummed
+        #: KV mode.  Prompts round up to page-multiple buckets, slots hold
+        #: page tables into a lane-shared pool, admission runs a
+        #: prefix-tree lookup, retire frees non-shared pages.
+        self.paging = paging
+        if paging is not None:
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"paged KV serves attention-only decode caches; "
+                    f"family {cfg.family!r} is not supported")
+            if cfg.meta_tokens:
+                raise ValueError("paged KV assumes positions start at 0 "
+                                 "(meta_tokens must be 0)")
+            p = paging.page_size
+            self._max_bucket = -(-max_prompt // p) * p
+            mp_per_slot = (self._max_bucket + max_new_tokens - 1) // p + 1
+            if mp_per_slot > paging.n_pages:
+                raise ValueError(
+                    f"pool of {paging.n_pages} pages cannot hold even one "
+                    f"slot's {mp_per_slot} pages")
         self.is_dlrm = cfg.family == "dlrm"
         if self.is_dlrm:
             from repro.configs.dlrm import EXTRAS
@@ -171,6 +208,8 @@ class ServingEngine:
             if cfg.family == "vlm":
                 extra += cfg.n_patches
             self.cache_len = max_prompt + max_new_tokens + extra
+            if paging is not None:
+                self.cache_len = self._max_bucket + max_new_tokens + extra
             self.model = build_model(cfg, max_pos=self.cache_len + 8)
             self.params = values_of(jax.jit(
                 lambda k: self.model.init(k, quant=True)
@@ -186,6 +225,12 @@ class ServingEngine:
                          plan=specs[0].resolved_plan(),
                          tenants=[t.name for t in specs],
                          n_slots=n_slots)
+            if paging is not None:
+                from repro.paging import PagedKVManager
+                p = paging.page_size
+                lane.pager = PagedKVManager(
+                    paging, n_slots,
+                    (self._max_bucket + max_new_tokens - 1) // p + 1)
             self._build_lane_fns(lane)
             self.lanes.append(lane)
         self._lane_of = {name: lane for lane in self.lanes
@@ -220,6 +265,57 @@ class ServingEngine:
                            compute_dtype=self._compute_dtype)
 
         @jax.jit
+        def decode(params, cache, tokens, pos):
+            (logits, new_cache), rep = decode_p(params, cache, tokens, pos)
+            tok = jnp.argmax(logits[..., :cfg.vocab],
+                             axis=-1).astype(jnp.int32)
+            return tok, new_cache, rep.as_metrics()
+
+        lane.decode_fn = decode
+
+        if self.paging is not None:
+            from repro.paging import (pack_prompt_pages, reset_pages,
+                                      scrub_cache)
+
+            # prefill compiles once per prompt bucket (cache_len static)
+            @functools.partial(jax.jit, static_argnums=(2,))
+            def prefill_paged(params, batch, cache_len):
+                (logits, cache), rep = prefill_p(params, batch,
+                                                 cache_len=cache_len)
+                tok = jnp.argmax(logits[..., :cfg.vocab],
+                                 axis=-1).astype(jnp.int32)
+                return tok, cache, rep.as_metrics()
+
+            @jax.jit
+            def insert_pages(cache, one, page_ids, table):
+                attn = cache["attn"]
+                k = pack_prompt_pages(attn["k"], one["attn"]["k"], page_ids)
+                v = pack_prompt_pages(attn["v"], one["attn"]["v"], page_ids)
+                return {**cache, "attn": {"k": k._replace(table=table),
+                                          "v": v._replace(table=table)}}
+
+            @jax.jit
+            def set_table(cache, table):
+                attn = cache["attn"]
+                return {**cache, "attn": {
+                    "k": attn["k"]._replace(table=table),
+                    "v": attn["v"]._replace(table=table)}}
+
+            @jax.jit
+            def reset_tail(cache, page_ids):
+                attn = cache["attn"]
+                return {**cache, "attn": {
+                    "k": reset_pages(attn["k"], page_ids),
+                    "v": reset_pages(attn["v"], page_ids)}}
+
+            lane.prefill_fn = prefill_paged
+            lane.insert_fn = insert_pages
+            lane.table_fn = set_table
+            lane.reset_fn = reset_tail
+            lane.scrub_fn = jax.jit(scrub_cache)
+            return
+
+        @jax.jit
         def prefill(params, batch):
             (logits, cache), rep = prefill_p(params, batch,
                                              cache_len=self.cache_len)
@@ -228,23 +324,33 @@ class ServingEngine:
             return tok, cache, rep.as_metrics()
 
         @jax.jit
-        def decode(params, cache, tokens, pos):
-            (logits, new_cache), rep = decode_p(params, cache, tokens, pos)
-            tok = jnp.argmax(logits[..., :cfg.vocab],
-                             axis=-1).astype(jnp.int32)
-            return tok, new_cache, rep.as_metrics()
-
-        @jax.jit
         def insert(full, one, slot):
             return jax.tree.map(
                 lambda f, o: jax.lax.dynamic_update_slice_in_dim(
                     f, o.astype(f.dtype), slot, axis=1), full, one)
 
         lane.prefill_fn = prefill
-        lane.decode_fn = decode
         lane.insert_fn = insert
 
     # ------------------------------ request payloads -------------------------
+
+    def _chat_tokens(self, req: Request, bucket: int,
+                     rng=None) -> np.ndarray:
+        """The request's deterministic prompt tokens, padded to ``bucket``.
+
+        A request carrying (prefix_seed, prefix_len) opens with the shared
+        system prompt — byte-identical across every request with the same
+        prefix seed, which is what the paged prefix tree keys on; the
+        suffix (and padding) comes from the request's own seed."""
+        cfg = self.cfg
+        rng = np.random.default_rng(req.seed) if rng is None else rng
+        pfx = min(int(req.prefix_len or 0), bucket)
+        if pfx > 0 and req.prefix_seed is not None:
+            head = np.random.default_rng(req.prefix_seed).integers(
+                0, cfg.vocab, pfx)
+            return np.concatenate(
+                [head, rng.integers(0, cfg.vocab, bucket - pfx)])
+        return rng.integers(0, cfg.vocab, bucket)
 
     def _chat_batch(self, req: Request) -> dict:
         import jax.numpy as jnp
@@ -252,7 +358,7 @@ class ServingEngine:
         bucket = self.max_prompt            # single prompt bucket
         rng = np.random.default_rng(req.seed)
         batch = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab, (1, bucket)), jnp.int32)}
+            self._chat_tokens(req, bucket, rng)[None, :], jnp.int32)}
         if cfg.family == "vlm":
             batch["patches"] = jnp.asarray(rng.standard_normal(
                 (1, cfg.n_patches, cfg.patch_dim)), jnp.float32)
@@ -295,6 +401,9 @@ class ServingEngine:
                 jax.block_until_ready(
                     lane.forward_fn(self.params, dense, bags))
                 continue
+            if lane.pager is not None:
+                self._warmup_paged(lane, dummy)
+                continue
             tok, cache1, _ = lane.prefill_fn(self.params,
                                              self._chat_batch(dummy))
             full = self._widened_cache(cache1, lane.n_slots)
@@ -305,6 +414,37 @@ class ServingEngine:
                 lane.decode_fn(self.params, full, toks, pos))
         self._warm = True
 
+    def _warmup_paged(self, lane: _Lane, dummy: Request) -> None:
+        """Compile the paged lane's steps against throwaway pool state
+        (the allocator/tree are untouched: slot 0's warmup pages live in
+        a synthetic table that is discarded afterwards).  Only the
+        ``max_prompt`` bucket's prefill/insert compile here; smaller
+        buckets compile lazily on first admission."""
+        import jax
+        import jax.numpy as jnp
+
+        p = self.paging.page_size
+        bucket = self._max_bucket
+        nc = bucket // p
+        batch = {"tokens": jnp.asarray(
+            self._chat_tokens(dummy, bucket)[None, :], jnp.int32)}
+        tok, cache1, _ = lane.prefill_fn(self.params, batch, bucket)
+        if lane.cache is None:
+            self._init_paged_cache(lane, cache1)
+        tb = np.full((lane.n_slots, lane.pager.max_pages), -1, np.int32)
+        tb[0, :nc + 1] = np.arange(nc + 1)
+        tdev = jnp.broadcast_to(jnp.asarray(tb),
+                                (lane.n_layers,) + tb.shape)
+        cache = lane.insert_fn(lane.cache, cache1,
+                               jnp.arange(nc, dtype=jnp.int32), tdev)
+        cache = lane.reset_fn(cache, self._reset_vec(lane, [nc]))
+        toks = jnp.zeros((lane.n_slots,), jnp.int32)
+        pos = jnp.full((lane.n_slots,), bucket, jnp.int32)
+        jax.block_until_ready(
+            lane.decode_fn(self.params, cache, toks, pos))
+        jax.block_until_ready(lane.scrub_fn(cache, pos))
+        jax.block_until_ready(lane.table_fn(cache, tdev))
+
     @staticmethod
     def _widened_cache(cache1, n_slots: int):
         import jax
@@ -313,6 +453,100 @@ class ServingEngine:
             lambda x: jnp.zeros((x.shape[0], n_slots) + x.shape[2:],
                                 x.dtype), cache1)
 
+    # ------------------------------ paged-KV state ---------------------------
+
+    def _init_paged_cache(self, lane: _Lane, cache1) -> None:
+        """Size the lane's page pools from the first prefill's cache
+        shapes and zero the decode-side state."""
+        import jax.numpy as jnp
+
+        from repro.core import QuantKV
+        from repro.paging import paged_pool
+
+        if set(cache1) != {"attn"}:
+            raise ValueError(f"paged KV expects an attention-only cache; "
+                             f"got entries {sorted(cache1)}")
+        leaf = cache1["attn"]["k"]
+        arr = leaf.q if isinstance(leaf, QuantKV) else leaf
+        ell, _, kvh, _, dh = arr.shape
+        lane.n_layers = ell
+        pg = self.paging
+        pool = paged_pool(pg.n_pages, kvh, pg.page_size, dh,
+                          lane.n_slots, lane.pager.max_pages, n_layers=ell)
+        lane.cache = {"attn": {"k": pool, "v": pool}}
+        lane.tokens = jnp.zeros((lane.n_slots,), jnp.int32)
+        lane.pos = jnp.zeros((lane.n_slots,), jnp.int32)
+
+    def _table_dev(self, lane: _Lane):
+        """The manager's host table broadcast to the stacked-layer shape
+        (one page id names the same pool row in every layer)."""
+        import jax.numpy as jnp
+        t = jnp.asarray(lane.pager.table)
+        return jnp.broadcast_to(t, (lane.n_layers,) + t.shape)
+
+    def _reset_vec(self, lane: _Lane, page_ids):
+        """Fixed-length page-id vector (sentinel-padded) so reset_pages
+        compiles once regardless of how many pages need zeroing."""
+        import jax.numpy as jnp
+        vec = np.full((lane.n_slots,), self.paging.n_pages, np.int32)
+        vec[:len(page_ids)] = page_ids
+        return jnp.asarray(vec)
+
+    def _bucket_of(self, req: Request) -> int:
+        p = self.paging.page_size
+        return min(self._max_bucket, -(-max(int(req.prompt_len), 1) // p) * p)
+
+    def _abort_slot(self, lane: _Lane, slot: Slot, telemetry: Telemetry):
+        """Fail ONE request (pool exhausted / unrebuildable page) and free
+        its slot + pages; the lane keeps serving."""
+        lane.pager.retire(slot.index)
+        lane.batcher.retire(slot.index)
+        self._record_slot(slot, telemetry, aborted=True)
+
+    def _publish_paging(self, lane: _Lane) -> None:
+        if self._obs is None or lane.pager is None:
+            return
+        st = lane.pager.stats()
+        g = self._obs.registry.gauge
+        g("repro_paging_pages_resident",
+          "allocated pages in the lane pool").set(
+              st["pages_resident"], lane=lane.key)
+        g("repro_paging_pages_free", "free pages in the lane pool").set(
+            st["pages_free"], lane=lane.key)
+        g("repro_paging_pages_shared",
+          "pages referenced by more than one holder").set(
+              st["pages_shared"], lane=lane.key)
+        g("repro_paging_pages_high_water",
+          "peak allocated pages since reset").set(
+              st["pages_high_water"], lane=lane.key)
+        g("repro_paging_prefix_hit_rate",
+          "prompt chunks served from shared pages").set(
+              st["prefix_hit_rate"], lane=lane.key)
+        g("repro_paging_page_evictions",
+          "pages evicted (LRU pressure + corrupt)").set(
+              st["page_evictions"], lane=lane.key)
+        g("repro_paging_page_rebuilds",
+          "prompt re-prefills after corrupt-page eviction").set(
+              st["page_rebuilds"], lane=lane.key)
+
+    def paging_stats(self) -> Dict[str, dict]:
+        """Per-lane paging stats + byte accounting (campaign metrics)."""
+        from repro.paging import pool_page_bytes
+        out = {}
+        for lane in self.lanes:
+            if lane.pager is None:
+                continue
+            st = lane.pager.stats()
+            if lane.cache is not None:
+                attn = lane.cache["attn"]
+                per_page = (pool_page_bytes(attn["k"])
+                            + pool_page_bytes(attn["v"]))
+                st["page_bytes"] = per_page
+                st["peak_resident_bytes"] = \
+                    st["pages_high_water"] * per_page
+            out[lane.key] = st
+        return out
+
     # ------------------------------ fault injection --------------------------
 
     def _apply_injection(self, inj: FaultInjection, telemetry: Telemetry):
@@ -320,6 +554,12 @@ class ServingEngine:
 
         from repro.core.inject import random_bitflip_live, victim_leaf_index
 
+        if inj.target == "kv":
+            self._apply_kv_injection(inj, telemetry)
+            return
+        if inj.target != "weights":
+            raise ValueError(f"unknown injection target {inj.target!r}; "
+                             f"have ('weights', 'kv')")
         leaves, treedef = jax.tree_util.tree_flatten(self.params)
         idx, path = victim_leaf_index(self.params, inj.victim)
         clean = leaves[idx]
@@ -336,6 +576,68 @@ class ServingEngine:
                 op=path, step=self.global_step, source="serving.engine",
                 kind="injection", t_s=self.clock_s,
                 attrs={"persistent": inj.persistent, "seed": inj.seed}))
+
+    def _apply_kv_injection(self, inj: FaultInjection,
+                            telemetry: Telemetry) -> bool:
+        """Flip one int8 KV payload bit of a resident request's prompt
+        region — paged lanes flip inside a mapped prompt page, contiguous
+        quantized lanes inside the prompt rows of the victim's slot.  The
+        flip is memory-resident (no restore entry): it persists until the
+        page is evicted/rebuilt or the cache is dropped.  Returns False
+        (and records nothing) when no lane holds flippable state."""
+        import jax.numpy as jnp
+
+        from repro.core import QuantKV
+
+        rng = np.random.default_rng(inj.seed)
+        lanes = [ln for ln in self.lanes
+                 if ln.cache is not None and ln.batcher.occupancy()
+                 and not self.is_dlrm]
+        if not lanes:
+            return False
+        lane = lanes[int(rng.integers(len(lanes)))]
+        slots = lane.batcher.active_slots()
+        slot = slots[int(rng.integers(len(slots)))]
+        pool_name = "k" if int(rng.integers(2)) == 0 else "v"
+        leaf = lane.cache["attn"][pool_name]
+        bit = int(rng.integers(8))
+        mask = jnp.int8((1 << bit) if bit < 7 else -128)
+        if lane.pager is not None:
+            chunks = [c for c in
+                      range(lane.pager.prompt_chunks[slot.index])
+                      if lane.pager.table[slot.index, c] >= 0]
+            if not chunks:
+                return False
+            chunk = chunks[int(rng.integers(len(chunks)))]
+            pid = int(lane.pager.table[slot.index, chunk])
+            ell, _, kvh, pgs, dh = leaf.q.shape
+            idx = (int(rng.integers(ell)), pid, int(rng.integers(kvh)),
+                   int(rng.integers(pgs)), int(rng.integers(dh)))
+            victim = (f"kv_page/{pool_name}/page{pid}"
+                      f"/l{idx[0]}h{idx[2]}r{idx[3]}d{idx[4]}b{bit}")
+        elif isinstance(leaf, QuantKV):
+            ell, _, kvh, _, dh = leaf.q.shape
+            row = int(rng.integers(min(slot.pos, self.max_prompt)))
+            idx = (int(rng.integers(ell)), slot.index,
+                   int(rng.integers(kvh)), row, int(rng.integers(dh)))
+            victim = (f"kv_row/{pool_name}/slot{slot.index}"
+                      f"/l{idx[0]}h{idx[2]}r{row}d{idx[4]}b{bit}")
+        else:
+            return False                  # bf16 cache: nothing checksummed
+        newq = leaf.q.at[idx].set(leaf.q[idx] ^ mask)
+        lane.cache = {**lane.cache, "attn": {
+            **lane.cache["attn"], pool_name: leaf._replace(q=newq)}}
+        telemetry.add_injection(InjectionRecord(
+            step=self.global_step, victim=victim, clock_s=self.clock_s,
+            persistent=True))
+        if self._obs is not None:
+            from repro.obs import FaultEvent
+            self._obs.bus.emit(FaultEvent(
+                op=victim, step=self.global_step, source="serving.engine",
+                kind="injection", t_s=self.clock_s,
+                attrs={"persistent": True, "seed": inj.seed,
+                       "target": "kv"}))
+        return True
 
     def _restore_injection(self, *, include_persistent: bool = False):
         """Undo applied injections in reverse application order —
@@ -371,7 +673,9 @@ class ServingEngine:
             first_token_s=slot.first_token_s, finish_s=self.clock_s,
             prompt_len=req.prompt_len, tokens_out=slot.generated,
             queue_wait_s=slot.queue_wait_s, aborted=aborted,
-            tokens=getattr(slot, "token_ids", None)))
+            tokens=getattr(slot, "token_ids", None),
+            prefill_tokens=slot.prefill_tokens,
+            shared_prefix_tokens=slot.shared_prefix_tokens))
 
     def _step_event(self, kind: str, lane: _Lane, dt: float, metrics,
                     telemetry: Telemetry, injected: bool = False,
@@ -422,6 +726,9 @@ class ServingEngine:
                     injected: bool):
         from repro.core.policy import is_fault_abort
 
+        if lane.pager is not None:
+            self._do_prefill_paged(lane, slot, telemetry, injected)
+            return
         req = slot.request
         try:
             (tok, cache1, metrics), dt = self._timed(
@@ -448,13 +755,72 @@ class ServingEngine:
         slot.generated = 1
         slot.first_token_s = self.clock_s
         slot.token_ids = [int(tok[0])]
+        slot.prefill_tokens = self.max_prompt   # full fixed-slot bucket
         self._step_event("prefill", lane, dt, metrics, telemetry,
                          injected=injected, slot_rids=(req.rid,))
+
+    def _do_prefill_paged(self, lane: _Lane, slot: Slot,
+                          telemetry: Telemetry, injected: bool):
+        """Paged admission: prefix-tree lookup, page-bucketed prefill,
+        pack the non-shared pages, allocate the first decode-tail page."""
+        import jax.numpy as jnp
+
+        from repro.core.policy import is_fault_abort
+
+        req = slot.request
+        pager = lane.pager
+        p = self.paging.page_size
+        bucket = self._bucket_of(req)
+        tokens = self._chat_tokens(req, bucket)
+        plan = pager.admit(slot.index, tokens)
+        if not plan.ok:                      # pool exhausted: shed it
+            lane.batcher.retire(slot.index)
+            self._record_slot(slot, telemetry, aborted=True)
+            return
+        batch = {"tokens": jnp.asarray(tokens[None, :], jnp.int32)}
+        try:
+            (tok, cache1, metrics), dt = self._timed(
+                lane.prefill_fn, self.params, batch, bucket)
+        except Exception as e:          # noqa: BLE001 - abort policy only
+            if not is_fault_abort(e):
+                raise
+            self.clock_s += 1e-6
+            self._abort_slot(lane, slot, telemetry)
+            self._step_event("prefill", lane, 0.0, None, telemetry,
+                             injected=injected, errors_override=1,
+                             slot_rids=(req.rid,))
+            return
+        if lane.cache is None:
+            self._init_paged_cache(lane, cache1)
+        tail = pager.decode_page(slot.index, bucket // p)
+        if tail is None:
+            self._abort_slot(lane, slot, telemetry)
+            return
+        lane.cache = lane.insert_fn(lane.cache, cache1,
+                                    jnp.asarray(plan.page_ids),
+                                    self._table_dev(lane))
+        lane.cache = lane.reset_fn(lane.cache, self._reset_vec(lane,
+                                                               [tail]))
+        lane.tokens = lane.tokens.at[slot.index].set(tok[0])
+        lane.pos = lane.pos.at[slot.index].set(bucket)
+        slot.pos = bucket
+        slot.generated = 1
+        slot.first_token_s = self.clock_s
+        slot.token_ids = [int(tok[0])]
+        slot.bucket = bucket
+        slot.prefill_tokens, slot.shared_prefix_tokens = plan.tokens(p)
+        self._step_event("prefill", lane, dt, metrics, telemetry,
+                         injected=injected, slot_rids=(req.rid,))
+        self._publish_paging(lane)
 
     def _do_decode(self, lane: _Lane, telemetry: Telemetry,
                    injected: bool):
         from repro.core.policy import is_fault_abort
 
+        if lane.pager is not None:
+            self._paged_pre_decode(lane, telemetry)
+            if not lane.batcher.occupancy():
+                return
         resident = tuple(s.request.rid
                          for s in lane.batcher.active_slots())
         try:
@@ -476,10 +842,100 @@ class ServingEngine:
             slot.generated += 1
             slot.pos += 1
             slot.token_ids.append(int(tok_host[slot.index]))
-        self._step_event("decode", lane, dt, metrics, telemetry,
-                         injected=injected, slot_rids=resident)
+        errors = self._step_event("decode", lane, dt, metrics, telemetry,
+                                  injected=injected, slot_rids=resident)
+        if lane.pager is not None and errors > 0:
+            policy = lane.plan.resolve("kv_cache_paged", "attn").policy
+            if int(metrics.get("abft/kv_cache_paged_errors", 0)) > 0 \
+                    and policy != "log":
+                self._paged_repair(lane, telemetry, policy)
         for slot in lane.batcher.retire_finished():
+            if lane.pager is not None:
+                lane.pager.retire(slot.index)
             self._record_slot(slot, telemetry)
+        self._publish_paging(lane)
+
+    def _paged_pre_decode(self, lane: _Lane, telemetry: Telemetry):
+        """Before a paged decode step: allocate decode-tail pages for
+        slots crossing a page boundary (aborting the owner if the pool is
+        truly full), zero them, and push the current page table."""
+        pager = lane.pager
+        p = self.paging.page_size
+        fresh = []
+        for slot in list(lane.batcher.active_slots()):
+            chunk = slot.pos // p
+            if slot.pos % p == 0 and pager.table[slot.index, chunk] < 0:
+                pid = pager.decode_page(slot.index, chunk)
+                if pid is None:
+                    self._abort_slot(lane, slot, telemetry)
+                    continue
+                fresh.append(pid)
+        if not lane.batcher.occupancy():
+            return
+        if fresh:
+            lane.cache = lane.reset_fn(lane.cache,
+                                       self._reset_vec(lane, fresh))
+        lane.cache = lane.table_fn(lane.cache, self._table_dev(lane))
+
+    def _paged_repair(self, lane: _Lane, telemetry: Telemetry,
+                      policy: str):
+        """Detect→act for paged KV, host-side: scrub the pool, map the
+        flagged (slot, chunk) pairs to pages, then per the plan policy
+        evict + rebuild shared/prompt pages via re-prefill
+        (``recompute``/``correct``) or abort the owning request
+        (``abort`` — and always for an unrebuildable decode-tail page).
+        Only the touched requests pay; the lane keeps serving."""
+        pager = lane.pager
+        flags = lane.scrub_fn(lane.cache, lane.pos)
+        bad = np.asarray(flags["k"]) + np.asarray(flags["v"])
+        for slot in list(lane.batcher.active_slots()):
+            chunks = [int(c) for c in np.nonzero(bad[slot.index])[0]]
+            if not chunks:
+                continue
+            rebuild = policy != "abort"
+            if rebuild:
+                for c in chunks:
+                    if not pager.evict_corrupt(slot.index, c):
+                        rebuild = False      # corrupt decode-tail page
+            if not (rebuild and self._rebuild_prompt(lane, slot,
+                                                     telemetry)):
+                self._abort_slot(lane, slot, telemetry)
+        if lane.batcher.occupancy():
+            lane.cache = lane.table_fn(lane.cache, self._table_dev(lane))
+
+    def _rebuild_prompt(self, lane: _Lane, slot: Slot,
+                        telemetry: Telemetry) -> bool:
+        """Re-prefill a slot's prompt onto fresh pages after a corrupt
+        prompt page was evicted; decode-tail pages (the generated KV)
+        survive untouched.  Returns False when the pool cannot hold the
+        rebuilt pages or the re-prefill itself aborts."""
+        import jax.numpy as jnp
+
+        from repro.core.policy import is_fault_abort
+
+        pager = lane.pager
+        req = slot.request
+        bucket = slot.bucket
+        tokens = self._chat_tokens(req, bucket)
+        pager.release_prompt(slot.index)
+        plan = pager.readmit(slot.index, tokens)
+        if not plan.ok:
+            return False
+        batch = {"tokens": jnp.asarray(tokens[None, :], jnp.int32)}
+        try:
+            (_, cache1, metrics), dt = self._timed(
+                lane.prefill_fn, self.params, batch, bucket)
+        except Exception as e:          # noqa: BLE001 - abort policy only
+            if not is_fault_abort(e):
+                raise
+            self.clock_s += 1e-6
+            return False
+        lane.cache = lane.insert_fn(lane.cache, cache1,
+                                    jnp.asarray(plan.page_ids),
+                                    self._table_dev(lane))
+        self._step_event("rebuild", lane, dt, metrics, telemetry,
+                         slot_rids=(req.rid,))
+        return True
 
     def _do_dlrm(self, lane: _Lane, slot_like: Slot, telemetry: Telemetry,
                  injected: bool):
@@ -596,6 +1052,8 @@ class ServingEngine:
                         self._do_prefill(lane, slot, telemetry,
                                          injected_now)
                 for slot in lane.batcher.retire_finished():
+                    if lane.pager is not None:
+                        lane.pager.retire(slot.index)
                     self._record_slot(slot, telemetry)
 
             # 3. one decode step per lane with active slots

@@ -98,8 +98,10 @@ def _tenant_specs(tenants=DEFAULT_TENANTS):
     from repro.protect import ProtectionPlan
     from repro.serving.engine import TenantSpec
 
+    # from_any: compact strings, plan dicts, and @path.json all work —
+    # the campaign CLI's --plan override passes through unparsed
     return [TenantSpec(name=n, weight=w,
-                       plan=ProtectionPlan.parse(p, name=n))
+                       plan=ProtectionPlan.from_any(p, name=n))
             for n, w, p in tenants]
 
 

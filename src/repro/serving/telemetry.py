@@ -26,7 +26,8 @@ PCTS = (50.0, 95.0, 99.0)
 
 #: bump when to_dict() gains/renames fields — the serve CLI --json output
 #: and the soak artifacts carry this so downstream parsers can dispatch
-TELEMETRY_SCHEMA_VERSION = 1
+#: (v2: per-request/per-tenant prefill_tokens + shared_prefix_tokens)
+TELEMETRY_SCHEMA_VERSION = 2
 
 
 def percentiles_ms(xs_s: List[float]) -> Dict[str, float]:
@@ -64,6 +65,11 @@ class RequestRecord:
     aborted: bool = False
     rejected: bool = False               # shed at the admission queue
     tokens: Optional[List[int]] = None   # emitted ids (soak ground truth)
+    #: prompt tokens this admission actually quantized at prefill vs
+    #: served from already-resident shared prefix pages (paged KV lanes;
+    #: contiguous lanes report the full bucket and zero shared)
+    prefill_tokens: int = 0
+    shared_prefix_tokens: int = 0
     #: flagged steps this request was resident in a slot for (attribution
     #: runs in finalize — a fault blames the requests it touched, not
     #: just the step)
@@ -208,6 +214,9 @@ class Telemetry:
             "aborted": sum(1 for r in served if r.aborted),
             "rejected": sum(1 for r in recs if r.rejected),
             "tokens_out": sum(r.tokens_out for r in recs),
+            "prefill_tokens": sum(r.prefill_tokens for r in served),
+            "shared_prefix_tokens": sum(
+                r.shared_prefix_tokens for r in served),
             "suspect": sum(1 for r in served if r.suspect),
             "detections": sum(r.detections for r in served),
             "ttft_ms": percentiles_ms(ttft),

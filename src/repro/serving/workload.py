@@ -38,6 +38,13 @@ class Request:
     max_new_tokens: int = 16
     seed: int = 0
     payload: Optional[dict] = None
+    #: shared system-prompt prefix: the first ``prefix_len`` prompt tokens
+    #: are drawn from ``prefix_seed`` instead of ``seed``, so every
+    #: request carrying the same (prefix_seed, prefix_len) opens with
+    #: byte-identical tokens — the paged KV cache's prefix tree serves
+    #: those pages from shared, already-checksummed storage
+    prefix_len: int = 0
+    prefix_seed: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in ("chat", "dlrm"):
@@ -122,18 +129,28 @@ def chat_stream(n: int, *, tenants: Dict[str, float], rate_rps: float = 20.0,
                 mean_prompt: int = 32, max_prompt: int = 64,
                 mean_output: int = 12, max_output: int = 32,
                 trace: Optional[Sequence[float]] = None,
-                burst_size: int = 8) -> List[Request]:
-    """LM chat request stream with sampled prompt/output lengths."""
+                burst_size: int = 8, prefix_len: int = 0,
+                prefix_seed: Optional[int] = None) -> List[Request]:
+    """LM chat request stream with sampled prompt/output lengths.
+
+    ``prefix_len``/``prefix_seed`` give every request the same opening
+    system prompt (prompt lengths are floored at ``prefix_len`` so the
+    prefix is always fully present) — the workload shape that makes the
+    paged KV cache's prefix sharing measurable."""
     rng = np.random.default_rng(np.random.SeedSequence([seed, 0xC4A7]))
     times = make_arrivals(arrival, rate_rps, n, rng, trace=trace,
                           burst_size=burst_size)
     who = sample_tenants(tenants, n, rng)
     plens = _clipped_lognormal(rng, mean_prompt, 0.4, 4, max_prompt, n)
     olens = _clipped_lognormal(rng, mean_output, 0.5, 1, max_output, n)
+    if prefix_len > 0:
+        plens = np.maximum(plens, min(prefix_len, max_prompt))
     return [Request(rid=i, tenant=who[i], arrival_s=float(times[i]),
                     kind="chat", prompt_len=int(plens[i]),
                     max_new_tokens=int(olens[i]),
-                    seed=int(rng.integers(0, 2**31 - 1)))
+                    seed=int(rng.integers(0, 2**31 - 1)),
+                    prefix_len=prefix_len if prefix_seed is not None else 0,
+                    prefix_seed=prefix_seed)
             for i in range(n)]
 
 

@@ -146,3 +146,77 @@ def test_prop_row_localization(seed):
     err_rows, _ = ag.verify_rows(corrupted[:, :10], corrupted[:, 10])
     assert bool(err_rows[i])
     assert int(err_rows.sum()) == 1
+
+
+# ------------------------- weight-flip correction ---------------------------
+# (B carries two encodings: the packed mod-127 row checksum plus exact
+# int32 column sums.  A single flipped weight is localized to (k0, j0)
+# with its exact delta and C repaired without recomputing anything.)
+
+def _weight_flip_case(rng, m=4, k=16, n=12):
+    a, b = _rand_ab(rng, m, k, n)
+    packed = ag.pack_encoded_b(b)
+    colsum = ag.encode_weight_colsum(b)
+    want = (np.asarray(a, np.int64) @ np.asarray(b, np.int64)).astype(
+        np.int32)
+    return a, packed, colsum, want
+
+
+def _c_of(a, packed, n):
+    return jnp.asarray(np.asarray(a, np.int64)
+                       @ np.asarray(packed)[:, :n].astype(np.int64),
+                       jnp.int32)
+
+
+def test_correct_weight_flip_repairs_payload_flip(rng):
+    a, packed, colsum, want = _weight_flip_case(rng)
+    bad = np.asarray(packed).copy()
+    bad[5, 3] ^= np.int8(0x04)
+    bad = jnp.asarray(bad)
+    fixed, applied = ag.correct_weight_flip(_c_of(a, bad, 12), a, bad,
+                                            colsum)
+    assert bool(applied)
+    np.testing.assert_array_equal(np.asarray(fixed), want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 7))
+def test_correct_weight_flip_any_bit_property(seed, bit):
+    """Every single-bit payload flip is repaired exactly: the int8 delta
+    (+-2^b) is never 0 mod 127, so the row residue always flags k0."""
+    rng = np.random.default_rng(seed)
+    a, packed, colsum, want = _weight_flip_case(rng, m=3, k=12, n=8)
+    bad = np.asarray(packed).copy()
+    k0, j0 = int(rng.integers(12)), int(rng.integers(8))
+    bad[k0, j0] ^= np.int8(-128) if bit == 7 else np.int8(1 << bit)
+    bad = jnp.asarray(bad)
+    fixed, applied = ag.correct_weight_flip(_c_of(a, bad, 8), a, bad,
+                                            colsum)
+    assert bool(applied)
+    np.testing.assert_array_equal(np.asarray(fixed), want)
+
+
+def test_correct_weight_flip_declines_outside_single_error_model(rng):
+    a, packed, colsum, want = _weight_flip_case(rng, m=2, k=10, n=6)
+    # clean B: nothing flagged, C untouched
+    c = _c_of(a, packed, 6)
+    fixed, applied = ag.correct_weight_flip(c, a, packed, colsum)
+    assert not bool(applied)
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(c))
+    # two flips in different rows/columns: not the single-error model
+    two = np.asarray(packed).copy()
+    two[1, 2] ^= np.int8(1)
+    two[4, 5] ^= np.int8(2)
+    two = jnp.asarray(two)
+    c2 = _c_of(a, two, 6)
+    fixed, applied = ag.correct_weight_flip(c2, a, two, colsum)
+    assert not bool(applied)
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(c2))
+    # a flip in the checksum lane flags a row but no column: declined,
+    # and the (clean-payload) product stays untouched
+    lane = np.asarray(packed).copy()
+    lane[3, 6] ^= np.int8(1)
+    lane = jnp.asarray(lane)
+    fixed, applied = ag.correct_weight_flip(c, a, lane, colsum)
+    assert not bool(applied)
+    np.testing.assert_array_equal(np.asarray(fixed), want)

@@ -92,6 +92,69 @@ def test_attention_matches_bf16_reference():
                                atol=0.05, rtol=0.05)
 
 
+def test_quantize_constant_rows_are_exact_and_verify():
+    """Degenerate rows (zero span) hit the 1e-12 span floor: the affine
+    params must stay finite, roundtrip exact, and the checksum clean."""
+    for fill in (0.0, -3.25, 7.5):
+        x = jnp.full((1, 2, 4, 16), fill, jnp.float32)
+        kv = quantize_kv_rows(x)
+        assert np.isfinite(np.asarray(kv.alpha)).all()
+        assert np.isfinite(np.asarray(kv.beta)).all()
+        _, errs = verify_kv(kv)
+        assert int(errs) == 0
+        np.testing.assert_allclose(
+            np.asarray(dequantize_kv(kv, jnp.float32)), fill, atol=1e-5)
+
+
+def test_quantize_extreme_scales_roundtrip():
+    """Rows spanning ~1e-6 .. ~1e6 keep the per-row relative error bound
+    (per-row affine params make the bound scale-free)."""
+    rng = np.random.default_rng(9)
+    base = rng.standard_normal((1, 1, 6, 32)).astype(np.float32)
+    scales = np.asarray([1e-6, 1e-2, 1.0, 1e2, 1e4, 1e6],
+                        np.float32)[None, None, :, None]
+    x = jnp.asarray(base * scales)
+    kv = quantize_kv_rows(x)
+    back = np.asarray(dequantize_kv(kv, jnp.float32))
+    span = np.asarray(x).max(-1) - np.asarray(x).min(-1)
+    err = np.abs(back - np.asarray(x)).max(-1)
+    assert (err <= span / 255.0 * 0.51 + 1e-6).all()
+    _, errs = verify_kv(kv)
+    assert int(errs) == 0
+
+
+def test_update_row_overwrite_keeps_checksum_consistent():
+    """Overwriting an already-written position must replace the rowsum,
+    not accumulate it — repeated decode at one slot stays verifiable."""
+    b, kvh, s, dh = 1, 2, 8, 16
+    kv = quantize_kv_rows(jax.random.normal(jax.random.key(8),
+                                            (b, kvh, s, dh)))
+    pos = jnp.asarray([4], jnp.int32)
+    for key in (10, 11):
+        new = jax.random.normal(jax.random.key(key), (b, kvh, dh))
+        kv = update_kv_row(kv, jnp.arange(b), pos, new)
+        _, errs = verify_kv(kv)
+        assert int(errs) == 0
+    np.testing.assert_allclose(
+        np.asarray(dequantize_kv(kv, jnp.float32))[0, :, 4],
+        np.asarray(new)[0], atol=0.02)
+
+
+def test_alpha_corruption_changes_values_not_checksum():
+    """The rowsum only covers the int8 payload: corrupt affine params
+    shift dequantized values without tripping verify_kv.  This documents
+    the scheme's boundary (the paper checksums the quantized payload)."""
+    x = jax.random.normal(jax.random.key(12), (1, 1, 4, 8))
+    kv = quantize_kv_rows(x)
+    alpha = np.asarray(kv.alpha).copy()
+    alpha[0, 0, 2] *= 4.0
+    bad = QuantKV(kv.q, jnp.asarray(alpha), kv.beta, kv.rowsum)
+    _, errs = verify_kv(bad)
+    assert int(errs) == 0                      # payload checksum silent
+    assert not np.allclose(np.asarray(dequantize_kv(bad, jnp.float32)),
+                           np.asarray(dequantize_kv(kv, jnp.float32)))
+
+
 def test_attention_flags_corrupted_cache():
     b, n_heads, n_kv, s, dh = 1, 4, 2, 16, 8
     kv_k = quantize_kv_rows(jax.random.normal(jax.random.key(5),

@@ -48,6 +48,26 @@ SHARD_FIELDS = {"shards", "collective_verified", "shard_detections"}
 #: the fields --diff actually compares — must stay inside CORE
 DIFF_READS = {"detection_rate", "fp_rate", "overhead"}
 
+#: serving-engine paging cells (``plan.kind``) emit engine telemetry
+#: instead of executor CellMetrics; pin the fields the differ and the
+#: CI ``paging-smoke`` acceptance gate read so a rename breaks here
+#: first.  Engine columns are additive, so no upper bound.
+PAGING_FIELDS = {
+    "parity": DIFF_READS | {
+        "samples", "detected", "escapes", "escape_rate",
+        "clean_samples", "false_positives", "completed",
+        "parity_ok", "verify_ok", "bytes_ok",
+        "pages_verified_per_token", "contig_rows_verified_per_token",
+        "peak_resident_kv_bytes", "fixed_slot_kv_bytes",
+        "prefix_hit_rate",
+    },
+    "rebuild": DIFF_READS | {
+        "samples", "detected", "escapes", "escape_rate",
+        "clean_samples", "false_positives", "completed", "aborted",
+        "rebuild_ok", "page_rebuilds",
+    },
+}
+
 
 def test_cellmetrics_field_set_is_exactly_the_golden_schema():
     names = {f.name for f in dataclasses.fields(CellMetrics)}
@@ -78,10 +98,31 @@ def test_committed_baselines_carry_core_schema(path):
     full = CORE_FIELDS | BREAKDOWN_FIELDS | SOAK_FIELDS | SHARD_FIELDS
     for c in art["cells"]:
         keys = set(c["metrics"])
+        kind = c["plan"].get("kind")
+        if kind in PAGING_FIELDS:
+            assert PAGING_FIELDS[kind] <= keys, \
+                (c["cell_id"], PAGING_FIELDS[kind] - keys)
+            continue
         assert CORE_FIELDS <= keys, (c["cell_id"], CORE_FIELDS - keys)
         assert keys <= full, (c["cell_id"], keys - full)
         # must round-trip: --diff and CI assertions load through this
         CellMetrics.from_dict(c["metrics"])
+
+
+def test_paging_baseline_carries_claim_and_diff_fields():
+    art = load_artifact(os.path.join(
+        BASELINE_DIR, "BENCH_campaign_paging_quick.json"))
+    kinds = {c["plan"]["kind"]: c["metrics"] for c in art["cells"]}
+    assert set(kinds) == set(PAGING_FIELDS)
+    # the committed baseline must witness the three paging claims the
+    # CI gate asserts on fresh runs — a stale/failing baseline would
+    # make the --diff gate compare against a broken reference
+    par, reb = kinds["parity"], kinds["rebuild"]
+    assert par["parity_ok"] and par["verify_ok"] and par["bytes_ok"]
+    assert par["pages_verified_per_token"] < \
+        par["contig_rows_verified_per_token"]
+    assert par["peak_resident_kv_bytes"] < par["fixed_slot_kv_bytes"]
+    assert reb["rebuild_ok"] and reb["page_rebuilds"] >= 1
 
 
 def test_multidevice_baseline_carries_shard_and_soak_columns():

@@ -1,0 +1,385 @@
+"""repro.paging: allocator, prefix tree, page pools, manager, and the
+paged serving engine (prefix sharing, verify-on-touch, detect->rebuild)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abft_kvcache import quantize_kv_rows
+from repro.paging import (AdmitPlan, PageAllocator, PagedKVManager,
+                          PagingConfig, PrefixTree, attend_paged,
+                          pack_prompt_pages, page_errors, paged_append,
+                          paged_pool, pool_page_bytes, reset_pages,
+                          scrub_cache)
+from repro.paging.prefixtree import chunk_keys
+
+
+# ------------------------------ allocator -----------------------------------
+
+def test_allocator_alloc_release_refcount():
+    al = PageAllocator(4)
+    a, b = al.alloc(), al.alloc()
+    assert {a, b} <= {0, 1, 2, 3} and a != b
+    assert al.used == 2 and al.free_count == 2 and al.high_water == 2
+    al.retain(a)
+    assert al.refcount(a) == 2 and al.shared_count == 1
+    assert not al.release(a)          # one ref left: not freed
+    assert al.release(a)              # freed now
+    assert al.used == 1 and al.free_count == 3
+
+
+def test_allocator_exhaustion_and_reset():
+    al = PageAllocator(2)
+    assert al.alloc() is not None and al.alloc() is not None
+    assert al.alloc() is None
+    al.reset()
+    assert al.used == 0 and al.free_count == 2 and al.high_water == 0
+
+
+# ------------------------------ prefix tree ---------------------------------
+
+def test_prefix_tree_match_insert_and_chunk_keys():
+    toks = np.arange(16, dtype=np.int64)
+    keys = chunk_keys(toks, 4)
+    assert len(keys) == 4
+    assert chunk_keys(toks, 4) == keys            # deterministic
+    tree = PrefixTree()
+    parent = None
+    for i, k in enumerate(keys[:3]):
+        parent = tree.insert(parent, k, page_id=10 + i)
+    hit = tree.match(keys)
+    assert [n.page_id for n in hit] == [10, 11, 12]
+    # divergent suffix only matches the shared head
+    other = chunk_keys(np.concatenate([toks[:8], toks[:8] + 99]), 4)
+    assert [n.page_id for n in tree.match(other)] == [10, 11]
+
+
+def test_prefix_tree_evict_page_drops_descendants():
+    tree = PrefixTree()
+    keys = chunk_keys(np.arange(12, dtype=np.int64), 4)
+    parent = None
+    for i, k in enumerate(keys):
+        parent = tree.insert(parent, k, page_id=i)
+    freed = tree.evict_page(1)        # middle of the chain
+    assert sorted(freed) == [1, 2]    # the page and its descendant
+    assert [n.page_id for n in tree.match(keys)] == [0]
+
+
+def test_prefix_tree_lru_evicts_leaves_first():
+    tree = PrefixTree()
+    keys = chunk_keys(np.arange(8, dtype=np.int64), 4)
+    parent = tree.insert(None, keys[0], page_id=0)
+    tree.insert(parent, keys[1], page_id=1)
+    assert tree.evict_lru() == 1      # leaf before its parent
+    assert tree.evict_lru() == 0
+    assert tree.evict_lru() is None
+
+
+# ------------------------------ page pools ----------------------------------
+
+def _packed_pool(rng, *, ell=2, kv=2, p=4, dh=8, nc=3, n_pages=8,
+                 n_slots=2, max_pages=6):
+    """A pool with one slot's prompt packed into pages [0..nc)."""
+    pool = paged_pool(n_pages, kv, p, dh, n_slots, max_pages,
+                      n_layers=ell)
+    src = jnp.asarray(rng.standard_normal((ell, 1, kv, nc * p, dh)),
+                      jnp.float32)
+    pool = pack_prompt_pages(pool, src, jnp.arange(nc, dtype=jnp.int32))
+    tbl = np.full((n_slots, max_pages), -1, np.int32)
+    tbl[0, :nc] = np.arange(nc)
+    pool = pool._replace(table=jnp.broadcast_to(
+        jnp.asarray(tbl), (ell,) + tbl.shape))
+    return pool, src
+
+
+def test_pack_then_verify_clean_and_detects_flip():
+    rng = np.random.default_rng(0)
+    pool, _ = _packed_pool(rng)
+    pos = jnp.asarray([11, 0], jnp.int32)
+    per_layer = jax.vmap(page_errors, in_axes=(0, None))
+    assert int(jnp.sum(per_layer(pool, pos))) == 0
+    q = np.array(pool.q)
+    q[1, 2, 0, 1, 3] ^= 0x08          # layer 1, page 2, one payload bit
+    bad = pool._replace(q=jnp.asarray(q))
+    errs = np.asarray(jnp.sum(per_layer(bad, pos), axis=0))
+    assert errs[0, 2] == 1 and errs.sum() == 1   # exact (slot, chunk)
+
+
+def test_verify_on_touch_masks_beyond_frontier():
+    rng = np.random.default_rng(1)
+    pool, _ = _packed_pool(rng)
+    q = np.array(pool.q)
+    q[0, 2, 0, 1, 0] ^= 0x20          # corrupt chunk 2 (rows 8..11)
+    bad = pool._replace(q=jnp.asarray(q))
+    per_layer = jax.vmap(page_errors, in_axes=(0, None))
+    # frontier inside chunk 1: page 2 untouched, no flag
+    assert int(jnp.sum(per_layer(bad, jnp.asarray([5, 0])))) == 0
+    # frontier reaches chunk 2: flagged
+    assert int(jnp.sum(per_layer(bad, jnp.asarray([8, 0])))) == 1
+
+
+def test_paged_append_maintains_pagesum_and_drops_unmapped():
+    rng = np.random.default_rng(2)
+    pool, _ = _packed_pool(rng)
+    layer0 = jax.tree.map(lambda x: x[0], pool)
+    # map a fresh (zeroed) tail page for slot 0's decode chunk 3
+    tbl = np.array(layer0.table)
+    tbl[0, 3] = 3
+    layer0 = layer0._replace(table=jnp.asarray(tbl))
+    new = jnp.asarray(rng.standard_normal((2, 2, 8)), jnp.float32)
+    # slot 0 appends at pos 12 (chunk 3, offset 0); slot 1 is unmapped
+    pos = jnp.asarray([12, 12], jnp.int32)
+    out = paged_append(layer0, pos, new)
+    # pagesum tracked the append incrementally: frontier verifies clean
+    assert int(jnp.sum(page_errors(out, pos))) == 0
+    got = np.asarray(out.q[3, :, 0])
+    want = np.asarray(quantize_kv_rows(new).q[0])
+    np.testing.assert_array_equal(got, want)
+    # unmapped slot's write was dropped: prompt pages untouched
+    np.testing.assert_array_equal(np.asarray(out.q)[:3],
+                                  np.asarray(layer0.q)[:3])
+
+
+def test_attend_paged_matches_contiguous_quantized():
+    from repro.core.abft_kvcache import attend_quantized
+
+    rng = np.random.default_rng(3)
+    ell, kv, p, dh, nc = 1, 2, 4, 16, 4
+    n_heads, s = 4, nc * p
+    kf = rng.standard_normal((1, 1, kv, s, dh)).astype(np.float32)
+    vf = rng.standard_normal((1, 1, kv, s, dh)).astype(np.float32)
+    pk = paged_pool(8, kv, p, dh, 1, nc, n_layers=ell)
+    pv = paged_pool(8, kv, p, dh, 1, nc, n_layers=ell)
+    ids = jnp.asarray([3, 1, 4, 0], jnp.int32)    # scrambled page order
+    pk = pack_prompt_pages(pk, jnp.asarray(kf), ids)
+    pv = pack_prompt_pages(pv, jnp.asarray(vf), ids)
+    tbl = jnp.broadcast_to(ids[None, :], (1, nc))[None]
+    pk, pv = pk._replace(table=tbl), pv._replace(table=tbl)
+
+    q = jnp.asarray(rng.standard_normal((1, n_heads, dh)), jnp.float32)
+    pos = jnp.asarray([s - 2], jnp.int32)
+    out, errs, pages = attend_paged(
+        q, jax.tree.map(lambda x: x[0], pk), jax.tree.map(lambda x: x[0], pv),
+        pos, n_heads=n_heads, n_kv=kv)
+    assert int(errs) == 0
+    assert int(pages) == 2 * nc       # k + v pools, all pages touched
+    ref, ref_errs = attend_quantized(
+        q, quantize_kv_rows(jnp.asarray(kf[:, 0].reshape(1, kv, s, dh))),
+        quantize_kv_rows(jnp.asarray(vf[:, 0].reshape(1, kv, s, dh))),
+        pos, n_heads=n_heads, n_kv=kv)
+    assert int(ref_errs) == 0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_scrub_cache_sums_layers_and_pool_page_bytes():
+    rng = np.random.default_rng(4)
+    pool, _ = _packed_pool(rng)
+    cache = {"attn": {"k": pool, "v": pool}}
+    flags = scrub_cache(cache, jnp.asarray([11, 0], jnp.int32))
+    assert int(jnp.sum(flags["k"])) == 0 and int(jnp.sum(flags["v"])) == 0
+    q = np.array(pool.q)
+    q[0, 1, 0, 0, 0] ^= 0x01
+    bad = {"attn": {"k": pool._replace(q=jnp.asarray(q)), "v": pool}}
+    flags = scrub_cache(bad, jnp.asarray([11, 0], jnp.int32))
+    assert int(np.asarray(flags["k"])[0, 1]) == 1
+    assert int(jnp.sum(flags["v"])) == 0
+    # per-page byte accounting: q + alpha + beta + pagesum, per layer
+    ell, kv, p, dh = pool.q.shape[0], pool.q.shape[2], pool.q.shape[3], \
+        pool.q.shape[4]
+    want = ell * kv * (p * dh + 4 * p + 4 * p + 4)
+    assert pool_page_bytes(pool) == want
+
+
+# ------------------------------ manager -------------------------------------
+
+def _mgr(n_pages=12, n_slots=2, max_pages=6, p=4):
+    return PagedKVManager(PagingConfig(page_size=p, n_pages=n_pages),
+                          n_slots, max_pages)
+
+
+def test_manager_admit_share_and_retire_keeps_pages_warm():
+    mgr = _mgr()
+    toks = np.arange(12, dtype=np.int64)
+    plan0 = mgr.admit(0, toks)
+    assert plan0.ok and plan0.new_pages == 3 and plan0.shared_pages == 0
+    # same prompt on another slot: fully shared, no quantization work
+    plan1 = mgr.admit(1, toks)
+    assert plan1.ok and plan1.new_pages == 0 and plan1.shared_pages == 3
+    assert plan1.tokens(4) == (0, 12)
+    np.testing.assert_array_equal(mgr.table[0, :3], mgr.table[1, :3])
+    # retire slot 0: tree keeps its reference, pages stay resident
+    mgr.retire(0)
+    assert (mgr.table[0] == -1).all()
+    assert mgr.alloc.used == 3
+    # a later identical prompt still hits
+    plan2 = mgr.admit(0, toks)
+    assert plan2.shared_pages == 3 and plan2.new_pages == 0
+
+
+def test_manager_decode_page_and_readmit_preserves_tail():
+    mgr = _mgr()
+    toks = np.arange(8, dtype=np.int64)
+    assert mgr.admit(0, toks).ok                   # 2 prompt chunks
+    tail = mgr.decode_page(0, 2)
+    assert tail is not None and mgr.table[0, 2] == tail
+    # corrupt prompt chunk 0 -> evict + readmit must keep the tail page
+    assert mgr.evict_corrupt(0, 0)
+    mgr.release_prompt(0)
+    plan = mgr.readmit(0, toks)
+    assert plan.ok and mgr.rebuilds == 1
+    assert mgr.table[0, 2] == tail
+    # a corrupt decode-tail page is not rebuildable
+    assert not mgr.evict_corrupt(0, 2)
+
+
+def test_manager_admit_rolls_back_on_exhaustion():
+    mgr = _mgr(n_pages=4, max_pages=8)
+    assert mgr.admit(0, np.arange(12, dtype=np.int64)).ok   # 3 pages
+    used = mgr.alloc.used
+    # 5 chunks cannot fit in the single free page + no evictable tree
+    # pages (all referenced by the resident slot 0)
+    plan = mgr.admit(1, 100 + np.arange(20, dtype=np.int64))
+    assert not plan.ok
+    assert mgr.alloc.used == used              # transactional rollback
+    assert (mgr.table[1] == -1).all()
+
+
+def test_manager_lru_eviction_under_pressure_and_stats():
+    mgr = _mgr(n_pages=4, max_pages=4)
+    assert mgr.admit(0, np.arange(12, dtype=np.int64)).ok
+    mgr.retire(0)                              # 3 warm tree pages
+    # a different prompt needs 3 pages: warm ones must be LRU-evicted
+    plan = mgr.admit(1, 500 + np.arange(12, dtype=np.int64))
+    assert plan.ok and mgr.evictions >= 2
+    st = mgr.stats()
+    # 3 new pages + the one warm page the free list could still cover
+    assert st["pages_resident"] == 4 and st["page_evictions"] >= 2
+    assert 0.0 <= st["prefix_hit_rate"] <= 1.0
+
+
+# ------------------------------ plans (satellite) ---------------------------
+
+def test_plan_from_any_dict_file_and_passthrough(tmp_path):
+    from repro.protect import ProtectionPlan
+    from repro.protect.plan import OPT_IN_OPS
+
+    assert "kv_cache_paged" in OPT_IN_OPS
+    base = ProtectionPlan.parse("*:policy=log,kv_cache_paged:on",
+                                name="paged")
+    assert ProtectionPlan.from_any(base) is base
+    again = ProtectionPlan.from_any(base.to_dict())
+    assert again.describe() == base.describe()
+    path = tmp_path / "plan.json"
+    path.write_text(__import__("json").dumps(base.to_dict()))
+    loaded = ProtectionPlan.from_any(f"@{path}")
+    assert loaded.describe() == base.describe()
+    r = loaded.resolve("kv_cache_paged", "attn")
+    assert r.enabled and r.policy == "log"
+
+
+# ------------------------------ engine --------------------------------------
+
+SMALL_ARCH = "llama3.2-1b"
+
+
+@pytest.fixture(scope="module")
+def paged_engine():
+    from repro.configs import reduce_cfg
+    from repro.configs.registry import get_arch
+    from repro.protect import ProtectionPlan
+    from repro.serving.engine import ServingEngine, TenantSpec
+
+    cfg = reduce_cfg(get_arch(SMALL_ARCH))
+    plan = ProtectionPlan.parse("*:policy=log,kv_cache_paged:on",
+                                name="paged")
+    return ServingEngine(
+        cfg, [TenantSpec("a", plan), TenantSpec("b", plan)],
+        n_slots=3, max_prompt=32, max_new_tokens=8,
+        paging=PagingConfig(page_size=8, n_pages=40))
+
+
+def _stream(engine, n=8, seed=3, prefix=16, tenants=None):
+    from repro.serving.workload import chat_stream
+    return chat_stream(n, tenants=tenants or {"a": 1.0, "b": 1.0},
+                       rate_rps=200.0, seed=seed, mean_prompt=24,
+                       max_prompt=32, mean_output=6,
+                       max_output=engine.max_new_tokens,
+                       prefix_len=prefix, prefix_seed=77)
+
+
+def test_engine_paged_serves_shared_prefix_stream(paged_engine):
+    eng = paged_engine
+    eng.reset_state()
+    tel = eng.run(_stream(eng))
+    s = tel.summary()
+    assert sum(t["completed"] for t in s["per_tenant"].values()) == 8
+    assert sum(t["aborted"] for t in s["per_tenant"].values()) == 0
+    # prefix sharing showed up in telemetry AND the pool stats
+    shared = sum(t["shared_prefix_tokens"]
+                 for t in s["per_tenant"].values())
+    assert shared > 0
+    st = next(iter(eng.paging_stats().values()))
+    assert st["prefix_hit_rate"] > 0.0
+    assert st["peak_resident_bytes"] > 0
+    # verify-on-touch ran (page compares counted as checks)
+    assert s["faults"]["counters"]["kv_cache_paged_checks"] > 0
+    assert s["faults"]["counters"]["kv_cache_paged_errors"] == 0
+
+
+def test_engine_paged_detects_kv_bitflip(paged_engine):
+    from repro.serving.engine import FaultInjection
+
+    eng = paged_engine
+    eng.reset_state()
+    tel = eng.run(_stream(eng), inject=[FaultInjection(
+        step=5, target="kv", persistent=True, seed=11)])
+    s = tel.summary()
+    assert s["faults"]["injections_detected"] == 1
+    inj = s["faults"]["injections"][0]
+    assert inj["victim"].startswith("kv_page/")
+    assert s["faults"]["counters"]["kv_cache_paged_errors"] > 0
+    eng.reset_state()
+
+
+def test_engine_paged_rejects_bad_configs():
+    from repro.configs import reduce_cfg
+    from repro.configs.registry import get_arch
+    from repro.serving.engine import ServingEngine, TenantSpec
+
+    cfg = reduce_cfg(get_arch(SMALL_ARCH))
+    with pytest.raises(ValueError, match="cannot hold even one"):
+        ServingEngine(cfg, [TenantSpec("a")], n_slots=2, max_prompt=32,
+                      max_new_tokens=8,
+                      paging=PagingConfig(page_size=8, n_pages=2))
+    meta = dataclasses.replace(cfg, meta_tokens=1)
+    with pytest.raises(ValueError, match="meta_tokens"):
+        ServingEngine(meta, [TenantSpec("a")], n_slots=2, max_prompt=32,
+                      max_new_tokens=8,
+                      paging=PagingConfig(page_size=8, n_pages=64))
+
+
+def test_engine_rebuild_policy_repairs_online():
+    from repro.configs import reduce_cfg
+    from repro.configs.registry import get_arch
+    from repro.protect import ProtectionPlan
+    from repro.serving.engine import (FaultInjection, ServingEngine,
+                                      TenantSpec)
+
+    cfg = reduce_cfg(get_arch(SMALL_ARCH))
+    plan = ProtectionPlan.parse("*:policy=recompute,kv_cache_paged:on",
+                                name="paged-fix")
+    eng = ServingEngine(cfg, [TenantSpec("a", plan)], n_slots=2,
+                        max_prompt=32, max_new_tokens=8,
+                        paging=PagingConfig(page_size=8, n_pages=32))
+    tel = eng.run(_stream(eng, n=6, tenants={"a": 1.0}),
+                  inject=[FaultInjection(
+                      step=5, target="kv", persistent=True, seed=7)])
+    s = tel.summary()
+    st = next(iter(eng.paging_stats().values()))
+    assert s["faults"]["injections_detected"] == 1
+    assert st["page_rebuilds"] >= 1
+    assert sum(t["completed"] for t in s["per_tenant"].values()) == 6
+    assert sum(t["aborted"] for t in s["per_tenant"].values()) == 0

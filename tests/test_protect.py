@@ -233,6 +233,56 @@ def test_policy_correct_end_to_end_on_accumulator_fault():
         np.asarray(c), np.asarray(get_op("qgemm").unprotected(packed, a)))
 
 
+def test_policy_correct_repairs_weight_flip_via_colsum():
+    """(packed, colsum_ref) tuple encoding: a weight flip poisons a whole
+    C column (m > 1), which the single-cell accumulator repair declines —
+    the B-side column-sum reference localizes and repairs it end to end
+    through protected_call."""
+    from repro.core.abft_gemm import encode_weight_colsum
+
+    a, b, packed = _gemm_fixture()
+    colsum = encode_weight_colsum(b)
+    n = b.shape[1]
+    bq = np.asarray(b).copy()
+    bq[5, 7] ^= np.int8(0x20)
+    bad_packed = jnp.concatenate([jnp.asarray(bq), packed[:, n:]], axis=1)
+    c, rep = protected_call("qgemm", (bad_packed, colsum), a,
+                            rule=ResolvedRule(policy="correct"))
+    assert int(rep.corrections) == 1
+    assert int(rep.errors["qgemm"]) == 0
+    np.testing.assert_array_equal(
+        np.asarray(c), np.asarray(get_op("qgemm").unprotected(packed, a)))
+    # without the colsum reference the same fault is detected but not
+    # repairable: it falls through with residual errors
+    _, rep2 = protected_call("qgemm", bad_packed, a,
+                             rule=ResolvedRule(policy="correct"))
+    assert int(rep2.corrections) == 0
+    assert int(rep2.errors["qgemm"]) > 0
+
+
+def test_qlinear_correct_policy_repairs_weight_flip():
+    """The layer wiring: a correct-policy call site hands the stored
+    colsum over as the repair reference, so a flipped packed weight
+    yields the clean activations plus one recorded correction."""
+    from repro.layers.common import Ctx
+    from repro.layers.linear import init_qlinear, qlinear
+
+    p = init_qlinear(jax.random.key(3), 32, 16, bias=False)
+    p = {k: v.value for k, v in p.items()}
+    x = jax.random.normal(jax.random.key(4), (4, 32))
+    plan = ProtectionPlan.parse("*:policy=correct")
+    y_clean, rep0 = qlinear(p, x, Ctx(quant=True, plan=plan))
+    assert int(rep0.total_errors()) == 0 and int(rep0.corrections) == 0
+    bad = dict(p)
+    w = np.asarray(p["w_packed"]).copy()
+    w[7, 5] ^= np.int8(0x10)             # payload flip; refs stay clean
+    bad["w_packed"] = jnp.asarray(w)
+    y_bad, rep = qlinear(bad, x, Ctx(quant=True, plan=plan))
+    assert int(rep.corrections) == 1
+    assert int(rep.total_errors()) == 0
+    np.testing.assert_array_equal(np.asarray(y_bad), np.asarray(y_clean))
+
+
 def test_policy_correct_falls_back_to_recompute_for_eb():
     kt, ki = jax.random.split(jax.random.key(6))
     table = jax.random.randint(kt, (256, 32), -128, 128, jnp.int8)
