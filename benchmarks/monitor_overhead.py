@@ -1,0 +1,98 @@
+"""Measure the live monitor's per-tick cost against serving step time.
+
+Wall-clock A/B of whole runs (monitored vs not) is hopeless at smoke
+scale: the deltas are a few ms against ±20% scheduler noise.  Instead,
+run ONE monitored smoke soak to capture (a) the mean engine step time
+and (b) the exact event stream the monitor saw, then fold that stream
+into fresh ``Monitor`` instances and time the fold alone.  Per-tick
+monitor cost over per-step engine time is the committed overhead
+number — deterministic event count, best-of-N timing.
+
+    PYTHONPATH=src python benchmarks/monitor_overhead.py [OUT.json]
+"""
+import json
+import sys
+import time
+
+from repro.configs import reduce_cfg
+from repro.configs.registry import get_arch
+from repro.obs import Monitor, Observability
+from repro.protect import ProtectionPlan
+from repro.serving import ServingEngine, TenantSpec, chat_stream
+
+REPS = 7
+ACCEPT_FRAC = 0.05
+
+
+def main(out_path=None) -> int:
+    cfg = reduce_cfg(get_arch("llama3.2-1b"))
+    tenants = [TenantSpec("t", ProtectionPlan.parse("*:policy=log",
+                                                    name="t"))]
+    eng = ServingEngine(cfg, tenants, n_slots=4, max_prompt=32,
+                        max_new_tokens=8, seed=0)
+    eng.warmup()
+
+    def stream():
+        return chat_stream(32, tenants={"t": 1.0}, rate_rps=200.0,
+                           seed=5, mean_prompt=16, max_prompt=32,
+                           mean_output=4, max_output=8)
+
+    eng.reset_state()
+    obs = Observability.create()
+    mon = Monitor()
+    t0 = time.perf_counter()
+    tel = eng.run(stream(), obs=obs, monitor=mon)
+    run_s = time.perf_counter() - t0
+    steps = len(tel.steps)
+    events = list(obs.bus)
+
+    best = float("inf")
+    ticks = 0
+    for _ in range(REPS):
+        m2 = Monitor()
+        t0 = time.perf_counter()
+        for ev in events:
+            m2.on_event(ev)
+        best = min(best, time.perf_counter() - t0)
+        ticks = m2.summary()["ticks"]
+
+    per_tick_ms = 1e3 * best / max(1, ticks)
+    per_step_ms = 1e3 * run_s / max(1, steps)
+    frac = per_tick_ms / per_step_ms
+    out = {
+        "bench": "monitor_smoke",
+        "arch": "llama3.2-1b (reduced smoke config)",
+        "requests": 32,
+        "steps": steps,
+        "ticks": ticks,
+        "events": len(events),
+        "reps": REPS,
+        "timing": "best-of",
+        "monitored_run_wall_s": round(run_s, 4),
+        "per_step_ms": round(per_step_ms, 3),
+        "monitor_per_tick_ms": round(per_tick_ms, 4),
+        "monitor_overhead_frac_of_step": round(frac, 4),
+        "monitor_overhead_pct_of_step": round(100 * frac, 2),
+        "method": "fold the run's captured event stream into a fresh "
+                  "Monitor (default rules), best-of-%d; per-tick cost "
+                  "vs the monitored run's mean step time" % REPS,
+        "acceptance": "monitor_overhead_frac_of_step < %.2f"
+                      % ACCEPT_FRAC,
+    }
+    print(json.dumps(out, indent=2))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out_path}")
+    if frac >= ACCEPT_FRAC:
+        print(f"FAIL: monitor overhead {100 * frac:.2f}% of step time "
+              f"(accept < {100 * ACCEPT_FRAC:.0f}%)")
+        return 1
+    print(f"monitor overhead OK: {100 * frac:.2f}% of step time "
+          f"(< {100 * ACCEPT_FRAC:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else None))

@@ -5,17 +5,21 @@ Every obs-instrumented run (``--obs-dir`` on the campaign CLI or
 ``obs_events.jsonl`` — one validated JSON object per fault event.  That
 file is the durable record: ``repro.obs.replay`` folds it back into a
 fresh ``MetricsRegistry``, so Prometheus text (or the JSON export) can
-be regenerated for dashboards without re-running the experiment.
+be regenerated for dashboards without re-running the experiment.  When
+the run carried a live ``Monitor``, the stream also holds ``alert`` and
+``health`` events, so the alert history and per-tenant health timeline
+below need nothing beyond the JSONL either.
 
     PYTHONPATH=src python examples/obs_dashboard.py [obs_events.jsonl]
 
-With no argument, runs a small live-traffic soak cell first to produce
-an event stream, then replays it.
+With no argument, runs a small live-traffic soak cell first (with the
+detection-health monitor attached) to produce an event stream, then
+replays it.
 """
 import sys
 import tempfile
 
-from repro.obs import EventBus, Observability, replay
+from repro.obs import EventBus, Monitor, Observability, replay
 
 
 def make_events() -> str:
@@ -27,12 +31,57 @@ def make_events() -> str:
     print(f"running soak cell {plan.cell_id} "
           f"(inject at steps {plan.inject_steps}) ...")
     obs = Observability.create()
-    cell = run_soak_cell(plan, obs=obs)
+    monitor = Monitor()
+    cell = run_soak_cell(plan, obs=obs, monitor=monitor)
     m = cell["metrics"]
+    ms = monitor.summary()
     print(f"  detected {m['detected']}/{m['samples']} injections, "
           f"fp_rate {m['fp_rate']:.3f}")
+    print(f"  monitor: {ms['ticks']} tick(s), {ms['alerts_fired']} "
+          f"alert(s) fired")
     out_dir = tempfile.mkdtemp(prefix="repro_obs_")
     return obs.write(out_dir)["events"]
+
+
+def alert_history(bus: EventBus) -> None:
+    """Chronological firing/resolution log, rebuilt from alert events."""
+    alerts = [ev for ev in bus if ev.kind == "alert"]
+    if not alerts:
+        return
+    print("\n--- Alert history " + "-" * 49)
+    for ev in alerts:
+        a = ev.attrs
+        print(f"  t={ev.t_s:8.3f}s  {a.get('state', 'firing'):8s} "
+              f"{a.get('rule', '?')} [{a.get('severity', '?')}] "
+              f"{a.get('scope', '?')}")
+
+
+def health_timelines(bus: EventBus) -> None:
+    """Per-scope health transitions (monitor) and engine responses."""
+    moves = [ev for ev in bus if ev.kind == "health"
+             and ev.source == "obs.monitor"]
+    actions = [ev for ev in bus if ev.kind == "health"
+               and ev.source == "serving.engine"]
+    if not moves and not actions:
+        return
+    print("\n--- Health timelines " + "-" * 46)
+    by_scope: dict = {}
+    for ev in moves:
+        by_scope.setdefault(ev.attrs.get("scope", "?"), []).append(ev)
+    for scope in sorted(by_scope):
+        hops = by_scope[scope]
+        path = hops[0].attrs.get("from", "healthy")
+        for ev in hops:
+            path += f" -> {ev.attrs.get('to', '?')}"
+        print(f"  {scope}: {path}")
+        for ev in hops:
+            print(f"    t={ev.t_s:8.3f}s tick={ev.attrs.get('tick')} "
+                  f"{ev.attrs.get('from')} -> {ev.attrs.get('to')} "
+                  f"({ev.attrs.get('reason', '')})")
+    for ev in actions:
+        print(f"  engine action t={ev.t_s:8.3f}s: "
+              f"{ev.attrs.get('action', '?')} "
+              f"{ev.attrs.get('scope', ev.attrs.get('tenant', ''))}")
 
 
 def main() -> int:
@@ -52,6 +101,9 @@ def main() -> int:
                       for rid in ev.request_ids})
     if touched:
         print(f"  requests resident during flagged steps: {touched}")
+
+    alert_history(bus)
+    health_timelines(bus)
 
     registry = replay(bus)
     print("\n--- Prometheus exposition (replayed) " + "-" * 30)

@@ -78,6 +78,15 @@ def main(argv=None) -> int:
                     help="export observability artifacts (fault-event "
                          "JSONL, Chrome trace, Prometheus text) for the "
                          "run into this directory")
+    ap.add_argument("--obs-flush-every", type=int, default=0, metavar="N",
+                    help="crash-durable obs: append events to the JSONL "
+                         "as they happen and rewrite metric/trace "
+                         "snapshots every N events (needs --obs-dir) — "
+                         "a killed soak keeps everything flushed so far")
+    ap.add_argument("--monitor", action="store_true",
+                    help="attach the live detection-health monitor to "
+                         "the obs bus (windowed alert rules + per-scope "
+                         "health states; summary printed at the end)")
     args = ap.parse_args(argv)
 
     if args.diff:
@@ -127,9 +136,16 @@ def main(argv=None) -> int:
     resolve_device_count(args.device_count or None)
 
     obs = None
-    if args.obs_dir:
+    if args.obs_dir or args.monitor:
         from repro.obs import Observability
         obs = Observability.create()
+        if args.obs_dir and args.obs_flush_every > 0:
+            obs.open_incremental(args.obs_dir,
+                                 every=args.obs_flush_every)
+    monitor = None
+    if args.monitor:
+        from repro.obs import Monitor
+        monitor = Monitor()
 
     if grid == "serving_soak":
         # live-traffic soak: the serving engine, not the vmapped executor
@@ -146,12 +162,14 @@ def main(argv=None) -> int:
                 (n, w, args.plan) for n, w, _ in spec.tenants))
         result = run_soak_campaign(spec, quick=args.quick, seed=args.seed,
                                    out_dir=args.out, obs=obs,
+                                   monitor=monitor,
                                    verbose=lambda s: print(s, flush=True))
         print()
         print(markdown_table(result))
         print(f"artifact: "
               f"{os.path.join(args.out, 'BENCH_campaign_serving_soak')}"
               f".json")
+        _print_monitor(monitor)
         _write_obs(obs, args.obs_dir)
         return 0
     if grid == "paging":
@@ -195,6 +213,7 @@ def main(argv=None) -> int:
         and args.quick else grid
     result = run_campaign(name, specs, out_dir=args.out,
                           chunk=args.chunk or CHUNK, obs=obs,
+                          monitor=monitor,
                           verbose=lambda s: print(s, flush=True))
 
     from repro.campaign.artifacts import (breakdown_markdown,
@@ -211,12 +230,26 @@ def main(argv=None) -> int:
         print(bd)
     print(f"artifact: {os.path.join(args.out, 'BENCH_campaign_' + name)}"
           f".json")
+    _print_monitor(monitor)
     _write_obs(obs, args.obs_dir)
     return 0
 
 
+def _print_monitor(monitor) -> None:
+    if monitor is None:
+        return
+    ms = monitor.summary()
+    print(f"monitor: {ms['ticks']} tick(s), {ms['alerts_fired']} "
+          f"alert(s), health {ms['health'] or '{}'}")
+    for a in ms["alerts"]:
+        print(f"  alert {a['rule']} [{a['severity']}] {a['scope']}: "
+              f"{a['metric']}={a['value']:.4g} vs {a['threshold']:.4g}")
+
+
 def _write_obs(obs, obs_dir) -> None:
     if obs is None:
+        return
+    if obs_dir is None:
         return
     paths = obs.write(obs_dir)
     for kind, path in sorted(paths.items()):

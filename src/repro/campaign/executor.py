@@ -274,7 +274,12 @@ def _publish_cell(obs, plan: CellPlan, metrics: CellMetrics) -> None:
         bound=metrics.analytic_bound,
         attrs={"escapes": metrics.escapes,
                "false_positives": metrics.false_positives,
-               "fp_rate": metrics.fp_rate}))
+               "fp_rate": metrics.fp_rate,
+               # what the {cell} detections counter was inc'd with —
+               # replay reads it so round-trip stays counter-exact
+               # (detected alone misses masked-by-recompute trials)
+               "effective_detected": metrics.effective_detected,
+               "clean_samples": metrics.clean_samples}))
     if metrics.false_positives:
         obs.bus.emit(FaultEvent(
             op=plan.target, step=0, source="campaign.executor",
@@ -285,7 +290,9 @@ def _publish_cell(obs, plan: CellPlan, metrics: CellMetrics) -> None:
 
 
 def run_cell(plan: CellPlan, *, chunk: int = CHUNK,
-             slot: int = 0, obs=None) -> CellResult:
+             slot: int = 0, obs=None, monitor=None) -> CellResult:
+    if monitor is not None and obs is not None:
+        monitor.bind(obs)          # cell events tick the health machine
     target = get_target(plan.target)
     t0 = time.perf_counter()
     key = jax.random.key(plan.seed)
@@ -378,7 +385,8 @@ def run_cell(plan: CellPlan, *, chunk: int = CHUNK,
 
 def run_specs(specs: Sequence[CampaignSpec], *, chunk: int = CHUNK,
               verbose: Optional[Callable[[str], None]] = None,
-              obs=None) -> Tuple[List[CellResult], List[dict]]:
+              obs=None, monitor=None
+              ) -> Tuple[List[CellResult], List[dict]]:
     """Expand and execute a list of specs; returns (results, skipped)."""
     results: List[CellResult] = []
     skipped: List[dict] = []
@@ -391,7 +399,8 @@ def run_specs(specs: Sequence[CampaignSpec], *, chunk: int = CHUNK,
             slot = n_sharded
             if plan.data_shards > 1:
                 n_sharded += 1
-            r = run_cell(plan, chunk=chunk, slot=slot, obs=obs)
+            r = run_cell(plan, chunk=chunk, slot=slot, obs=obs,
+                         monitor=monitor)
             results.append(r)
             if verbose:
                 m = r.metrics
@@ -405,15 +414,17 @@ def run_specs(specs: Sequence[CampaignSpec], *, chunk: int = CHUNK,
 def run_campaign(name: str, specs: Sequence[CampaignSpec], *,
                  out_dir: Optional[str] = None, chunk: int = CHUNK,
                  verbose: Optional[Callable[[str], None]] = None,
-                 obs=None) -> dict:
+                 obs=None, monitor=None) -> dict:
     """Execute specs, assemble the artifact dict, optionally write it.
     ``obs`` (a :class:`repro.obs.Observability`) records per-phase spans,
-    cell summary events, and outcome counters alongside the artifact."""
+    cell summary events, and outcome counters alongside the artifact;
+    ``monitor`` (a :class:`repro.obs.Monitor`) additionally watches the
+    published cell outcomes and drives per-cell health states."""
     from repro.campaign.artifacts import campaign_to_dict, write_artifacts
 
     t0 = time.perf_counter()
     results, skipped = run_specs(specs, chunk=chunk, verbose=verbose,
-                                 obs=obs)
+                                 obs=obs, monitor=monitor)
     result = campaign_to_dict(
         name, list(specs),
         [{"plan": r.plan, "metrics": r.metrics, "seconds": r.seconds}

@@ -87,8 +87,10 @@ def main(argv=None) -> int:
                     help="page-pool size per lane (--paged-kv)")
     ap.add_argument("--no-abft", action="store_true",
                     help="unprotected baseline (= --plan '*:off')")
-    ap.add_argument("--inject-step", type=int, default=-1,
-                    help="flip a weight bit before this engine step")
+    ap.add_argument("--inject-step", type=int, action="append",
+                    default=None, metavar="STEP",
+                    help="flip a weight bit before this engine step "
+                         "(repeatable — a burst of transient faults)")
     ap.add_argument("--inject-victim", default=None,
                     help="victim leaf-path pattern (e.g. 'attn.wq', "
                          "'mlp.down'); default: largest int8 leaf")
@@ -101,6 +103,18 @@ def main(argv=None) -> int:
     ap.add_argument("--obs-dir", default=None,
                     help="export observability artifacts (fault-event "
                          "JSONL, Chrome trace, Prometheus text) here")
+    ap.add_argument("--obs-flush-every", type=int, default=0,
+                    metavar="N",
+                    help="crash-durable obs: append each event to the "
+                         "JSONL as it happens and rewrite the metrics/"
+                         "trace snapshots every N events (needs "
+                         "--obs-dir)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="attach the live detection-health monitor: "
+                         "windowed alert rules over the obs bus drive "
+                         "healthy/degraded/quarantined tenant states "
+                         "with real engine responses (admission "
+                         "quarantine, plan escalation, paged-KV scrub)")
     ap.add_argument("--device-count", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -194,21 +208,30 @@ def main(argv=None) -> int:
             max_output=args.decode_tokens, trace=trace)
 
     inject = None
-    if args.inject_step >= 0:
-        inject = [FaultInjection(step=args.inject_step,
-                                 victim=args.inject_victim,
+    if args.inject_step:
+        inject = [FaultInjection(step=s, victim=args.inject_victim,
                                  persistent=args.inject_persistent,
-                                 seed=args.seed)]
+                                 seed=args.seed + 17 * i)
+                  for i, s in enumerate(sorted(args.inject_step))
+                  if s >= 0]
 
     obs = None
-    if args.obs_dir:
+    if args.obs_dir or args.monitor:
         from repro.obs import Observability
         obs = Observability.create()
+        if args.obs_dir and args.obs_flush_every > 0:
+            obs.open_incremental(args.obs_dir,
+                                 every=args.obs_flush_every)
+    monitor = None
+    if args.monitor:
+        from repro.obs import Monitor
+        monitor = Monitor()
 
     log.info("serving %d %s requests (%s arrivals @ %g rps) on %d slots, "
              "%d lane(s)...", args.requests, cfg.family, args.arrival,
              args.rate, args.slots, len(engine.lanes))
-    telemetry = engine.run(stream, inject=inject, obs=obs)
+    telemetry = engine.run(stream, inject=inject, obs=obs,
+                           monitor=monitor)
     s = telemetry.summary()
 
     log.info("")
@@ -227,6 +250,21 @@ def main(argv=None) -> int:
     f = s["faults"]
     nz = {k: v for k, v in f["counters"].items() if v}
     log.info("fault counters: %s", nz or "all zero")
+    if monitor is not None:
+        ms = s.get("monitor") or monitor.summary()
+        log.info("monitor: %d evaluation tick(s), %d alert(s) fired, "
+                 "health %s", ms["ticks"], ms["alerts_fired"],
+                 ms["health"] or "{}")
+        for a in ms["alerts"]:
+            log.info("  alert %-16s [%s] %s: %s=%.4g %s %.4g at t=%.3fs%s",
+                     a["rule"], a["severity"], a["scope"], a["metric"],
+                     a["value"], ">=", a["threshold"], a["t_s"],
+                     "" if a["resolved_t_s"] is None
+                     else f" (resolved t={a['resolved_t_s']:.3f}s)")
+        for tr in ms["transitions"]:
+            log.info("  health %-16s %s -> %s at tick %d (%s)",
+                     tr["scope"], tr["old"], tr["new"], tr["tick"],
+                     tr["reason"] or "recovered")
     for lane_key, st in engine.paging_stats().items():
         log.info("paging %s: resident=%d/%d high-water=%d "
                  "prefix-hit=%.2f evictions=%d rebuilds=%d", lane_key,

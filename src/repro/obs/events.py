@@ -23,11 +23,14 @@ import json
 import math
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
-#: bump when FaultEvent gains/renames REQUIRED fields
-EVENT_SCHEMA_VERSION = 1
+#: bump when FaultEvent gains/renames REQUIRED fields.  v2 adds the
+#: monitor kinds ``alert`` / ``health``; the wire format is otherwise
+#: unchanged, so v1 files (old committed artifacts) still load.
+EVENT_SCHEMA_VERSION = 2
 
 #: the event taxonomy; ``validate_event`` rejects anything else
-EVENT_KINDS = ("detection", "false_positive", "injection", "cell", "info")
+EVENT_KINDS = ("detection", "false_positive", "injection", "cell", "info",
+               "alert", "health")
 
 #: required keys and their types in the JSONL wire format
 EVENT_SCHEMA: Dict[str, tuple] = {
@@ -115,19 +118,35 @@ def validate_event(d: dict) -> dict:
 
 
 class EventBus:
-    """Append-only host-side sink for :class:`FaultEvent`s."""
+    """Append-only host-side sink for :class:`FaultEvent`s.
+
+    Live consumers (the detection-health :class:`~repro.obs.Monitor`,
+    incremental flushing) attach via :meth:`subscribe`; subscribers see
+    each event at emission time, in order.  Subscribers are wiring, not
+    data: they are NOT part of the monoid (``merged`` and ``from_jsonl``
+    return un-subscribed buses)."""
 
     def __init__(self, events: Optional[Iterable[FaultEvent]] = None):
         self.events: List[FaultEvent] = list(events or [])
+        self._subscribers: List = []
+
+    def subscribe(self, fn) -> None:
+        """Call ``fn(event)`` synchronously on every subsequent emit.
+        Idempotent per callable."""
+        if fn not in self._subscribers:
+            self._subscribers.append(fn)
 
     # ------------------------------ monoid ----------------------------------
 
     def emit(self, event: FaultEvent) -> FaultEvent:
         self.events.append(event)
+        for fn in list(self._subscribers):
+            fn(event)
         return event
 
     def extend(self, events: Iterable[FaultEvent]) -> None:
-        self.events.extend(events)
+        for ev in events:
+            self.emit(ev)
 
     @classmethod
     def merged(cls, *buses: "EventBus") -> "EventBus":
@@ -163,13 +182,21 @@ class EventBus:
 
     @classmethod
     def from_jsonl(cls, path: str) -> "EventBus":
+        """Load an exported stream; reads any schema <= the current
+        version (v1 files predate the ``alert``/``health`` kinds but are
+        otherwise identical).  Invalid records raise ``ValueError``
+        naming the offending ``path:line``."""
         bus = cls()
         with open(path) as f:
-            for line in f:
+            for ln, line in enumerate(f, start=1):
                 line = line.strip()
-                if line:
+                if not line:
+                    continue
+                try:
                     bus.emit(FaultEvent.from_dict(
                         validate_event(json.loads(line))))
+                except (ValueError, TypeError, KeyError) as e:
+                    raise ValueError(f"{path}:{ln}: {e}") from e
         return bus
 
 

@@ -115,6 +115,21 @@ class ProtectionPlan:
         """A new plan with ``rules`` appended (they override)."""
         return dataclasses.replace(self, rules=self.rules + tuple(rules))
 
+    def escalated(self) -> "ProtectionPlan":
+        """The detect→act escalation of this plan: every ``log`` policy
+        upgraded to ``recompute`` (and a leading wildcard recompute rule
+        so un-policied sites stop at log no longer).  Enablement is left
+        untouched — no op switches on or off, so the escalated plan runs
+        against the same compiled cache/batch structure; the serving
+        engine applies it when the health monitor degrades a lane."""
+        rules = tuple(
+            dataclasses.replace(r, policy="recompute")
+            if r.policy == "log" else r
+            for r in self.rules)
+        return dataclasses.replace(
+            self, rules=(OpRule("*", policy="recompute"),) + rules,
+            name=f"{self.name}+escalated" if self.name else "escalated")
+
     # ------------------------------ serde -----------------------------------
 
     @classmethod

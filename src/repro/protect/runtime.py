@@ -97,15 +97,22 @@ def protected_call(op: str, encoded, *inputs, ctx=None,
 
 def observe_metrics(metrics, *, source: str, step: int = 0,
                     t_s: float = 0.0, obs=None, cell_id=None,
-                    request_ids=(), bit_band=None, shard=None) -> int:
+                    request_ids=(), bit_band=None, shard=None,
+                    attrs=None) -> int:
     """Land one step's device-side FaultReport counters host-side.
 
     ``protected_call`` runs traced (jit/scan/vmap), so per-call host
     emission is impossible there — this is the single host-side choke
     point the consumers (serving engine, train loop, campaign executor)
     call with a step's ``device_get``'d metrics dict.  Increments the
-    ``repro_abft_{checks,errors}_total`` counters and emits one
-    ``detection`` :class:`~repro.obs.FaultEvent` per flagged op kind.
+    ``repro_abft_{checks,errors}_total`` counters (plus one
+    ``repro_detections_total{op,source}`` inc per flagged op), emits one
+    ``detection`` :class:`~repro.obs.FaultEvent` per flagged op kind,
+    and — when anything was checked or the caller passed step ``attrs``
+    (the serving engine's lane/tenant/duration context) — one
+    ``info``/``channel=step`` summary event carrying the per-op
+    (checks, errors) counts.  That summary is what feeds the live
+    :class:`~repro.obs.Monitor` and makes ``repro.obs.replay`` exact.
     Returns the step's total residual errors; a ``None`` obs is a cheap
     no-op path that still returns the error count.
     """
@@ -115,9 +122,13 @@ def observe_metrics(metrics, *, source: str, step: int = 0,
     errors = sum(errs for _, _, errs in counts)
     if obs is None:
         return errors
-    from repro.obs import events_from_metrics
+    from repro.obs import FaultEvent, events_from_metrics
+    by_op = {}
+    total_checks = 0
     for kind, checks, errs in counts:
         if checks or errs:
+            by_op[kind] = [int(checks), int(errs)]
+            total_checks += int(checks)
             obs.registry.counter(
                 "repro_abft_checks_total",
                 "ABFT checks by op kind").inc(checks, op=kind,
@@ -126,9 +137,22 @@ def observe_metrics(metrics, *, source: str, step: int = 0,
                 "repro_abft_errors_total",
                 "residual ABFT errors by op kind").inc(errs, op=kind,
                                                        source=source)
+        if errs > 0:
+            labels = {"op": kind, "source": source}
+            if cell_id:
+                labels["cell"] = cell_id
+            obs.registry.counter(
+                "repro_detections_total",
+                "detected faults by op kind, source, and cell"
+            ).inc(1, **labels)
     obs.bus.extend(events_from_metrics(
         metrics, step=step, source=source, t_s=t_s, cell_id=cell_id,
         request_ids=tuple(request_ids), bit_band=bit_band, shard=shard))
+    if by_op or attrs:
+        obs.bus.emit(FaultEvent(
+            op="step", step=step, source=source, kind="info", t_s=t_s,
+            errors=int(errors), checks=total_checks, cell_id=cell_id,
+            attrs={"channel": "step", "by_op": by_op, **(attrs or {})}))
     return errors
 
 

@@ -52,13 +52,20 @@ class TrainLoop:
 
     def __init__(self, step_fn: Callable, dataset, *, cfg: LoopConfig,
                  shardings=None, metrics_hook: Optional[Callable] = None,
-                 obs=None):
+                 obs=None, monitor=None):
         self.step_fn = step_fn
         self.dataset = dataset
         self.cfg = cfg
         self.shardings = shardings
         self.metrics_hook = metrics_hook
+        if monitor is not None and obs is None:
+            from repro.obs import Observability
+            obs = Observability.create()
         self.obs = obs
+        #: detection-health Monitor fed by this loop's step summaries
+        self.monitor = monitor
+        if monitor is not None:
+            monitor.bind(obs)
         self.ckpt = CheckpointManager(cfg.ckpt_dir,
                                       keep_last=cfg.keep_last,
                                       save_every=cfg.save_every)
@@ -108,7 +115,9 @@ class TrainLoop:
             "repro_step_duration_ms", "step wall time (ms)"
         ).observe(1e3 * dur_s, kind="train")
         observe_metrics(jax.device_get(metrics), source="runtime.loop",
-                        step=step, t_s=now, obs=self.obs)
+                        step=step, t_s=now, obs=self.obs,
+                        attrs={"kind": "train",
+                               "duration_ms": 1e3 * dur_s})
 
     # ------------------------------------------------------------------
     def run(self, state, n_steps: int, *, start_step: Optional[int] = None,

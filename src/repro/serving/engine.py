@@ -169,6 +169,10 @@ class ServingEngine:
         self._warm = False
         #: Observability bundle for the CURRENT run (set by run(obs=...))
         self._obs = None
+        #: detection-health Monitor for the CURRENT run (run(monitor=...))
+        self._monitor = None
+        #: lane keys whose plan was already escalated (one-way per engine)
+        self._escalated = set()
 
         #: PagingConfig | None — paged, prefix-shared, per-page-checksummed
         #: KV mode.  Prompts round up to page-multiple buckets, slots hold
@@ -529,6 +533,32 @@ class ServingEngine:
           "prompt re-prefills after corrupt-page eviction").set(
               st["page_rebuilds"], lane=lane.key)
 
+    def _paging_event(self, action: str, lane: _Lane, *,
+                      dur_s: float = 0.0, **attrs) -> None:
+        """One paged-KV lifecycle operation (admit / evict_corrupt /
+        rebuild / scrub_cache): a tracer span, a
+        ``repro_paging_ops_total{action,lane}`` inc, and a typed
+        ``info``/``channel=paging`` event — so page-fault response is
+        visible in Chrome traces and replayable from the JSONL."""
+        if self._obs is None:
+            return
+        from repro.obs import FaultEvent
+        self._obs.tracer.add_span(
+            f"paged_{action}", cat="paging",
+            start_s=self.clock_s - dur_s, dur_s=dur_s, lane=lane.key,
+            step=self.global_step, **attrs)
+        self._obs.registry.counter(
+            "repro_paging_ops_total",
+            "paged-KV lifecycle operations by action and lane").inc(
+                1, action=action, lane=lane.key)
+        rid = attrs.get("rid")
+        self._obs.bus.emit(FaultEvent(
+            op=action, step=self.global_step, source="serving.engine",
+            kind="info", t_s=self.clock_s,
+            request_ids=(int(rid),) if rid is not None else (),
+            attrs={"channel": "paging", "action": action,
+                   "lane": lane.key, **attrs}))
+
     def paging_stats(self) -> Dict[str, dict]:
         """Per-lane paging stats + byte accounting (campaign metrics)."""
         from repro.paging import pool_page_bytes
@@ -572,6 +602,10 @@ class ServingEngine:
             persistent=inj.persistent))
         if self._obs is not None:
             from repro.obs import FaultEvent
+            self._obs.registry.counter(
+                "repro_injections_total",
+                "injected faults by source").inc(1,
+                                                 source="serving.engine")
             self._obs.bus.emit(FaultEvent(
                 op=path, step=self.global_step, source="serving.engine",
                 kind="injection", t_s=self.clock_s,
@@ -632,6 +666,10 @@ class ServingEngine:
             persistent=True))
         if self._obs is not None:
             from repro.obs import FaultEvent
+            self._obs.registry.counter(
+                "repro_injections_total",
+                "injected faults by source").inc(1,
+                                                 source="serving.engine")
             self._obs.bus.emit(FaultEvent(
                 op=victim, step=self.global_step, source="serving.engine",
                 kind="injection", t_s=self.clock_s,
@@ -706,10 +744,15 @@ class ServingEngine:
                     dt * 1e3, kind=kind)
             if metrics is not None:
                 from repro.protect.runtime import observe_metrics
-                observe_metrics(metrics, source="serving.engine",
-                                step=self.global_step, t_s=self.clock_s,
-                                obs=self._obs,
-                                request_ids=tuple(slot_rids))
+                observe_metrics(
+                    metrics, source="serving.engine",
+                    step=self.global_step, t_s=self.clock_s,
+                    obs=self._obs, request_ids=tuple(slot_rids),
+                    attrs={"kind": kind, "lane": lane.key,
+                           "duration_ms": dt * 1e3,
+                           "tenants": sorted({
+                               s.request.tenant
+                               for s in lane.batcher.active_slots()})})
         return errors
 
     def _abort_lane(self, lane: _Lane, telemetry: Telemetry, dt: float,
@@ -809,6 +852,10 @@ class ServingEngine:
         slot.token_ids = [int(tok[0])]
         slot.bucket = bucket
         slot.prefill_tokens, slot.shared_prefix_tokens = plan.tokens(p)
+        self._paging_event("admit", lane, slot=slot.index, rid=req.rid,
+                           bucket=bucket, pages=len(plan.page_ids),
+                           shared_pages=plan.shared_pages,
+                           new_pages=plan.new_pages)
         self._step_event("prefill", lane, dt, metrics, telemetry,
                          injected=injected, slot_rids=(req.rid,))
         self._publish_paging(lane)
@@ -886,8 +933,12 @@ class ServingEngine:
         (``abort`` — and always for an unrebuildable decode-tail page).
         Only the touched requests pay; the lane keeps serving."""
         pager = lane.pager
+        t0 = time.perf_counter()
         flags = lane.scrub_fn(lane.cache, lane.pos)
         bad = np.asarray(flags["k"]) + np.asarray(flags["v"])
+        self._paging_event("scrub_cache", lane,
+                           dur_s=time.perf_counter() - t0,
+                           flagged=int((bad > 0).sum()), policy=policy)
         for slot in list(lane.batcher.active_slots()):
             chunks = [int(c) for c in np.nonzero(bad[slot.index])[0]]
             if not chunks:
@@ -897,6 +948,10 @@ class ServingEngine:
                 for c in chunks:
                     if not pager.evict_corrupt(slot.index, c):
                         rebuild = False      # corrupt decode-tail page
+                self._paging_event(
+                    "evict_corrupt", lane, slot=slot.index,
+                    rid=slot.request.rid, chunks=chunks,
+                    rebuildable=rebuild)
             if not (rebuild and self._rebuild_prompt(lane, slot,
                                                      telemetry)):
                 self._abort_slot(lane, slot, telemetry)
@@ -933,6 +988,8 @@ class ServingEngine:
         lane.cache = lane.insert_fn(lane.cache, cache1,
                                     jnp.asarray(plan.page_ids),
                                     self._table_dev(lane))
+        self._paging_event("rebuild", lane, dur_s=dt, slot=slot.index,
+                           rid=req.rid, pages=len(plan.page_ids))
         self._step_event("rebuild", lane, dt, metrics, telemetry,
                          slot_rids=(req.rid,))
         return True
@@ -975,6 +1032,73 @@ class ServingEngine:
         for lane in self.lanes:
             lane.reset()
 
+    # ------------------------------ monitor responses ------------------------
+
+    def _admits(self, lane: _Lane):
+        """The lane's admission predicate, gated by tenant health when a
+        monitor is attached (quarantined tenants only pass as recovery
+        probes)."""
+        if self._monitor is None:
+            return lane.accepts
+        mon = self._monitor
+        return lambda req: (lane.accepts(req)
+                            and mon.admission_allowed(req.tenant))
+
+    def _health_action(self, action: str, scope: str,
+                       lane: _Lane) -> None:
+        """Record one applied engine response (quarantine / escalate /
+        scrub / recover) as a counter + typed health event, so the
+        response is visible from the JSONL alone."""
+        if self._obs is None:
+            return
+        from repro.obs import FaultEvent
+        self._obs.registry.counter(
+            "repro_health_actions_total",
+            "engine responses to health transitions").inc(
+                1, action=action, scope=scope)
+        self._obs.bus.emit(FaultEvent(
+            op="health", step=self.global_step, source="serving.engine",
+            kind="health", t_s=self.clock_s,
+            attrs={"scope": scope, "action": action, "lane": lane.key}))
+
+    def _escalate_lane(self, lane: _Lane) -> bool:
+        """Upgrade the lane's plan detect→act policies (``log`` →
+        ``recompute``) and re-jit its steps; one-way per engine.  The
+        escalated plan changes no op enablement, so cache/batch structure
+        is stable across the swap."""
+        if lane.key in self._escalated:
+            return False
+        lane.plan = lane.plan.escalated()
+        self._build_lane_fns(lane)
+        self._escalated.add(lane.key)
+        return True
+
+    def _apply_monitor_responses(self, telemetry: Telemetry) -> None:
+        """Drain the monitor's health transitions and apply the
+        configured responses to the owning tenant lanes."""
+        mon = self._monitor
+        from repro.obs.health import HEALTH_STATES
+        for tr in mon.poll_transitions():
+            if not tr.scope.startswith("tenant:"):
+                continue
+            tenant = tr.scope.split(":", 1)[1]
+            lane = self._lane_of.get(tenant)
+            if lane is None:
+                continue
+            worse = (HEALTH_STATES.index(tr.new)
+                     > HEALTH_STATES.index(tr.old))
+            if not worse:
+                self._health_action("recover", tr.scope, lane)
+                continue
+            if tr.new == "quarantined" and mon.responses.quarantine:
+                self._health_action("quarantine", tr.scope, lane)
+            if mon.responses.escalate and self._escalate_lane(lane):
+                self._health_action("escalate", tr.scope, lane)
+            if mon.responses.scrub and lane.pager is not None \
+                    and lane.cache is not None:
+                self._paged_repair(lane, telemetry, "recompute")
+                self._health_action("scrub", tr.scope, lane)
+
     # ------------------------------ main loop --------------------------------
 
     def run(self, requests: Sequence[Request], *,
@@ -982,13 +1106,28 @@ class ServingEngine:
             telemetry: Optional[Telemetry] = None,
             warmup: bool = True,
             max_iterations: int = 1_000_000,
-            obs=None) -> Telemetry:
+            obs=None, monitor=None) -> Telemetry:
         """Serve ``requests`` to completion.  ``obs`` (an
         :class:`repro.obs.Observability`) additionally lands every step's
         FaultReport counters, spans, and per-request-attributed detection
-        events host-side for the duration of this run."""
+        events host-side for the duration of this run.
+
+        ``monitor`` (a :class:`repro.obs.Monitor`) closes the loop: it is
+        bound to ``obs`` (one is created if the caller passed none), fed
+        by the engine's step summaries over the bus, and its health
+        transitions trigger real responses between iterations — gate a
+        quarantined tenant's admissions (with recovery probes), escalate
+        the lane's ProtectionPlan (``log`` → ``recompute``), and schedule
+        a paged-KV scrub+repair.  The monitor's summary lands on the
+        returned telemetry."""
         telemetry = telemetry if telemetry is not None else Telemetry()
+        if monitor is not None and obs is None:
+            from repro.obs import Observability
+            obs = Observability.create()
         self._obs = obs
+        self._monitor = monitor
+        if monitor is not None:
+            monitor.bind(obs)
         pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
         for r in pending:
             if r.tenant not in self._lane_of:
@@ -1001,10 +1140,14 @@ class ServingEngine:
             self.warmup(pending[0] if pending else None)
 
         try:
-            return self._run_loop(pending, injections, inj_i, telemetry,
-                                  max_iterations)
+            out = self._run_loop(pending, injections, inj_i, telemetry,
+                                 max_iterations)
+            if monitor is not None:
+                out.monitor = monitor.summary()
+            return out
         finally:
             self._obs = None
+            self._monitor = None
 
     def _run_loop(self, pending, injections, inj_i, telemetry,
                   max_iterations) -> Telemetry:
@@ -1041,10 +1184,13 @@ class ServingEngine:
                 self._apply_injection(injections[inj_i], telemetry)
                 inj_i += 1
 
-            # 2. admissions + prefills (or one-shot dlrm execution)
+            clock_before = self.clock_s
+            # 2. admissions + prefills (or one-shot dlrm execution) —
+            #    a quarantined tenant's requests stay queued, except for
+            #    the monitor's periodic recovery probes
             for lane in self.lanes:
                 for slot in lane.batcher.admit(self.queue, self.clock_s,
-                                               accept=lane.accepts):
+                                               accept=self._admits(lane)):
                     if slot.request.kind == "dlrm":
                         lane.batcher.retire(slot.index)
                         self._do_dlrm(lane, slot, telemetry, injected_now)
@@ -1060,6 +1206,17 @@ class ServingEngine:
             for lane in self.lanes:
                 if lane.batcher.occupancy():
                     self._do_decode(lane, telemetry, injected_now)
+
+            if self._monitor is not None:
+                if self.clock_s == clock_before and (
+                        self.queue or any(l.batcher.occupancy()
+                                          for l in self.lanes)):
+                    # fully gated iteration: nothing stepped, so nothing
+                    # ticked the monitor — advance the clock a hair and
+                    # tick it manually so recovery/probes can unlock
+                    self.clock_s += 1e-3
+                    self._monitor.idle_tick(self.clock_s)
+                self._apply_monitor_responses(telemetry)
 
             if injected_now:
                 self._restore_injection()

@@ -384,8 +384,8 @@ def _publish_cell(obs, plan: PagingCellPlan,
         checks=metrics["samples"],
         detector_value=metrics["detection_rate"],
         attrs={k: metrics[k] for k in
-               ("fp_rate", "parity_ok", "verify_ok", "bytes_ok",
-                "rebuild_ok", "page_rebuilds")
+               ("fp_rate", "false_positives", "parity_ok", "verify_ok",
+                "bytes_ok", "rebuild_ok", "page_rebuilds")
                if k in metrics.to_dict()}))
 
 

@@ -156,6 +156,9 @@ def _publish_soak_cell(obs, plan: SoakCellPlan, metrics: "SoakMetrics",
                 "clean-pass flags per campaign cell"
                 ).inc(metrics["false_positives"], cell=cell)
     for inj in injected:
+        reg.counter("repro_injections_total",
+                    "injected faults per campaign cell"
+                    ).inc(1, source="serving.soak")
         obs.bus.emit(FaultEvent(
             op=inj.get("victim") or "auto", kind="injection",
             step=inj["step"], source="serving.soak",
@@ -175,7 +178,8 @@ def _publish_soak_cell(obs, plan: SoakCellPlan, metrics: "SoakMetrics",
 
 
 def run_soak_cell(plan: SoakCellPlan, *, engine=None,
-                  keep_telemetry: bool = False, obs=None) -> dict:
+                  keep_telemetry: bool = False, obs=None,
+                  monitor=None) -> dict:
     """One cell: clean pass + faulty pass over the same stream.
 
     Returns ``{"plan", "metrics", "seconds"[, "telemetry"]}``; pass a
@@ -215,7 +219,8 @@ def run_soak_cell(plan: SoakCellPlan, *, engine=None,
                                  persistent=plan.persistent,
                                  seed=plan.seed + 17 * i)
                   for i, s in enumerate(plan.inject_steps)]
-    faulty = engine.run(stream, inject=injections, obs=obs)
+    faulty = engine.run(stream, inject=injections, obs=obs,
+                        monitor=monitor)
     engine.reset_state()          # restores any persistent fault
     faulty_summary = faulty.summary()
 
@@ -303,7 +308,7 @@ def full_soak_spec(seed: int = 0) -> SoakSpec:
 def run_soak_campaign(spec: Optional[SoakSpec] = None, *,
                       quick: bool = True, seed: int = 0,
                       out_dir: Optional[str] = None,
-                      verbose=None, obs=None) -> dict:
+                      verbose=None, obs=None, monitor=None) -> dict:
     """Run every cell of the spec; returns (and optionally writes) the
     ``BENCH_campaign_serving_soak`` artifact dict."""
     from repro.campaign.artifacts import campaign_to_dict, write_artifacts
@@ -321,7 +326,8 @@ def run_soak_campaign(spec: Optional[SoakSpec] = None, *,
                            seed=spec.seed)
     cells = []
     for plan in soak_plans(spec):
-        cell = run_soak_cell(plan, engine=engine, obs=obs)
+        cell = run_soak_cell(plan, engine=engine, obs=obs,
+                             monitor=monitor)
         cells.append(cell)
         if verbose:
             m = cell["metrics"]

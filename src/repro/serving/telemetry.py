@@ -146,6 +146,9 @@ class Telemetry:
         self.requests: List[RequestRecord] = []
         self.steps: List[StepEvent] = []
         self.injections: List[InjectionRecord] = []
+        #: detection-health monitor summary (alerts, health states,
+        #: transitions) — set by ServingEngine.run(monitor=...)
+        self.monitor: Optional[dict] = None
 
     # ------------------------------ recording -------------------------------
 
@@ -253,6 +256,8 @@ class Telemetry:
                 "suspect_requests": sum(
                     1 for r in self.requests if r.suspect),
             },
+            **({"monitor": self.monitor}
+               if self.monitor is not None else {}),
         }
 
     def to_dict(self) -> dict:

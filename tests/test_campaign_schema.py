@@ -18,7 +18,8 @@ from repro.campaign import CellMetrics, compute_metrics, load_artifact
 
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                             "benchmarks", "baselines")
-BASELINES = sorted(glob.glob(os.path.join(BASELINE_DIR, "*.json")))
+BASELINES = sorted(glob.glob(os.path.join(BASELINE_DIR,
+                                          "BENCH_campaign_*.json")))
 
 #: fields every artifact cell must carry (the differ + CI assertions
 #: read these) — a rename in metrics.py must be caught here, not by

@@ -1,0 +1,465 @@
+"""repro.obs.monitor + repro.obs.health: windowed estimators, alert
+rules (static thresholds and SLO burn-rate), the quarantine-grade
+health state machine, and the serving engine's live responses.
+
+The acceptance bar for the engine tests: a soak with a mid-stream
+fault burst must yield — from the exported ``obs_events.jsonl``
+ALONE — the firing alert, the health transition, the engine's
+response action, and the recovery, all replayable via ``replay()``
+into a registry that matches the live counters exactly."""
+import json
+
+import pytest
+
+from repro.configs import reduce_cfg
+from repro.configs.registry import get_arch
+from repro.obs import (AlertRule, EventBus, FaultEvent, HealthPolicy,
+                       HealthTracker, Monitor, Observability, replay,
+                       validate_event)
+from repro.obs.monitor import health_scope, wilson_interval
+from repro.protect import ProtectionPlan
+from repro.serving import (FaultInjection, ServingEngine, TenantSpec,
+                           chat_stream)
+
+#: registry families the counter-mirror invariant covers — replaying
+#: the event stream must reproduce these lines exactly
+MIRRORED = ("repro_detections_total", "repro_injections_total",
+            "repro_abft_checks_total", "repro_abft_errors_total",
+            "repro_alerts_total", "repro_health_transitions_total",
+            "repro_health_state", "repro_health_actions_total",
+            "repro_escapes_total", "repro_false_positives_total",
+            "repro_paging_ops_total")
+
+
+def _mirrored_lines(registry):
+    return sorted(l for l in registry.to_prometheus().splitlines()
+                  if l.startswith(MIRRORED))
+
+
+# ------------------------------ primitives ----------------------------------
+
+def test_wilson_interval_bounds_and_monotonicity():
+    assert wilson_interval(0, 0) == (0.0, 1.0)
+    lo, hi = wilson_interval(0, 50)
+    assert lo == 0.0 and 0.0 < hi < 0.15      # upper bound shrinks w/ n
+    lo2, hi2 = wilson_interval(0, 500)
+    assert hi2 < hi
+    lo, hi = wilson_interval(8, 40)
+    assert 0.0 < lo < 0.2 < hi < 1.0
+    # the interval always contains the point estimate
+    for k, n in ((1, 3), (5, 7), (99, 100)):
+        lo, hi = wilson_interval(k, n)
+        assert lo <= k / n <= hi
+
+
+def test_alert_rule_validation():
+    with pytest.raises(ValueError, match="metric"):
+        AlertRule(name="x", metric="nope", threshold=1)
+    with pytest.raises(ValueError, match="cmp"):
+        AlertRule(name="x", metric="detections", threshold=1, cmp="!!")
+    with pytest.raises(ValueError, match="severity"):
+        AlertRule(name="x", metric="detections", threshold=1,
+                  severity="explode")
+    with pytest.raises(ValueError, match="window"):
+        AlertRule(name="x", metric="detections", threshold=1,
+                  window_ticks=0, window_s=0.0)
+
+
+def test_health_scope_rollup_order():
+    assert health_scope("qgemm", "prem", "c0") == "tenant:prem"
+    assert health_scope("qgemm", "", "c0") == "cell:c0"
+    assert health_scope("qgemm", "", "") == "op:qgemm"
+
+
+def test_health_tracker_hysteresis_probes_and_recovery():
+    pol = HealthPolicy(degrade_after=2, quarantine_after=3,
+                       recover_after=2, probe_every=3)
+    tr = HealthTracker("tenant:a", pol)
+    assert tr.update(True, 1.0) is None              # streak 1 < 2
+    t = tr.update(True, 2.0, reason="burst")
+    assert (t.old, t.new, t.reason) == ("healthy", "degraded", "burst")
+    # degraded: needs quarantine_after consecutive alerting ticks
+    assert tr.update(True, 3.0) is None
+    assert tr.update(False, 4.0) is None             # streak resets
+    assert tr.update(True, 5.0) is None
+    assert tr.update(True, 6.0) is None
+    t = tr.update(True, 7.0)
+    assert t.new == "quarantined"
+    # quarantine-grade severity jumps straight there from healthy
+    fast = HealthTracker("tenant:b", pol)
+    fast.update(True, 1.0, quarantine_grade=True)
+    t = fast.update(True, 2.0, quarantine_grade=True)
+    assert (t.old, t.new) == ("healthy", "quarantined")
+    # probes: one admission per probe_every ticks, and the first one
+    # earns its wait
+    assert not tr.take_probe()
+    tr.update(False, 8.0)
+    tr.update(False, 9.0)                            # also recovers ↓
+    assert tr.state == "degraded"                    # 2 clean ticks
+    tr2 = HealthTracker("tenant:c", pol)
+    tr2.update(True, 1.0, quarantine_grade=True)     # streak 1 < 2
+    assert tr2.update(True, 2.0, quarantine_grade=True).new == \
+        "quarantined"                                # tick 2, probe@2
+    for k in range(9):
+        allowed = tr2.take_probe()                   # at tick 2 + k
+        assert allowed == (k in (3, 6)), k           # every 3rd tick
+        tr2.update(True, 3.0 + k, quarantine_grade=True)
+    # full recovery steps down one state per quiet period
+    assert tr.update(False, 10.0) is None
+    t = tr.update(False, 11.0)
+    assert (t.old, t.new, t.reason) == ("degraded", "healthy",
+                                        "recovered")
+    assert tr.take_probe()                           # healthy: always
+
+
+# ------------------------------ windows + rules -----------------------------
+
+def test_detection_rule_fires_then_ages_out_over_idle_ticks():
+    mon = Monitor(
+        rules=[AlertRule(name="burst", metric="detections", threshold=3,
+                         window_ticks=4)],
+        health=HealthPolicy(degrade_after=1, quarantine_after=3,
+                            recover_after=2, probe_every=2))
+    t = 0.0
+    for _ in range(3):
+        t += 1.0
+        mon.record_step(t, {"qgemm": (2, 0)}, tenants=("a",))
+    assert not mon.active_alerts()
+    for _ in range(3):
+        t += 1.0
+        mon.record_step(t, {"qgemm": (2, 1)}, tenants=("a",))
+    assert [a.rule for a in mon.active_alerts()] == ["burst"]
+    assert mon.tenant_state("a") == "degraded"
+    assert mon.admission_allowed("a")                # degraded != gated
+    # idle ticks age the flagged samples out of the 4-tick window: the
+    # alert resolves and health recovers WITHOUT new traffic (the
+    # quarantined-lane deadlock this tick-indexing prevents)
+    for _ in range(10):
+        t += 0.001
+        mon.idle_tick(t)
+    assert not mon.active_alerts()
+    assert mon.tenant_state("a") == "healthy"
+    s = mon.summary()
+    assert s["alerts_fired"] == 1
+    assert s["alerts"][0]["resolved_t_s"] is not None
+    assert [(x["old"], x["new"]) for x in s["transitions"]] == \
+        [("healthy", "degraded"), ("degraded", "healthy")]
+
+
+def test_fp_rate_proxy_injection_suppression_and_min_checks():
+    rule = AlertRule(name="fp", metric="fp_rate_low", threshold=0.02,
+                     cmp=">", window_ticks=8, min_checks=20)
+    # flags with no known injection in-window are presumed false
+    mon = Monitor(rules=[rule])
+    t = 0.0
+    for _ in range(8):
+        t += 1.0
+        mon.record_step(t, {"qgemm": (5, 2)}, tenants=("a",))
+    assert [a.rule for a in mon.active_alerts()] == ["fp"]
+    # identical traffic with an injection event in-window: the flags
+    # are explained, fp proxy is 0, no alert
+    mon2 = Monitor(rules=[rule])
+    obs = Observability.create()
+    mon2.bind(obs)
+    obs.bus.emit(FaultEvent(op="qgemm", step=0, source="t",
+                            kind="injection", t_s=0.5))
+    for i in range(8):
+        obs.bus.emit(FaultEvent(
+            op="step", step=i, source="t", kind="info", t_s=1.0 + i,
+            attrs={"channel": "step", "by_op": {"qgemm": [5, 2]},
+                   "tenants": ["a"]}))
+    assert not mon2.active_alerts()
+    # below min_checks the estimator abstains entirely
+    mon3 = Monitor(rules=[rule])
+    t = 0.0
+    for _ in range(8):
+        t += 1.0
+        mon3.record_step(t, {"qgemm": (2, 1)}, tenants=("a",))
+    assert not mon3.active_alerts()                  # 16 checks < 20
+
+
+def test_burn_rate_rule_needs_short_and_long_window():
+    rule = AlertRule(name="burn", metric="detections", threshold=2,
+                     window_ticks=2, long_window_ticks=8,
+                     long_threshold=4)
+    mon = Monitor(rules=[rule])
+    t = 0.0
+    for _ in range(2):
+        t += 1.0
+        mon.record_step(t, {"q": (1, 1)})
+    # short window fires (2 >= 2) but the long budget isn't burned yet
+    assert not mon.active_alerts()
+    for _ in range(2):
+        t += 1.0
+        mon.record_step(t, {"q": (1, 1)})
+    assert [a.rule for a in mon.active_alerts()] == ["burn"]
+    assert mon.state("op:q") == "degraded"
+
+
+def test_latency_p99_rule_over_step_durations():
+    rule = AlertRule(name="slow", metric="latency_p99_ms",
+                     threshold=100.0, window_ticks=4, min_samples=3,
+                     op="step/serve", severity="warn")
+    mon = Monitor(rules=[rule])
+    t = 0.0
+    for ms in (5.0, 5.0, 5.0, 5.0):
+        t += 1.0
+        mon.record_step(t, {}, tenants=("a",), duration_ms=ms,
+                        kind="serve")
+    assert not mon.active_alerts()
+    for ms in (250.0, 250.0, 250.0):
+        t += 1.0
+        mon.record_step(t, {}, tenants=("a",), duration_ms=ms,
+                        kind="serve")
+    (f,) = mon.active_alerts()
+    assert f.rule == "slow" and f.value >= 250.0
+    # warn severity never degrades health
+    assert mon.tenant_state("a") == "healthy"
+
+
+def test_cell_events_fold_into_cell_scopes_and_replay():
+    mon = Monitor(rules=[AlertRule(name="cellburst", metric="detections",
+                                   threshold=5, window_ticks=4)])
+    obs = Observability.create()
+    mon.bind(obs)
+    # the live incs the soak publisher pairs with its cell event
+    obs.registry.counter("repro_detections_total").inc(6, cell="c1")
+    obs.registry.counter("repro_injections_total").inc(8, cell="c1")
+    obs.registry.counter("repro_escapes_total").inc(1, cell="c1")
+    obs.registry.counter("repro_false_positives_total").inc(0, cell="c1")
+    obs.bus.emit(FaultEvent(
+        op="soak", step=0, source="serving.soak", kind="cell",
+        cell_id="c1", errors=7, checks=8, t_s=1.0,
+        attrs={"effective_detected": 6, "escapes": 1,
+               "false_positives": 0}))
+    assert mon.state("cell:c1") == "degraded"
+    (f,) = mon.active_alerts()
+    assert f.scope == "cell:c1" and f.value == 6.0
+    # satellite: replay folds cell events into the {cell=...} counters
+    reg = replay(obs.bus)
+    assert reg.counter("repro_detections_total").value(cell="c1") == 6
+    assert reg.counter("repro_injections_total").value(cell="c1") == 8
+    assert reg.counter("repro_escapes_total").value(cell="c1") == 1
+    assert reg.counter("repro_false_positives_total").value(cell="c1") \
+        == 0
+    # alert + health events from the monitor replay into their counters
+    assert reg.counter("repro_alerts_total").value(
+        rule="cellburst", scope="cell:c1", severity="degrade") == 1
+    assert reg.counter("repro_health_transitions_total").value(
+        scope="cell:c1", to="degraded") == 1
+    assert _mirrored_lines(obs.registry) == _mirrored_lines(reg)
+
+
+def test_monitor_estimate_sensor():
+    mon = Monitor()
+    t = 0.0
+    for _ in range(5):
+        t += 1.0
+        mon.record_step(t, {"qgemm": (4, 1), "kv_cache": (2, 0)},
+                        tenants=("a",))
+    est = mon.estimate(op="qgemm")
+    assert est["errors"] == 5 and est["checks"] == 20
+    assert est["flag_rate"] == pytest.approx(0.25)
+    assert est["flag_rate_low"] < 0.25 < est["flag_rate_high"]
+    everything = mon.estimate()
+    assert everything["checks"] == 30
+
+
+def test_monitor_ignores_own_emissions_no_recursion():
+    mon = Monitor(rules=[AlertRule(name="b", metric="detections",
+                                   threshold=1, window_ticks=4)])
+    obs = Observability.create()
+    mon.bind(obs)
+    for i in range(4):
+        obs.bus.emit(FaultEvent(
+            op="step", step=i, source="t", kind="info", t_s=1.0 + i,
+            attrs={"channel": "step", "by_op": {"q": [1, 1]},
+                   "tenants": ["a"]}))
+    # the bus now holds the monitor's own alert/health events; feeding
+    # the same bus to a fresh monitor must not loop or double-count
+    alerts = [e for e in obs.bus if e.kind == "alert"]
+    health = [e for e in obs.bus if e.kind == "health"]
+    assert alerts and health
+    for ev in obs.bus:
+        validate_event(ev.to_dict())
+    assert mon.summary()["ticks"] == 4
+
+
+# --------------------------- train-loop publishing --------------------------
+
+def test_train_loop_publishes_into_monitor(tmp_path):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.loop import LoopConfig, TrainLoop
+
+    calls = {}
+
+    def step_fn(state, batch):
+        w = state["w"] - 0.1 * (state["w"] - batch["x"].mean())
+        faulty = int(state["step"]) == 3 and calls.setdefault("f", 0) == 0
+        if faulty:
+            calls["f"] = 1
+        m = {"abft/gemm_errors": jnp.asarray(int(faulty), jnp.int32),
+             "loss": jnp.mean((w - batch["x"].mean()) ** 2)}
+        return {"w": w, "step": state["step"] + 1}, m
+
+    class DS:
+        def batch_at(self, step):
+            rng = np.random.default_rng(step)
+            return {"x": jnp.asarray(rng.standard_normal(8),
+                                     jnp.float32)}
+
+    mon = Monitor()          # auto-creates + binds an obs bundle
+    cfg = LoopConfig(ckpt_dir=str(tmp_path / "ck"), save_every=100,
+                     fault_policy="recompute", log_every=100)
+    loop = TrainLoop(step_fn, DS(), cfg=cfg, monitor=mon)
+    state0 = {"w": jnp.zeros(()), "step": jnp.zeros((), jnp.int32)}
+    loop.run(state0, 6)
+    assert mon.summary()["ticks"] == 6               # one per step
+    assert mon.estimate(op="gemm")["errors"] == 1
+    # the single flagged step is under the default burst threshold
+    assert not mon.active_alerts()
+    assert mon.summary()["health"] == {}
+
+
+# ------------------------- serving engine integration -----------------------
+
+N_SLOTS = 2
+MAX_PROMPT = 8
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduce_cfg(get_arch("llama3.2-1b"))
+    tenants = [TenantSpec("t", ProtectionPlan.parse("*:policy=log",
+                                                    name="t"))]
+    eng = ServingEngine(cfg, tenants, n_slots=N_SLOTS,
+                        max_prompt=MAX_PROMPT, max_new_tokens=MAX_NEW,
+                        seed=0)
+    eng.warmup()
+    return eng
+
+
+def _stream(n, seed=0):
+    return chat_stream(n, tenants={"t": 1.0}, rate_rps=500.0, seed=seed,
+                       mean_prompt=6, max_prompt=MAX_PROMPT,
+                       mean_output=3, max_output=MAX_NEW)
+
+
+def test_engine_burst_to_quarantine_to_recovery_from_jsonl(engine,
+                                                           tmp_path):
+    """The acceptance scenario: a mid-stream fault burst drives alert →
+    degraded/quarantined → engine responses → probe recovery, and every
+    link of that chain is reconstructible from obs_events.jsonl alone,
+    with exact replay counter-equivalence."""
+    engine.reset_state()
+    obs = Observability.create()
+    mon = Monitor()
+    burst = [FaultInjection(step=s, victim="mlp.down", seed=i)
+             for i, s in enumerate((4, 5, 6))]
+    tel = engine.run(_stream(24, seed=3), inject=burst, obs=obs,
+                     monitor=mon)
+    s = tel.summary()
+
+    # live side: the burst fired the detection rules and the machine
+    # walked up to quarantined and back down to healthy
+    fired = {a["rule"] for a in s["monitor"]["alerts"]}
+    assert "detection-burst" in fired
+    assert all(a["resolved_t_s"] is not None
+               for a in s["monitor"]["alerts"])
+    hops = [(x["old"], x["new"]) for x in s["monitor"]["transitions"]]
+    assert hops[0][0] == "healthy"                   # escalated up...
+    assert any(new == "quarantined" for _, new in hops)
+    assert s["monitor"]["health"] == {"tenant:t": "healthy"}
+    # every completed request still finished (quarantine gates
+    # admission, it does not drop queued work)
+    assert sum(t["completed"] for t in s["per_tenant"].values()) == 24
+
+    # export, then forget the live objects: the JSONL alone must carry
+    # the whole story
+    paths = obs.write(str(tmp_path))
+    events = [json.loads(l) for l in open(paths["events"])]
+    for d in events:
+        validate_event(d)
+    firing = [d for d in events if d["kind"] == "alert"
+              and d["attrs"]["state"] == "firing"]
+    assert any(d["attrs"]["rule"] == "detection-burst" for d in firing)
+    trans = [d for d in events if d["kind"] == "health"
+             and d["source"] == "obs.monitor"]
+    seq = [(d["attrs"]["from"], d["attrs"]["to"]) for d in trans]
+    assert seq[0][0] == "healthy"
+    assert any(new == "quarantined" for _, new in seq)
+    assert seq[-1][1] == "healthy"                   # recovery is there
+    actions = [d["attrs"]["action"] for d in events
+               if d["kind"] == "health"
+               and d["source"] == "serving.engine"]
+    assert "escalate" in actions and "quarantine" in actions
+    assert "recover" in actions
+
+    # exact counter-mirror: replaying the JSONL reproduces the live
+    # registry's fault-pipeline families line-for-line
+    reg = replay(paths["events"])
+    assert _mirrored_lines(obs.registry) == _mirrored_lines(reg)
+
+
+def test_engine_monitor_responses_can_be_disabled(engine):
+    from repro.obs import EngineResponses
+
+    engine.reset_state()
+    mon = Monitor(responses=EngineResponses(quarantine=False,
+                                            escalate=False, scrub=False))
+    obs = Observability.create()
+    burst = [FaultInjection(step=s, victim="mlp.down", seed=i)
+             for i, s in enumerate((4, 5, 6))]
+    tel = engine.run(_stream(24, seed=3), inject=burst, obs=obs,
+                     monitor=mon)
+    actions = {e.attrs.get("action") for e in obs.bus
+               if e.kind == "health" and e.source == "serving.engine"}
+    assert "quarantine" not in actions and "escalate" not in actions
+    # observation still happened — only the responses were held back
+    assert tel.summary()["monitor"]["alerts_fired"] >= 1
+
+
+def test_engine_paged_paging_lifecycle_events_and_replay(tmp_path):
+    """Satellite: the paged-KV lifecycle (admit / evict_corrupt /
+    rebuild / scrub_cache) emits typed info events + tracer spans, and
+    replay mirrors repro_paging_ops_total exactly."""
+    from repro.paging import PagingConfig
+    from repro.serving.workload import chat_stream as paged_stream
+
+    cfg = reduce_cfg(get_arch("llama3.2-1b"))
+    plan = ProtectionPlan.parse("*:policy=recompute,kv_cache_paged:on",
+                                name="paged-fix")
+    eng = ServingEngine(cfg, [TenantSpec("a", plan)], n_slots=2,
+                        max_prompt=32, max_new_tokens=8,
+                        paging=PagingConfig(page_size=8, n_pages=32))
+    obs = Observability.create()
+    stream = paged_stream(6, tenants={"a": 1.0}, rate_rps=200.0, seed=3,
+                          mean_prompt=24, max_prompt=32, mean_output=6,
+                          max_output=8, prefix_len=16, prefix_seed=77)
+    tel = eng.run(stream, inject=[FaultInjection(
+        step=5, target="kv", persistent=True, seed=7)], obs=obs)
+    assert tel.summary()["faults"]["injections_detected"] == 1
+
+    paging = [e for e in obs.bus if e.kind == "info"
+              and e.attrs.get("channel") == "paging"]
+    actions = [e.attrs["action"] for e in paging]
+    for want in ("admit", "scrub_cache", "evict_corrupt", "rebuild"):
+        assert want in actions, actions
+    admit = next(e for e in paging if e.attrs["action"] == "admit")
+    assert admit.attrs["pages"] >= 1 and admit.attrs["lane"]
+    assert admit.request_ids                         # attribution rides
+    span_names = {s.name for s in obs.tracer.spans}
+    assert {"paged_admit", "paged_scrub_cache",
+            "paged_rebuild"} <= span_names
+    # counters match the event stream, live and replayed
+    ops = obs.registry.counter("repro_paging_ops_total")
+    for action in set(actions):
+        n = sum(1 for a in actions if a == action)
+        assert sum(ops.value(action=action, lane=lane)
+                   for lane in {e.attrs["lane"] for e in paging}) == n
+    paths = obs.write(str(tmp_path))
+    reg = replay(paths["events"])
+    assert _mirrored_lines(obs.registry) == _mirrored_lines(reg)

@@ -52,12 +52,28 @@ def test_jsonl_round_trip(tmp_path):
     assert list(back) == list(bus)
 
 
-def test_from_jsonl_rejects_bad_record(tmp_path):
+def test_from_jsonl_rejects_bad_record_naming_line(tmp_path):
     p = tmp_path / "bad.jsonl"
-    d = FaultEvent(op="qgemm", step=0, source="t").to_dict()
-    d["kind"] = "nope"
+    good = FaultEvent(op="qgemm", step=0, source="t").to_dict()
+    bad = dict(good, kind="nope")
+    p.write_text(json.dumps(good) + "\n" + json.dumps(bad) + "\n")
+    with pytest.raises(ValueError, match=r"bad\.jsonl:2: .*kind"):
+        EventBus.from_jsonl(str(p))
+
+
+def test_from_jsonl_reads_schema_v1_files(tmp_path):
+    """Migration guard: v1 exports (pre-alert/health kinds) stay
+    readable; only records claiming a NEWER schema are rejected."""
+    p = tmp_path / "v1.jsonl"
+    d = FaultEvent(op="qgemm", step=3, source="old", errors=1,
+                   checks=2).to_dict()
+    d["schema"] = 1
     p.write_text(json.dumps(d) + "\n")
-    with pytest.raises(ValueError, match="kind"):
+    (ev,) = EventBus.from_jsonl(str(p))
+    assert (ev.op, ev.step, ev.errors) == ("qgemm", 3, 1)
+    d["schema"] = EVENT_SCHEMA_VERSION + 1
+    p.write_text(json.dumps(d) + "\n")
+    with pytest.raises(ValueError, match="newer"):
         EventBus.from_jsonl(str(p))
 
 
@@ -153,6 +169,45 @@ def test_counter_gauge_histogram_prometheus_text():
     assert 'repro_step_duration_ms_sum{kind="decode"} 55.5' in text
 
 
+def test_histogram_bucket_edge_semantics():
+    """A value exactly on a bucket boundary lands in THAT bucket
+    (``le`` is inclusive, matching Prometheus), and values above every
+    finite bucket land only in +Inf."""
+    reg = MetricsRegistry()
+    h = reg.histogram("h_ms", buckets=(1.0, 10.0))
+    h.observe(1.0, kind="d")            # exactly on the first edge
+    h.observe(10.0, kind="d")           # exactly on the last finite edge
+    h.observe(10.0000001, kind="d")     # just past it -> +Inf only
+    text = reg.to_prometheus()
+    assert 'h_ms_bucket{kind="d",le="1"} 1' in text
+    assert 'h_ms_bucket{kind="d",le="10"} 2' in text       # cumulative
+    assert 'h_ms_bucket{kind="d",le="+Inf"} 3' in text
+    assert 'h_ms_count{kind="d"} 3' in text
+    # unsorted bucket args are sorted at construction
+    assert reg.histogram("h_ms").buckets == (1.0, 10.0)
+    h2 = MetricsRegistry().histogram("h2", buckets=(10.0, 1.0))
+    assert h2.buckets == (1.0, 10.0)
+    # label sets keep independent bucket counts
+    h.observe(0.5, kind="other")
+    assert h.count(kind="d") == 3 and h.count(kind="other") == 1
+
+
+def test_gauge_set_vs_inc_prometheus_output():
+    reg = MetricsRegistry()
+    g = reg.gauge("g_depth")
+    g.set(3, lane="0")
+    g.set(1, lane="0")                   # set overwrites
+    g.inc(2, lane="1")
+    g.inc(-3, lane="1")                  # gauges may go down
+    text = reg.to_prometheus()
+    assert "# TYPE g_depth gauge" in text
+    assert 'g_depth{lane="0"} 1' in text
+    assert 'g_depth{lane="1"} -1' in text
+    # counters reject what gauges allow
+    with pytest.raises(ValueError):
+        reg.counter("c_total").inc(-1)
+
+
 def test_registry_get_or_create_and_type_guard():
     reg = MetricsRegistry()
     assert reg.counter("x") is reg.counter("x")
@@ -194,12 +249,27 @@ def test_tracer_spans_and_chrome_trace(tmp_path):
 # --------------------------- bundle + replay --------------------------------
 
 def test_observability_write_and_replay(tmp_path):
+    """The counter-mirror invariant, in miniature: emit events paired
+    with exactly the live incs the real sites make, then check replay
+    reproduces those families line-for-line from the JSONL alone."""
     obs = Observability.create()
+    # what observe_metrics does for one flagged step (detection + step
+    # summary), what the engine does for one injection
+    obs.registry.counter("repro_detections_total").inc(
+        1, op="qgemm", source="serving.engine")
     obs.bus.emit(FaultEvent(op="qgemm", step=1, source="serving.engine",
                             errors=2, checks=3, request_ids=(5,)))
+    obs.registry.counter("repro_abft_checks_total").inc(
+        3, op="qgemm", source="serving.engine")
+    obs.registry.counter("repro_abft_errors_total").inc(
+        2, op="qgemm", source="serving.engine")
+    obs.bus.emit(FaultEvent(op="step", step=1, source="serving.engine",
+                            kind="info", errors=2, checks=3,
+                            attrs={"channel": "step",
+                                   "by_op": {"qgemm": [3, 2]}}))
+    obs.registry.counter("repro_injections_total").inc(1, source="s")
     obs.bus.emit(FaultEvent(op="qgemm", step=0, source="s",
                             kind="injection"))
-    obs.registry.counter("repro_detections_total", "d").inc(1, cell="c")
     with obs.tracer.span("phase"):
         pass
     paths = obs.write(str(tmp_path))
@@ -210,8 +280,52 @@ def test_observability_write_and_replay(tmp_path):
     reg = replay(paths["events"])
     assert reg.counter("repro_detections_total").value(
         op="qgemm", source="serving.engine") == 1
-    assert reg.counter("repro_abft_errors_total").value(op="qgemm") == 2
+    assert reg.counter("repro_abft_errors_total").value(
+        op="qgemm", source="serving.engine") == 2
+    assert reg.counter("repro_abft_checks_total").value(
+        op="qgemm", source="serving.engine") == 3
     assert reg.counter("repro_injections_total").value(source="s") == 1
+    fams = ("repro_detections_total", "repro_injections_total",
+            "repro_abft_errors_total", "repro_abft_checks_total")
+    live = sorted(l for l in obs.registry.to_prometheus().splitlines()
+                  if l.startswith(fams))
+    rep = sorted(l for l in reg.to_prometheus().splitlines()
+                 if l.startswith(fams))
+    assert live == rep
+
+
+def test_observability_incremental_flush_is_crash_durable(tmp_path):
+    """With open_incremental, every emitted event is already on disk —
+    a killed run (no final write()) loses nothing from the JSONL, and
+    the metric snapshot is no staler than ``every`` events."""
+    obs = Observability.create()
+    paths = obs.open_incremental(str(tmp_path), every=2)
+    c = obs.registry.counter("repro_detections_total")
+    for i in range(5):
+        c.inc(1, op="qgemm", source="t")
+        obs.bus.emit(FaultEvent(op="qgemm", step=i, source="t"))
+    # simulate a crash: never call obs.write() — read what's on disk
+    lines = [json.loads(l) for l in open(paths["events"])]
+    assert [d["step"] for d in lines] == [0, 1, 2, 3, 4]
+    for d in lines:
+        validate_event(d)
+    # snapshot rewrites every 2 events: >= 4 detections are visible
+    prom = open(paths["prometheus"]).read()
+    assert 'repro_detections_total{op="qgemm",source="t"} 4' in prom
+    # events emitted BEFORE opening are backfilled, not lost
+    obs2 = Observability.create()
+    obs2.bus.emit(FaultEvent(op="early", step=0, source="t"))
+    p2 = obs2.open_incremental(str(tmp_path), prefix="o2", every=100)
+    obs2.bus.emit(FaultEvent(op="late", step=1, source="t"))
+    ops = [json.loads(l)["op"] for l in open(p2["events"])]
+    assert ops == ["early", "late"]
+    # a final write() closes the sink and is a clean full rewrite
+    out = obs2.write(str(tmp_path), prefix="o2")
+    assert [json.loads(l)["op"] for l in open(out["events"])] == \
+        ["early", "late"]
+    obs2.bus.emit(FaultEvent(op="after", step=2, source="t"))  # no sink
+    assert [json.loads(l)["op"] for l in open(out["events"])] == \
+        ["early", "late"]
 
 
 # --------------------- telemetry percentile degenerate cases -----------------
