@@ -10,6 +10,7 @@ Examples::
     python -m repro.campaign --grid training --quick  # train-step seams
     python -m repro.campaign --grid multidevice --quick  # sharded cells
     python -m repro.campaign --grid serving_soak --quick   # live-traffic
+    python -m repro.campaign --grid adaptive --quick  # threshold loop
     python -m repro.campaign --grid full --device-count 8 --out bench/
     python -m repro.campaign --diff OLD.json NEW.json # exit 1 on regression
     python -m repro.campaign --trend                  # baseline history gate
@@ -33,10 +34,12 @@ def main(argv=None) -> int:
     ap.add_argument("--grid", default=None,
                     choices=["quick", "paper", "thresholds", "soak",
                              "victims", "training", "multidevice",
-                             "serving_soak", "paging", "full"],
+                             "serving_soak", "paging", "adaptive",
+                             "full"],
                     help="named grid to run (see repro.campaign.grids; "
                          "serving_soak runs repro.serving.soak, paging "
-                         "runs repro.serving.paging_soak)")
+                         "runs repro.serving.paging_soak, adaptive runs "
+                         "repro.campaign.adaptive)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan", default=None,
                     help="serving grids: override every tenant's "
@@ -106,7 +109,7 @@ def main(argv=None) -> int:
     if grid is None:
         ap.error("pick a grid (--quick / --grid {quick,paper,thresholds,"
                  "soak,victims,training,multidevice,serving_soak,paging,"
-                 "full}) or --diff OLD NEW")
+                 "adaptive,full}) or --diff OLD NEW")
 
     # grids with sharded cells are pointless on a 1-device host: force
     # the 4-device host platform the multidevice baseline was produced
@@ -170,6 +173,21 @@ def main(argv=None) -> int:
               f"{os.path.join(args.out, 'BENCH_campaign_serving_soak')}"
               f".json")
         _print_monitor(monitor)
+        _write_obs(obs, args.obs_dir)
+        return 0
+    if grid == "adaptive":
+        # controller-convergence cells (repro.campaign.adaptive)
+        from repro.campaign.adaptive import run_adaptive_campaign
+        from repro.campaign.artifacts import markdown_table
+        result = run_adaptive_campaign(quick=args.quick, seed=args.seed,
+                                       out_dir=args.out, obs=obs,
+                                       verbose=lambda s: print(s,
+                                                               flush=True))
+        print()
+        print(markdown_table(result))
+        name = "adaptive_quick" if args.quick else "adaptive"
+        print(f"artifact: "
+              f"{os.path.join(args.out, 'BENCH_campaign_' + name)}.json")
         _write_obs(obs, args.obs_dir)
         return 0
     if grid == "paging":

@@ -306,8 +306,11 @@ def _eb_trial(state, plan: CellPlan, key: jax.Array):
     table = state["table"]
     k1, k2, k3, k4 = jax.random.split(key, 4)
     idx = jax.random.randint(k1, (bags, pool), 0, rows, jnp.int32)
+    # distinct keys per victim coordinate: reusing k2 for both draws
+    # made (b, p) perfectly correlated quantiles, so sweep points within
+    # a bit band sampled a 1-D slice of the victim space
     b = jax.random.randint(k2, (), 0, bags)
-    p = jax.random.randint(k2, (), 0, pool)
+    p = jax.random.randint(jax.random.fold_in(k2, 1), (), 0, pool)
     row = idx[b, p]
     col = jax.random.randint(k3, (), 0, dim)
     elem = table[row, col]

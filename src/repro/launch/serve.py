@@ -115,6 +115,19 @@ def main(argv=None) -> int:
                          "healthy/degraded/quarantined tenant states "
                          "with real engine responses (admission "
                          "quarantine, plan escalation, paged-KV scrub)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="close the threshold loop: ops whose plan says "
+                         "threshold=adaptive get a per-(op, tenant) "
+                         "FP-budget controller over rel_bound, fed by "
+                         "the monitor's Wilson flag-rate estimates "
+                         "(implies --monitor)")
+    ap.add_argument("--fp-budget", type=float, default=0.01,
+                    help="--adaptive: tolerated false-positive rate the "
+                         "controllers hold")
+    ap.add_argument("--calibrate-from", default=None, metavar="ARTIFACT",
+                    help="--adaptive: seed initial bounds from a "
+                         "committed --grid thresholds sweep artifact "
+                         "instead of the ops' static defaults")
     ap.add_argument("--device-count", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -216,22 +229,36 @@ def main(argv=None) -> int:
                   if s >= 0]
 
     obs = None
-    if args.obs_dir or args.monitor:
+    if args.obs_dir or args.monitor or args.adaptive:
         from repro.obs import Observability
         obs = Observability.create()
         if args.obs_dir and args.obs_flush_every > 0:
             obs.open_incremental(args.obs_dir,
                                  every=args.obs_flush_every)
     monitor = None
-    if args.monitor:
+    if args.monitor or args.adaptive:
         from repro.obs import Monitor
         monitor = Monitor()
+    adapt = None
+    if args.adaptive:
+        from repro.adapt import (AdaptiveThresholds, ControllerConfig,
+                                 calibrate_from_sweep)
+        adapt = AdaptiveThresholds(
+            config=ControllerConfig(fp_budget=args.fp_budget),
+            source="launch.serve")
+        if args.calibrate_from:
+            bound = calibrate_from_sweep(args.calibrate_from,
+                                         fp_budget=args.fp_budget)
+            for t in tenants:
+                adapt.manage("embedding_bag", t.name, rel_bound=bound)
+            log.info("adaptive: calibrated embedding_bag rel_bound=%.3g "
+                     "from %s", bound, args.calibrate_from)
 
     log.info("serving %d %s requests (%s arrivals @ %g rps) on %d slots, "
              "%d lane(s)...", args.requests, cfg.family, args.arrival,
              args.rate, args.slots, len(engine.lanes))
     telemetry = engine.run(stream, inject=inject, obs=obs,
-                           monitor=monitor)
+                           monitor=monitor, adapt=adapt)
     s = telemetry.summary()
 
     log.info("")
@@ -265,6 +292,14 @@ def main(argv=None) -> int:
             log.info("  health %-16s %s -> %s at tick %d (%s)",
                      tr["scope"], tr["old"], tr["new"], tr["tick"],
                      tr["reason"] or "recovered")
+    if adapt is not None:
+        for c in s.get("thresholds") or adapt.summary():
+            log.info("threshold %s/%s: rel_bound=%.3g after %d move(s), "
+                     "%sconverged%s", c["op"], c["tenant"],
+                     c["rel_bound"], c["adjustments"],
+                     "" if c["converged"] else "NOT ",
+                     "" if c["ticks_to_converge"] is None
+                     else f" at tick {c['ticks_to_converge']}")
     for lane_key, st in engine.paging_stats().items():
         log.info("paging %s: resident=%d/%d high-water=%d "
                  "prefix-hit=%.2f evictions=%d rebuilds=%d", lane_key,

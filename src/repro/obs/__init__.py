@@ -157,6 +157,10 @@ def replay(events: Union[str, EventBus, Iterable[FaultEvent]],
       publishers inc (detections from ``attrs.effective_detected`` when
       present else ``errors``; injections from ``checks``; escapes /
       false_positives from attrs when the publisher emitted them);
+    * ``threshold`` — adaptive-threshold controller moves →
+      ``repro_threshold_adjustments_total{op,tenant,direction}`` + the
+      ``repro_threshold_rel_bound`` gauge set to the new bound
+      (``detector_value``);
     * ``alert`` (state=firing) — ``repro_alerts_total{rule,scope,severity}``;
     * ``health`` — monitor transitions →
       ``repro_health_transitions_total{scope,to}`` + the
@@ -212,6 +216,19 @@ def replay(events: Union[str, EventBus, Iterable[FaultEvent]],
                     "paged-KV lifecycle operations by action and lane"
                 ).inc(1, action=str(ev.attrs.get("action", "")),
                       lane=str(ev.attrs.get("lane", "")))
+        elif ev.kind == "threshold":
+            op = ev.op
+            tenant = str(ev.attrs.get("tenant", "*"))
+            registry.counter(
+                "repro_threshold_adjustments_total",
+                "threshold-controller moves by op, tenant, and direction"
+            ).inc(1, op=op, tenant=tenant,
+                  direction=str(ev.attrs.get("direction", "")))
+            if ev.detector_value is not None:
+                registry.gauge(
+                    "repro_threshold_rel_bound",
+                    "current adaptive rel_bound per op and tenant").set(
+                        float(ev.detector_value), op=op, tenant=tenant)
         elif ev.kind == "alert":
             if ev.attrs.get("state") == "firing":
                 registry.counter(

@@ -23,14 +23,16 @@ import json
 import math
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
-#: bump when FaultEvent gains/renames REQUIRED fields.  v2 adds the
-#: monitor kinds ``alert`` / ``health``; the wire format is otherwise
-#: unchanged, so v1 files (old committed artifacts) still load.
-EVENT_SCHEMA_VERSION = 2
+#: bump when FaultEvent gains/renames REQUIRED fields.  v2 added the
+#: monitor kinds ``alert`` / ``health``; v3 adds the adaptive-threshold
+#: ``threshold`` kind (controller adjustments).  The wire format is
+#: otherwise unchanged, so v1/v2 files (old committed artifacts) still
+#: load.
+EVENT_SCHEMA_VERSION = 3
 
 #: the event taxonomy; ``validate_event`` rejects anything else
 EVENT_KINDS = ("detection", "false_positive", "injection", "cell", "info",
-               "alert", "health")
+               "alert", "health", "threshold")
 
 #: required keys and their types in the JSONL wire format
 EVENT_SCHEMA: Dict[str, tuple] = {
@@ -183,9 +185,10 @@ class EventBus:
     @classmethod
     def from_jsonl(cls, path: str) -> "EventBus":
         """Load an exported stream; reads any schema <= the current
-        version (v1 files predate the ``alert``/``health`` kinds but are
-        otherwise identical).  Invalid records raise ``ValueError``
-        naming the offending ``path:line``."""
+        version (v1 files predate the ``alert``/``health`` kinds, v2
+        files predate ``threshold``, but are otherwise identical).
+        Invalid records raise ``ValueError`` naming the offending
+        ``path:line``."""
         bus = cls()
         with open(path) as f:
             for ln, line in enumerate(f, start=1):

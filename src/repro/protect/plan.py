@@ -31,6 +31,13 @@ from typing import Optional, Tuple
 #: the detect->act policies repro.core.policy implements.
 POLICY_NAMES = ("log", "recompute", "correct", "abort")
 
+#: how a float-checked op's ``rel_bound`` is chosen: ``static`` (the
+#: rule's/op's constant — the default) or ``adaptive`` (an online
+#: FP-budget controller from ``repro.adapt`` owns it and rewrites the
+#: bound at evaluation ticks).  The field is pure metadata to the
+#: resolver — the adapt layer reads it to decide which ops it manages.
+THRESHOLD_MODES = ("static", "adaptive")
+
 #: op kinds that default to DISABLED unless a matching rule enables them:
 #: the quantized KV cache changes the cache representation (lossy int8),
 #: and float-GEMM ABFT adds training-path work — both are opt-in, so a
@@ -51,6 +58,7 @@ class OpRule:
     policy: Optional[str] = None          #   packed | unfused | pallas)
     rel_bound: Optional[float] = None     # float-checked ops' threshold
     max_retries: Optional[int] = None     # recompute policy budget
+    threshold: Optional[str] = None       # static | adaptive (None=inherit)
 
     def __post_init__(self):
         if self.policy is not None and self.policy not in POLICY_NAMES:
@@ -58,6 +66,10 @@ class OpRule:
                              f"have {POLICY_NAMES}")
         if self.max_retries is not None and self.max_retries < 1:
             raise ValueError("max_retries must be >= 1")
+        if self.threshold is not None and \
+                self.threshold not in THRESHOLD_MODES:
+            raise ValueError(f"unknown threshold mode {self.threshold!r}; "
+                             f"have {THRESHOLD_MODES}")
 
     def matches(self, op: str, path: str = "") -> bool:
         target = f"{op}/{path}"
@@ -76,6 +88,7 @@ class ResolvedRule:
     policy: str = "log"
     rel_bound: Optional[float] = None     # None = op default
     max_retries: int = 1
+    threshold: str = "static"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +107,7 @@ class ProtectionPlan:
         enabled = op not in OPT_IN_OPS
         scheme, policy = None, None
         rel_bound, max_retries = None, None
+        threshold = None
         for r in self.rules:
             if not r.matches(op, path):
                 continue
@@ -107,9 +121,12 @@ class ProtectionPlan:
                 rel_bound = r.rel_bound
             if r.max_retries is not None:
                 max_retries = r.max_retries
+            if r.threshold is not None:
+                threshold = r.threshold
         return ResolvedRule(enabled=enabled, scheme=scheme,
                             policy=policy or "log", rel_bound=rel_bound,
-                            max_retries=max_retries or 1)
+                            max_retries=max_retries or 1,
+                            threshold=threshold or "static")
 
     def with_rules(self, *rules: OpRule) -> "ProtectionPlan":
         """A new plan with ``rules`` appended (they override)."""
@@ -163,6 +180,8 @@ class ProtectionPlan:
                         kw["rel_bound"] = float(v)
                     elif k in ("retries", "max_retries"):
                         kw["max_retries"] = int(v)
+                    elif k == "threshold":
+                        kw["threshold"] = v.strip()
                     else:
                         raise ValueError(f"unknown plan setting {k!r} in "
                                          f"clause {clause!r}")
@@ -228,6 +247,8 @@ class ProtectionPlan:
                 bits.append(f"rel_bound={r.rel_bound:g}")
             if r.max_retries is not None:
                 bits.append(f"retries={r.max_retries}")
+            if r.threshold is not None:
+                bits.append(f"threshold={r.threshold}")
             out.append(":".join(bits))
         return ",".join(out)
 

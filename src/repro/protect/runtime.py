@@ -164,7 +164,8 @@ def kv_rule(ctx, name: str = "attn") -> ResolvedRule:
     if r.enabled and not bool(getattr(ctx, "quant", False)):
         return ResolvedRule(enabled=False, scheme=r.scheme, policy=r.policy,
                             rel_bound=r.rel_bound,
-                            max_retries=r.max_retries)
+                            max_retries=r.max_retries,
+                            threshold=r.threshold)
     return r
 
 

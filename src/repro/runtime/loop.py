@@ -52,7 +52,8 @@ class TrainLoop:
 
     def __init__(self, step_fn: Callable, dataset, *, cfg: LoopConfig,
                  shardings=None, metrics_hook: Optional[Callable] = None,
-                 obs=None, monitor=None):
+                 obs=None, monitor=None, adapt=None,
+                 on_threshold: Optional[Callable] = None):
         self.step_fn = step_fn
         self.dataset = dataset
         self.cfg = cfg
@@ -66,6 +67,19 @@ class TrainLoop:
         self.monitor = monitor
         if monitor is not None:
             monitor.bind(obs)
+        #: AdaptiveThresholds bundle ticked after each observed step —
+        #: the train-side twin of the serving engine's threshold loop.
+        #: The step_fn is caller-jitted, so applying a moved bound is the
+        #: caller's job: ``on_threshold(moved)`` receives the
+        #: {(op, tenant): new_bound} map and may return a replacement
+        #: step_fn (re-jitted against the new plan); returning ``None``
+        #: keeps the current one (log-only adaptation).
+        if adapt is not None and monitor is None:
+            raise ValueError("adapt= needs monitor= (its sensor)")
+        self.adapt = adapt
+        self.on_threshold = on_threshold
+        if adapt is not None:
+            adapt.bind(obs)
         self.ckpt = CheckpointManager(cfg.ckpt_dir,
                                       keep_last=cfg.keep_last,
                                       save_every=cfg.save_every)
@@ -148,6 +162,14 @@ class TrainLoop:
             # flag must not erase the detection from the event stream
             self._observe_step(step, metrics,
                                time.perf_counter() - t_step)
+            if self.adapt is not None and self.monitor is not None:
+                moved = self.adapt.tick(self.monitor,
+                                        t_s=self.obs.tracer.now_s()
+                                        if self.obs else 0.0, step=step)
+                if moved and self.on_threshold is not None:
+                    new_fn = self.on_threshold(moved)
+                    if new_fn is not None:
+                        self.step_fn = new_fn
             if errs:
                 self.stats["faulty_steps"] += 1
                 if self.cfg.fault_policy == "recompute":

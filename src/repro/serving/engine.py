@@ -171,6 +171,8 @@ class ServingEngine:
         self._obs = None
         #: detection-health Monitor for the CURRENT run (run(monitor=...))
         self._monitor = None
+        #: AdaptiveThresholds controller bundle (run(adapt=...))
+        self._adapt = None
         #: lane keys whose plan was already escalated (one-way per engine)
         self._escalated = set()
 
@@ -1099,6 +1101,50 @@ class ServingEngine:
                 self._paged_repair(lane, telemetry, "recompute")
                 self._health_action("scrub", tr.scope, lane)
 
+    # ------------------------------ adaptive thresholds ----------------------
+
+    def _register_adaptive(self) -> None:
+        """One controller per (op, tenant) whose lane plan opts the op
+        into ``threshold=adaptive``, seeded from the plan's resolved
+        ``rel_bound`` (or the op default) unless the caller pre-seeded
+        the controller (e.g. from ``calibrate_from_sweep``)."""
+        from repro.adapt import _op_default_bound
+        from repro.core.policy import op_kinds
+        for lane in self.lanes:
+            for op in op_kinds():
+                r = lane.plan.resolve(op)
+                if not (r.enabled and r.threshold == "adaptive"):
+                    continue
+                current = (r.rel_bound if r.rel_bound is not None
+                           else _op_default_bound(op))
+                for tenant in sorted(lane.tenants):
+                    c = self._adapt.manage(op, tenant,
+                                           rel_bound=r.rel_bound)
+                    # the lane compiles against the controller's bound
+                    # (which may predate this run via calibration)
+                    if c.rel_bound != current:
+                        self._apply_bound(op, tenant, c.rel_bound)
+
+    def _apply_bound(self, op: str, tenant: str, bound: float) -> None:
+        """Rewrite one tenant lane's plan with the controller's bound
+        and re-jit — the ``_escalate_lane`` precedent.  Hysteresis +
+        cooldown keep moves (and hence recompiles) rare."""
+        lane = self._lane_of.get(tenant)
+        if lane is None:
+            return
+        from repro.protect.plan import OpRule
+        lane.plan = lane.plan.with_rules(
+            OpRule(pattern=op, rel_bound=float(bound)))
+        self._build_lane_fns(lane)
+
+    def _apply_adaptive(self) -> None:
+        if self._adapt is None or self._monitor is None:
+            return
+        moved = self._adapt.tick(self._monitor, t_s=self.clock_s,
+                                 step=self.global_step)
+        for (op, tenant), bound in moved.items():
+            self._apply_bound(op, tenant, bound)
+
     # ------------------------------ main loop --------------------------------
 
     def run(self, requests: Sequence[Request], *,
@@ -1106,7 +1152,7 @@ class ServingEngine:
             telemetry: Optional[Telemetry] = None,
             warmup: bool = True,
             max_iterations: int = 1_000_000,
-            obs=None, monitor=None) -> Telemetry:
+            obs=None, monitor=None, adapt=None) -> Telemetry:
         """Serve ``requests`` to completion.  ``obs`` (an
         :class:`repro.obs.Observability`) additionally lands every step's
         FaultReport counters, spans, and per-request-attributed detection
@@ -1119,8 +1165,17 @@ class ServingEngine:
         quarantined tenant's admissions (with recovery probes), escalate
         the lane's ProtectionPlan (``log`` → ``recompute``), and schedule
         a paged-KV scrub+repair.  The monitor's summary lands on the
-        returned telemetry."""
+        returned telemetry.
+
+        ``adapt`` (a :class:`repro.adapt.AdaptiveThresholds`) closes the
+        *threshold* loop on top of the monitor: lanes whose plan marks
+        an op ``threshold=adaptive`` get one FP-budget controller per
+        (op, tenant) which reads the monitor's Wilson flag-rate estimate
+        each iteration and rewrites the lane's ``rel_bound`` (plan
+        rewrite + re-jit) when it moves; requires ``monitor``."""
         telemetry = telemetry if telemetry is not None else Telemetry()
+        if adapt is not None and monitor is None:
+            raise ValueError("adapt= needs monitor= (its sensor)")
         if monitor is not None and obs is None:
             from repro.obs import Observability
             obs = Observability.create()
@@ -1128,6 +1183,10 @@ class ServingEngine:
         self._monitor = monitor
         if monitor is not None:
             monitor.bind(obs)
+        self._adapt = adapt
+        if adapt is not None:
+            adapt.bind(obs)
+            self._register_adaptive()
         pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
         for r in pending:
             if r.tenant not in self._lane_of:
@@ -1144,10 +1203,13 @@ class ServingEngine:
                                  max_iterations)
             if monitor is not None:
                 out.monitor = monitor.summary()
+            if adapt is not None:
+                out.thresholds = adapt.summary()
             return out
         finally:
             self._obs = None
             self._monitor = None
+            self._adapt = None
 
     def _run_loop(self, pending, injections, inj_i, telemetry,
                   max_iterations) -> Telemetry:
@@ -1217,6 +1279,7 @@ class ServingEngine:
                     self.clock_s += 1e-3
                     self._monitor.idle_tick(self.clock_s)
                 self._apply_monitor_responses(telemetry)
+                self._apply_adaptive()
 
             if injected_now:
                 self._restore_injection()

@@ -149,6 +149,10 @@ class Telemetry:
         #: detection-health monitor summary (alerts, health states,
         #: transitions) — set by ServingEngine.run(monitor=...)
         self.monitor: Optional[dict] = None
+        #: adaptive-threshold controller summaries (per (op, tenant):
+        #: final rel_bound, adjustments, convergence) — set by
+        #: ServingEngine.run(adapt=...)
+        self.thresholds: Optional[list] = None
 
     # ------------------------------ recording -------------------------------
 
@@ -258,6 +262,8 @@ class Telemetry:
             },
             **({"monitor": self.monitor}
                if self.monitor is not None else {}),
+            **({"thresholds": self.thresholds}
+               if self.thresholds is not None else {}),
         }
 
     def to_dict(self) -> dict:

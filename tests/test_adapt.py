@@ -1,0 +1,297 @@
+"""Unit tests for ``repro.adapt`` and its wiring: plan ``threshold=``
+plumbing, the threshold-event live↔replay counter mirror, schema-v3
+round-trips (and v2 back-compat), sweep-artifact calibration, and the
+engine / train-loop integration points.
+
+The static-path acceptance criterion lives here too: plans that never
+mention ``threshold`` must describe (and therefore lane-key and compile)
+exactly as they did before the adaptive stack existed.
+"""
+import json
+
+import pytest
+
+from repro.adapt import (AdaptiveThresholds, ControllerConfig,
+                         ThresholdController, VarianceModel,
+                         calibrate_from_sweep)
+from repro.obs import EventBus, Monitor, Observability, replay
+from repro.obs.events import EVENT_SCHEMA_VERSION, validate_event
+from repro.protect import ProtectionPlan, default_plan
+
+
+def _threshold_lines(registry):
+    return sorted(l for l in registry.to_prometheus().splitlines()
+                  if l.startswith("repro_threshold"))
+
+
+# ------------------------------ plan plumbing -------------------------------
+
+def test_plan_parses_and_describes_threshold_mode():
+    plan = ProtectionPlan.parse(
+        "*:policy=log,embedding_bag:threshold=adaptive")
+    r = plan.resolve("embedding_bag")
+    assert r.threshold == "adaptive"
+    assert plan.resolve("qgemm").threshold == "static"
+    assert "threshold=adaptive" in plan.describe()
+    # describe -> parse round-trips the mode
+    again = ProtectionPlan.parse(plan.describe().split(" ", 1)[-1]
+                                 if " " in plan.describe()
+                                 else plan.describe())
+    assert again.resolve("embedding_bag").threshold == "adaptive"
+
+
+def test_plan_rejects_unknown_threshold_mode():
+    with pytest.raises(ValueError, match="threshold mode"):
+        ProtectionPlan.parse("embedding_bag:threshold=magic")
+
+
+def test_static_plans_describe_without_threshold_token():
+    """Bit-identical static path: a plan that never opts in must not
+    grow a threshold= token (describe() keys the engine's lane cache,
+    so a new token would split every existing lane)."""
+    for plan in (default_plan(),
+                 ProtectionPlan.parse("*:policy=recompute,kv_cache:on")):
+        assert "threshold" not in plan.describe()
+        assert plan.resolve("embedding_bag").threshold == "static"
+
+
+def test_kv_rule_carries_threshold_mode():
+    from types import SimpleNamespace
+
+    from repro.protect.runtime import kv_rule
+    plan = ProtectionPlan.parse(
+        "*:policy=log,kv_cache:on,kv_cache:threshold=adaptive")
+    ctx = SimpleNamespace(plan=plan, quant=True)
+    assert kv_rule(ctx).threshold == "adaptive"
+    # the bf16-gated disabled copy keeps the mode too (field-by-field
+    # reconstruction must not drop new ResolvedRule fields)
+    ctx_bf16 = SimpleNamespace(plan=plan, quant=False)
+    r = kv_rule(ctx_bf16)
+    assert not r.enabled and r.threshold == "adaptive"
+
+
+# ------------------------------ variance model ------------------------------
+
+def test_variance_model_validates_inputs():
+    vm = VarianceModel()
+    with pytest.raises(ValueError, match="no observations"):
+        vm.rel_bound(0.05)
+    vm.observe([1.0, 2.0, 3.0])
+    with pytest.raises(ValueError, match="fp_quantile"):
+        vm.rel_bound(0.0)
+    with pytest.raises(ValueError, match="decay"):
+        VarianceModel(decay=1.0)
+    # clamping: rel_bound(0.5) is the tracked mean (z = 0)
+    assert vm.rel_bound(0.5, ceiling=0.5) == 0.5
+    assert vm.rel_bound(0.5, floor=99.0) == 99.0
+
+
+# ------------------------------ controller ----------------------------------
+
+def test_controller_config_validation():
+    with pytest.raises(ValueError):
+        ControllerConfig(fp_budget=0.0)
+    with pytest.raises(ValueError):
+        ControllerConfig(floor=1e-2, ceiling=1e-5)
+    with pytest.raises(ValueError):
+        ControllerConfig(step=1.0)
+    with pytest.raises(ValueError):
+        ControllerConfig(hysteresis=0.0)
+
+
+def test_controller_abstains_without_evidence():
+    c = ThresholdController("eb", rel_bound=1e-5,
+                            config=ControllerConfig(min_checks=100))
+    assert c.tick({"checks": 50, "flag_rate_low": 1.0,
+                   "flag_rate_high": 1.0}) is None
+    assert c.rel_bound == 1e-5
+    # abstention ticks do not count toward convergence
+    assert not c.converged or c.config.settle_ticks == 0
+
+
+def test_controller_evidence_window_tracks_moves():
+    cfg = ControllerConfig(fp_budget=0.01, min_checks=1,
+                           cooldown_ticks=0, window_ticks=16)
+    c = ThresholdController("eb", rel_bound=1e-5, config=cfg)
+    assert c.evidence_window() == 16          # no moves yet: full window
+    c.tick({"checks": 1000, "flag_rate": 0.5, "flag_rate_low": 0.4,
+            "flag_rate_high": 0.6})           # overrun -> move
+    assert c.evidence_window() == 1           # only post-move evidence
+    c.tick({"checks": 10, "flag_rate_low": 0.0, "flag_rate_high": 1.0})
+    assert c.evidence_window() == 2
+
+
+# ------------------------------ event mirror --------------------------------
+
+def _drive_moves(obs, n_ticks=6):
+    mon = Monitor(rules=())
+    ad = AdaptiveThresholds(config=ControllerConfig(fp_budget=0.02,
+                                                    min_checks=10,
+                                                    cooldown_ticks=0),
+                            obs=obs, source="test.adapt")
+    ad.manage("embedding_bag", "premium", rel_bound=1e-5)
+    for i in range(n_ticks):
+        mon.record_step(float(i), {"embedding_bag": (200, 40)},
+                        tenants=("premium",))
+        ad.tick(mon, t_s=float(i), step=i)
+    return ad
+
+
+def test_threshold_events_replay_counter_mirror(tmp_path):
+    """Every live adjustment's counter/gauge increments are reproduced
+    exactly by replay() from the JSONL alone — the counter-mirror
+    invariant extended to the ``threshold`` kind."""
+    obs = Observability.create()
+    ad = _drive_moves(obs)
+    assert all(c.adjustments > 0 for c in ad.controllers.values())
+    events = [e for e in obs.bus if e.kind == "threshold"]
+    assert events
+    for e in events:
+        assert e.detector_value is not None      # new bound
+        assert e.bound is not None               # old bound
+        assert e.attrs["direction"] in ("raise", "lower")
+        assert e.attrs["tenant"] == "premium"
+
+    path = str(tmp_path / "ev.jsonl")
+    obs.bus.to_jsonl(path)
+    for d in (json.loads(l) for l in open(path)):
+        validate_event(d)
+    reg = replay(EventBus.from_jsonl(path))
+    assert _threshold_lines(obs.registry) == _threshold_lines(reg)
+    assert _threshold_lines(reg)                 # non-vacuous
+
+
+def test_v2_event_files_still_load(tmp_path):
+    """Schema v3 adds the ``threshold`` kind; v2 files (which predate
+    it) must keep loading."""
+    obs = Observability.create()
+    _drive_moves(obs)
+    path = str(tmp_path / "ev.jsonl")
+    obs.bus.to_jsonl(path)
+    lines = open(path).read().splitlines()
+    downgraded = []
+    for l in lines:
+        d = json.loads(l)
+        if d["kind"] == "threshold":
+            continue                             # v2 never wrote these
+        d["schema"] = 2
+        downgraded.append(json.dumps(d))
+    p2 = str(tmp_path / "v2.jsonl")
+    with open(p2, "w") as f:
+        f.write("\n".join(downgraded) + "\n")
+    EventBus.from_jsonl(p2)                      # must not raise
+
+
+# ------------------------------ calibration ---------------------------------
+
+def test_calibrate_from_sweep_picks_tightest_budget_holding_bound():
+    art = {"cells": [
+        {"cell_id": f"thresholds/b{i}", "plan": {
+            "target": "embedding_bag", "bit_band": "significant",
+            "rel_bound": rb},
+         "metrics": {"detection_rate": det, "fp_rate": fp}}
+        for i, (rb, det, fp) in enumerate([
+            (1e-7, 0.99, 0.20), (1e-6, 0.97, 0.008),
+            (1e-5, 0.90, 0.001), (1e-4, 0.60, 0.0)])]}
+    assert calibrate_from_sweep(art, fp_budget=0.01) == 1e-6
+    # nothing holds the budget -> least-FP point (controller loosens)
+    assert calibrate_from_sweep(art, fp_budget=1e-9) == 1e-4
+    with pytest.raises(ValueError, match="sweep points"):
+        calibrate_from_sweep({"cells": []}, fp_budget=0.01)
+
+
+# ------------------------------ serving engine ------------------------------
+
+def test_engine_adaptive_loop_moves_bounds_and_rejits():
+    """End-to-end engine wiring: a ``threshold=adaptive`` plan gets a
+    controller per (op, tenant); on a clean stream the controller
+    tightens to its floor, each move re-jits the lane against the new
+    bound, requests still complete, and the telemetry carries the
+    controller summaries plus typed threshold events."""
+    from repro.configs.registry import get_arch
+    from repro.serving import ServingEngine, TenantSpec, chat_stream
+
+    from helpers import reduce_cfg
+
+    cfg = reduce_cfg(get_arch("llama3.2-1b"))
+    plan = ProtectionPlan.parse("*:policy=log,qgemm:threshold=adaptive",
+                                name="t")
+    eng = ServingEngine(cfg, [TenantSpec("t", plan)], n_slots=2,
+                        max_prompt=8, max_new_tokens=4, seed=0)
+    stream = chat_stream(12, tenants={"t": 1.0}, rate_rps=500.0, seed=1,
+                         mean_prompt=6, max_prompt=8, mean_output=3,
+                         max_output=4)
+
+    ad = AdaptiveThresholds(config=ControllerConfig(
+        fp_budget=0.5, hysteresis=1.0, min_checks=1, cooldown_ticks=4,
+        settle_ticks=2, floor=5e-6, window_ticks=16))
+    with pytest.raises(ValueError, match="monitor"):
+        eng.run(stream, adapt=ad)
+
+    obs = Observability.create()
+    mon = Monitor(rules=())
+    tel = eng.run(stream, obs=obs, monitor=mon, adapt=ad)
+    s = tel.summary()
+    assert s["per_tenant"]["t"]["completed"] == 12
+
+    ctrl = ad.controllers[("qgemm", "t")]
+    assert ctrl.adjustments >= 1                  # clean stream: tightened
+    assert ctrl.rel_bound < 1e-5
+    assert s["thresholds"] == ad.summary()
+    # the lane recompiled against the controller's bound
+    lane = eng._lane_of["t"]
+    assert lane.plan.resolve("qgemm").rel_bound == ctrl.rel_bound
+    moves = [e for e in obs.bus if e.kind == "threshold"]
+    assert len(moves) == ctrl.adjustments
+    assert all(e.attrs["direction"] == "lower" for e in moves)
+
+
+# ------------------------------ train loop ----------------------------------
+
+def test_train_loop_requires_monitor_for_adapt(tmp_path):
+    from repro.runtime.loop import LoopConfig, TrainLoop
+    ad = AdaptiveThresholds()
+    with pytest.raises(ValueError, match="monitor"):
+        TrainLoop(lambda s, b: (s, {}), None,
+                  cfg=LoopConfig(ckpt_dir=str(tmp_path)), adapt=ad)
+
+
+def test_train_loop_ticks_controllers_and_rebinds_step_fn(tmp_path):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.loop import LoopConfig, TrainLoop
+
+    class DS:
+        def batch_at(self, step):
+            rng = np.random.default_rng(step)
+            return {"x": jnp.asarray(rng.standard_normal(4), jnp.float32)}
+
+    def step_fn(state, batch):
+        # every step: 100 checks, 8 flags on a clean stream -> the
+        # (certain) 8% flag rate overruns a 2% budget -> bound raises
+        m = {"abft/embedding_bag_errors": jnp.asarray(8, jnp.int32),
+             "abft/embedding_bag_checks": jnp.asarray(100, jnp.int32)}
+        return {"w": state["w"] + jnp.mean(batch["x"])}, m
+
+    mon = Monitor(rules=())
+    ad = AdaptiveThresholds(config=ControllerConfig(
+        fp_budget=0.02, min_checks=50, cooldown_ticks=0))
+    ad.manage("embedding_bag", "*", rel_bound=1e-5)
+    seen = []
+
+    def on_threshold(moved):
+        seen.append(dict(moved))
+        return step_fn                            # "re-jitted" twin
+
+    loop = TrainLoop(step_fn, DS(),
+                     cfg=LoopConfig(ckpt_dir=str(tmp_path / "ck"),
+                                    fault_policy="log", save_every=100),
+                     monitor=mon, adapt=ad, on_threshold=on_threshold)
+    loop.run({"w": jnp.zeros(())}, 6, resume=False)
+    ctrl = ad.controllers[("embedding_bag", "*")]
+    assert ctrl.adjustments >= 1
+    assert seen and all(("embedding_bag", "*") in m for m in seen)
+    assert ctrl.rel_bound > 1e-5                  # loosened under overrun
+    # the moves landed on the obs bus as typed threshold events
+    assert any(e.kind == "threshold" for e in loop.obs.bus)

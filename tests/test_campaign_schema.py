@@ -69,6 +69,20 @@ PAGING_FIELDS = {
     },
 }
 
+#: threshold-controller convergence cells (``--grid adaptive``): pin the
+#: fields the differ and the CI ``adaptive-smoke`` acceptance gate read
+ADAPTIVE_FIELDS = {
+    "adaptive": DIFF_READS | {
+        "samples", "corrupted", "detected", "escapes", "escape_rate",
+        "clean_samples", "false_positives", "fp_budget",
+        "realized_fp_rate", "realized_fp_low", "realized_fp_high",
+        "fp_budget_held", "fp_budget_in_ci", "converged",
+        "converged_rel_bound", "ticks_to_converge", "adjustments",
+        "best_static_rel_bound", "best_static_detection",
+        "best_static_fp", "detection_ok",
+    },
+}
+
 
 def test_cellmetrics_field_set_is_exactly_the_golden_schema():
     names = {f.name for f in dataclasses.fields(CellMetrics)}
@@ -88,7 +102,8 @@ def test_baselines_exist():
     names = {os.path.basename(p) for p in BASELINES}
     assert {"BENCH_campaign_quick.json",
             "BENCH_campaign_training_quick.json",
-            "BENCH_campaign_multidevice_quick.json"} <= names
+            "BENCH_campaign_multidevice_quick.json",
+            "BENCH_campaign_adaptive_quick.json"} <= names
 
 
 @pytest.mark.parametrize("path", BASELINES,
@@ -103,6 +118,10 @@ def test_committed_baselines_carry_core_schema(path):
         if kind in PAGING_FIELDS:
             assert PAGING_FIELDS[kind] <= keys, \
                 (c["cell_id"], PAGING_FIELDS[kind] - keys)
+            continue
+        if kind in ADAPTIVE_FIELDS:
+            assert ADAPTIVE_FIELDS[kind] <= keys, \
+                (c["cell_id"], ADAPTIVE_FIELDS[kind] - keys)
             continue
         assert CORE_FIELDS <= keys, (c["cell_id"], CORE_FIELDS - keys)
         assert keys <= full, (c["cell_id"], keys - full)
@@ -124,6 +143,33 @@ def test_paging_baseline_carries_claim_and_diff_fields():
         par["contig_rows_verified_per_token"]
     assert par["peak_resident_kv_bytes"] < par["fixed_slot_kv_bytes"]
     assert reb["rebuild_ok"] and reb["page_rebuilds"] >= 1
+
+
+def test_adaptive_baseline_witnesses_the_convergence_claims():
+    art = load_artifact(os.path.join(
+        BASELINE_DIR, "BENCH_campaign_adaptive_quick.json"))
+    drifts = {c["plan"]["drift"]: c["metrics"] for c in art["cells"]}
+    assert set(drifts) == {"variance_shift", "prompt_mix", "bursty"}
+    # every cell must witness the three gates the CI adaptive-smoke
+    # job asserts on fresh runs: the controller converged, held the FP
+    # budget post-convergence, and lost no detection to the best
+    # offline-swept constant on the identical stream
+    for drift, m in drifts.items():
+        assert m["converged"] is True, drift
+        assert m["fp_budget_held"] is True, drift
+        assert m["detection_ok"] is True, drift
+        assert m["ticks_to_converge"] is not None, drift
+        assert m["realized_fp_low"] <= m["fp_budget"], drift
+    # the drift the controller exists for: mixed-precision variance
+    # shift, where no static bound can serve both regimes — adaptive
+    # detection must strictly beat the best budget-holding constant
+    vs = drifts["variance_shift"]
+    assert vs["detection_rate"] > vs["best_static_detection"]
+    # controllers move: each cell adjusted at least once and recorded
+    # a trajectory consistent with its adjustment count
+    for drift, m in drifts.items():
+        assert m["adjustments"] >= 1, drift
+        assert len(m["move_ticks"]) == m["adjustments"], drift
 
 
 def test_multidevice_baseline_carries_shard_and_soak_columns():

@@ -1,0 +1,276 @@
+"""Property tests for the adaptive-threshold stack (hypothesis-backed;
+falls back to the seeded shim in tests/helpers when hypothesis is absent).
+
+Controller properties (closed loop against simulated fp(bound)
+environments and adversarial estimate streams):
+
+* **budget monotonicity** — raising the FP budget never *raises* the
+  converged bound: extra FP headroom is always spent on detection (note
+  this is the physically meaningful direction: a bigger budget tolerates
+  more clean flags, so the loop can afford a tighter bound);
+* **bounded-step safety** — whatever the estimator claims (including
+  inconsistent adversarial sequences), every move is exactly one
+  multiplicative ``step``, the bound never exits ``[floor, ceiling]``,
+  and moves respect the cooldown;
+* **fixed-point stability** — on a zero-FP stream the bound walks
+  monotonically to the floor, stops, and converges; it never oscillates.
+
+Variance-model properties:
+
+* on normal residual-ratio streams the derived ``rel_bound(q)`` realizes
+  the target FP quantile within the Wilson CI of a fresh sample, across
+  round-off bands spanning f32 to bf16 scales, both for pre-divided
+  ratios and for (residual, magnitude) pairs;
+* on real (non-normal) EB clean-residual streams the quantile mapping
+  stays order-correct: a larger target quantile derives a tighter bound
+  and realizes at least as many flags.
+"""
+import math
+from statistics import NormalDist
+
+import numpy as np
+
+from helpers import given, settings, st
+
+from repro.adapt import ControllerConfig, ThresholdController, VarianceModel
+from repro.campaign.metrics import wilson_interval
+
+# ---------------------------------------------------------------------------
+# closed-loop simulation harness
+# ---------------------------------------------------------------------------
+
+CHECKS_PER_TICK = 512
+
+
+def _estimate(fp_rate: float, checks: int = CHECKS_PER_TICK) -> dict:
+    """The Monitor-estimate dict for an exact expected flag count."""
+    k = int(round(fp_rate * checks))
+    lo, hi = wilson_interval(k, checks)
+    return {"samples": checks, "checks": checks, "errors": k,
+            "flag_rate": k / checks, "flag_rate_low": lo,
+            "flag_rate_high": hi}
+
+
+def _run_env(ctrl: ThresholdController, fp_of_bound, ticks: int) -> None:
+    """Drive the controller against a true fp(bound) response curve,
+    emulating the Monitor's growing evidence window the way
+    ``AdaptiveThresholds.tick`` does (``evidence_window()`` ticks of
+    fresh post-move samples)."""
+    for _ in range(ticks):
+        n = CHECKS_PER_TICK * ctrl.evidence_window()
+        ctrl.tick(_estimate(fp_of_bound(ctrl.rel_bound), n))
+
+
+#: fp(bound) environments: a hard cliff (quantized residuals: fp jumps
+#: across one step), and a smooth power-law tail — both monotone
+#: nonincreasing in the bound, like any real residual distribution
+def _cliff_env(t0):
+    return lambda b: 0.4 if b < t0 else 0.0
+
+
+def _smooth_env(t0):
+    return lambda b: min(0.5, 0.01 * (t0 / max(b, 1e-30)) ** 0.7)
+
+
+BUDGET_PAIRS = ((0.005, 0.02), (0.01, 0.05), (0.02, 0.1))
+CLIFFS = (3e-7, 1e-5, 2e-4)
+
+
+# ---------------------------------------------------------------------------
+# controller: budget monotonicity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(BUDGET_PAIRS), st.sampled_from(CLIFFS),
+       st.sampled_from(("cliff", "smooth")))
+def test_budget_monotonicity(budgets, t0, env_kind):
+    """Same environment, same start, two budgets: the bigger budget's
+    converged bound is never above the smaller one's."""
+    small, big = budgets
+    env = _cliff_env(t0) if env_kind == "cliff" else _smooth_env(t0)
+    bounds = {}
+    for budget in (small, big):
+        ctrl = ThresholdController(
+            "eb", rel_bound=1e-4,
+            config=ControllerConfig(fp_budget=budget, floor=1e-8,
+                                    ceiling=1e-2, min_checks=64,
+                                    cooldown_ticks=1, settle_ticks=6))
+        _run_env(ctrl, env, 200)
+        assert ctrl.converged, (budget, t0, env_kind)
+        bounds[budget] = ctrl.rel_bound
+    assert bounds[big] <= bounds[small], (bounds, t0, env_kind)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(CLIFFS), st.sampled_from((0.005, 0.02, 0.08)))
+def test_cliff_convergence_lands_one_step_above_the_cliff(t0, budget):
+    """Steplike fp(bound) (the quantized-residual regime that defeats
+    deadband-only control): the loop must converge, hold the budget,
+    and stop within one multiplicative step of the cliff edge — not
+    limit-cycle across it."""
+    cfg = ControllerConfig(fp_budget=budget, floor=1e-8, ceiling=1e-2,
+                           min_checks=64, cooldown_ticks=1,
+                           settle_ticks=6)
+    ctrl = ThresholdController("eb", rel_bound=1e-4, config=cfg)
+    _run_env(ctrl, _cliff_env(t0), 200)
+    assert ctrl.converged
+    assert ctrl.ticks_to_converge is not None
+    # above the cliff (fp = 0 <= budget), within one step of its edge
+    assert t0 <= ctrl.rel_bound <= t0 * cfg.step * (1 + 1e-9), \
+        (ctrl.rel_bound, t0)
+
+
+# ---------------------------------------------------------------------------
+# controller: bounded-step safety under adversarial estimates
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from((1, 2, 4)))
+def test_bounded_step_safety_under_adversarial_estimates(seed, cooldown):
+    """Arbitrary (even inconsistent) estimator outputs: each tick the
+    bound either holds or moves by exactly one ``step`` factor (modulo
+    clamping), stays inside [floor, ceiling], and two moves are never
+    closer than the cooldown."""
+    rng = np.random.default_rng(seed)
+    cfg = ControllerConfig(fp_budget=0.02, floor=1e-7, ceiling=1e-3,
+                           step=1.5, min_checks=32,
+                           cooldown_ticks=cooldown, settle_ticks=8)
+    ctrl = ThresholdController("eb", rel_bound=1e-5, config=cfg)
+    last_move_tick = None
+    for tick in range(150):
+        lo = float(rng.uniform(0, 0.5))
+        hi = float(rng.uniform(lo, 1.0))
+        est = {"checks": int(rng.integers(0, 2000)), "errors": 0,
+               "flag_rate": (lo + hi) / 2, "flag_rate_low": lo,
+               "flag_rate_high": hi}
+        before = ctrl.rel_bound
+        moved = ctrl.tick(est)
+        after = ctrl.rel_bound
+        assert cfg.floor <= after <= cfg.ceiling
+        if moved is None:
+            assert after == before
+        else:
+            ratio = after / before
+            clamped = after in (cfg.floor, cfg.ceiling)
+            assert clamped or math.isclose(
+                ratio, cfg.step, rel_tol=1e-9) or math.isclose(
+                ratio, 1 / cfg.step, rel_tol=1e-9), (tick, before, after)
+            if last_move_tick is not None:
+                assert tick - last_move_tick > cooldown
+            last_move_tick = tick
+        if est["checks"] < cfg.min_checks:
+            assert moved is None              # abstained on thin evidence
+
+
+# ---------------------------------------------------------------------------
+# controller: zero-FP fixed point
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from((1e-8, 1e-7, 1e-6)), st.integers(0, 2 ** 31 - 1))
+def test_zero_fp_stream_converges_to_floor_and_stays(floor, seed):
+    """A stream that never flags: the bound tightens monotonically to
+    the floor, then never moves again — the fixed point is stable, and
+    the controller reports convergence there."""
+    del seed                                  # deterministic law: no RNG
+    cfg = ControllerConfig(fp_budget=0.02, floor=floor, ceiling=1e-3,
+                           min_checks=64, cooldown_ticks=1,
+                           settle_ticks=5)
+    ctrl = ThresholdController("eb", rel_bound=1e-4, config=cfg)
+    est = _estimate(0.0)
+    trail = []
+    for _ in range(200):
+        ctrl.tick(est)
+        trail.append(ctrl.rel_bound)
+    assert all(b2 <= b1 for b1, b2 in zip(trail, trail[1:]))  # monotone
+    assert trail[-1] == floor
+    floor_at = trail.index(floor)
+    assert all(b == floor for b in trail[floor_at:])          # stable
+    assert ctrl.converged and ctrl.ticks_to_converge is not None
+
+
+# ---------------------------------------------------------------------------
+# variance model: derived bound realizes the target quantile
+# ---------------------------------------------------------------------------
+
+#: round-off bands: f32 accumulation residual ratios sit ~1e-7, loose
+#: mixed-precision ~1e-4, bf16 ~1e-2
+SCALES = (1e-7, 1e-4, 1e-2)
+QUANTILES = (0.02, 0.05, 0.1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(SCALES), st.sampled_from(QUANTILES),
+       st.integers(0, 2 ** 31 - 1))
+def test_variance_model_bound_realizes_target_quantile(scale, q, seed):
+    """Normal residual-ratio stream: the fraction of a fresh sample
+    flagged by ``rel_bound(q)`` agrees with ``q`` within the Wilson CI
+    of the measurement."""
+    rng = np.random.default_rng(seed)
+    train = rng.normal(10 * scale, scale, 4000)
+    test = rng.normal(10 * scale, scale, 800)
+    decay = 0.999
+    vm = VarianceModel(decay=decay)
+    vm.observe(train)
+    bound = vm.rel_bound(q)
+    k = int(np.sum(test > bound))
+    lo, hi = wilson_interval(k, test.size)
+    # the Wilson CI covers the test-sample noise; the EWMA-estimated
+    # bound carries its own sampling error — delta method: the realized
+    # rate shifts by phi(z) per unit of z-estimate error, whose se is
+    # sqrt((1 + z^2/2) / ESS) with ESS = (1+d)/(1-d) for EWMA weights
+    z = NormalDist().inv_cdf(1 - q)
+    ess = (1 + decay) / (1 - decay)
+    se_model = (NormalDist().pdf(z)
+                * math.sqrt((1 + z * z / 2) / ess))
+    assert lo - 4 * se_model <= q <= hi + 4 * se_model, \
+        (scale, q, k, bound, vm.mean, vm.std)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(SCALES), st.sampled_from(QUANTILES),
+       st.integers(0, 2 ** 31 - 1))
+def test_variance_model_ratio_pairs_match_prediv(scale, q, seed):
+    """Feeding (residual, magnitude) pairs tracks the same distribution
+    as feeding pre-divided ratios — Eq. (5)'s comparison is on the
+    ratio, and both entry points must derive the same bound."""
+    rng = np.random.default_rng(seed)
+    ratios = rng.normal(10 * scale, scale, 3000)
+    mags = rng.uniform(50.0, 500.0, 3000)
+    a, b = VarianceModel(decay=0.999), VarianceModel(decay=0.999)
+    a.observe(ratios)
+    b.observe(ratios * mags, mags)
+    assert math.isclose(a.rel_bound(q), b.rel_bound(q),
+                        rel_tol=1e-6, abs_tol=1e-12)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(("float32", "bfloat16")),
+       st.integers(0, 2 ** 31 - 1))
+def test_variance_model_order_correct_on_real_eb_residuals(acc, seed):
+    """Real clean EB residual streams (f32 and bf16 accumulation) are
+    not normal, so the quantile mapping is only approximate there —
+    but it must stay order-correct: a larger target quantile gives a
+    tighter bound and flags at least as much of a fresh batch."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.campaign.adaptive import _ratio_fns, _regime
+
+    shape = (64, 16, 48, 16)
+    state = _regime(jax.random.key(seed % 1000), shape)
+    clean, _ = _ratio_fns(shape, shape[3],
+                          jnp.float32 if acc == "float32"
+                          else jnp.bfloat16)
+    base = jax.random.key(seed % 1000 + 1)
+    train = np.concatenate([
+        np.asarray(clean(state, jax.random.fold_in(base, i)), np.float64)
+        for i in range(8)])
+    test = np.asarray(clean(state, jax.random.fold_in(base, 99)),
+                      np.float64)
+    vm = VarianceModel(decay=0.999)
+    vm.observe(train)
+    bounds = [vm.rel_bound(q) for q in (0.01, 0.05, 0.2)]
+    assert bounds[0] >= bounds[1] >= bounds[2]
+    flags = [int(np.sum(test > b)) for b in bounds]
+    assert flags[0] <= flags[1] <= flags[2]
