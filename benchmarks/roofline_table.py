@@ -3,6 +3,14 @@
 Reads ``artifacts/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
 emits the per-(arch × shape × mesh) three-term table with the dominant
 bottleneck, MODEL_FLOPS ratio, and fits-in-HBM flag.
+
+Also emits (no dry-run artifacts needed) the **ABFT implementation
+roofline**: per DLRM GEMM shape, the modelled v5e HBM traffic and roofline
+terms of the unprotected GEMM, the fused Pallas kernel (verify in the
+epilogue, on tiles still in VMEM), and the unfused XLA path (Eq. (3b)
+re-reads the O(mn) product).  The ``verify_extra_bytes`` column is the
+point of the fused kernel: the checksum lanes + err vector only, vs the
+unfused path's full product re-read.
 """
 from __future__ import annotations
 
@@ -10,7 +18,9 @@ import glob
 import json
 import os
 
-from benchmarks.common import Csv
+from benchmarks.common import GEMM_SHAPES, Csv
+from repro.core import LANE
+from repro.launch.roofline import roofline_terms
 
 HBM_PER_CHIP = 16 * 1024 ** 3   # v5e: 16 GiB
 
@@ -47,11 +57,60 @@ def run(csv: Csv, art_dir: str = "artifacts/dryrun"):
     return cells
 
 
+def _abft_traffic(m: int, n: int, k: int, scheme: str) -> dict:
+    """Modelled (flops, bytes) of one protected GEMM call on TPU.
+
+    Traffic model (int8 operands, int32 product): the unprotected dot
+    reads A [m,k] + B [k,n] and writes C [m,n]·4B.  Both protected
+    schemes widen B to B' [k, n+LANE] and the product accordingly; the
+    verify itself then differs:
+
+    * ``pallas`` — Eq. (3b) runs in the kernel epilogue on tiles still in
+      VMEM: extra traffic is the err vector alone (4·m bytes).
+    * ``unfused`` — XLA materializes the product, then the row reduction
+      re-reads all of it: extra 4·m·(n+LANE) bytes.
+    """
+    np_ = n + LANE
+    if scheme == "unprotected":
+        flops = 2.0 * m * n * k
+        bytes_ = m * k + k * n + 4.0 * m * n
+    elif scheme == "pallas":
+        flops = 2.0 * m * np_ * k + 3.0 * m * np_
+        bytes_ = m * k + k * np_ + 4.0 * m * np_ + 4.0 * m
+    elif scheme == "unfused":
+        flops = 2.0 * m * np_ * k + 3.0 * m * np_
+        bytes_ = m * k + k * np_ + 4.0 * m * np_ + 4.0 * m * np_ + 4.0 * m
+    else:
+        raise ValueError(scheme)
+    return {"flops": flops, "bytes": bytes_, "collective_link_bytes": 0.0}
+
+
+def run_abft(csv: Csv, *, quick: bool = False):
+    shapes = GEMM_SHAPES[::4] if quick else GEMM_SHAPES
+    for m, n, k in shapes:
+        base = _abft_traffic(m, n, k, "unprotected")
+        base_bound = roofline_terms(base, n_devices=1)["step_lower_bound_s"]
+        for scheme in ("unprotected", "pallas", "unfused"):
+            c = _abft_traffic(m, n, k, scheme)
+            r = roofline_terms(c, n_devices=1)
+            extra = c["bytes"] - base["bytes"]
+            overhead = r["step_lower_bound_s"] / base_bound - 1
+            csv.row("abft_roofline", f"{m}x{n}x{k}", scheme,
+                    f"{c['flops']:.3e}", f"{c['bytes']:.3e}",
+                    f"{extra:.3e}" if scheme != "unprotected" else "-",
+                    f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+                    r["dominant"], f"{overhead*100:.2f}%")
+
+
 def main(quick: bool = False):
     csv = Csv(["bench", "arch", "shape", "mesh", "compute_s", "memory_s",
                "collective_s", "dominant", "model/hlo", "mem_per_dev",
                "hbm"])
     run(csv)
+    abft_csv = Csv(["bench", "shape_mxnxk", "scheme", "flops", "hbm_bytes",
+                    "verify_extra_bytes", "compute_s", "memory_s",
+                    "dominant", "roofline_overhead"])
+    run_abft(abft_csv, quick=quick)
     return csv
 
 

@@ -6,6 +6,7 @@ Examples::
     python -m repro.campaign --quick
     python -m repro.campaign --grid paper --seed 7
     python -m repro.campaign --grid thresholds        # EB rel_bound sweep
+    python -m repro.campaign --grid pallas --quick    # fused-kernel parity
     python -m repro.campaign --grid victims           # decode victim sweep
     python -m repro.campaign --grid training --quick  # train-step seams
     python -m repro.campaign --grid multidevice --quick  # sharded cells
@@ -32,8 +33,8 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="shorthand for --grid quick (the CI smoke grid)")
     ap.add_argument("--grid", default=None,
-                    choices=["quick", "paper", "thresholds", "soak",
-                             "victims", "training", "multidevice",
+                    choices=["quick", "paper", "thresholds", "pallas",
+                             "soak", "victims", "training", "multidevice",
                              "serving_soak", "paging", "adaptive",
                              "full"],
                     help="named grid to run (see repro.campaign.grids; "
@@ -108,8 +109,8 @@ def main(argv=None) -> int:
     grid = args.grid or ("quick" if args.quick else None)
     if grid is None:
         ap.error("pick a grid (--quick / --grid {quick,paper,thresholds,"
-                 "soak,victims,training,multidevice,serving_soak,paging,"
-                 "adaptive,full}) or --diff OLD NEW")
+                 "pallas,soak,victims,training,multidevice,serving_soak,"
+                 "paging,adaptive,full}) or --diff OLD NEW")
 
     # grids with sharded cells are pointless on a 1-device host: force
     # the 4-device host platform the multidevice baseline was produced
@@ -131,9 +132,9 @@ def main(argv=None) -> int:
     from repro.campaign.executor import (CHUNK, resolve_device_count,
                                          run_campaign)
     from repro.campaign.grids import (GRIDS, multidevice_specs,
-                                      paper_specs, quick_specs,
-                                      thresholds_specs, training_specs,
-                                      victims_specs)
+                                      pallas_specs, paper_specs,
+                                      quick_specs, thresholds_specs,
+                                      training_specs, victims_specs)
 
     # warns and falls back when the flag landed after jax initialized
     resolve_device_count(args.device_count or None)
@@ -213,6 +214,9 @@ def main(argv=None) -> int:
     elif grid == "thresholds":
         specs = thresholds_specs(seed=args.seed,
                                  samples=args.samples or 400)
+    elif grid == "pallas":
+        specs = pallas_specs(seed=args.seed, quick=args.quick,
+                             samples=args.samples or 0)
     elif grid == "victims":
         specs = victims_specs(seed=args.seed, samples=args.samples or 12)
     elif grid == "training":
@@ -227,7 +231,8 @@ def main(argv=None) -> int:
     # quick training/multidevice runs get their own artifact name: the
     # committed CI baselines are the quick variants and must not collide
     # with full runs
-    name = f"{grid}_quick" if grid in ("training", "multidevice") \
+    name = f"{grid}_quick" if grid in ("training", "multidevice",
+                                       "pallas") \
         and args.quick else grid
     result = run_campaign(name, specs, out_dir=args.out,
                           chunk=args.chunk or CHUNK, obs=obs,

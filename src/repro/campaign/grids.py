@@ -5,6 +5,9 @@
              comparable (±2%) to the §IV-C analytic bound.
 ``paper``  — the paper's Tables II + III campaigns at full shape coverage.
 ``thresholds`` — EB rel_bound sweep: detection-vs-FP tradeoff per bit band.
+``pallas`` — fused-kernel parity: the identical bit-flip grid through the
+             fused Pallas path (interpret mode on CPU) and the XLA paths,
+             gating on overlapping detection CIs + the overhead columns.
 ``soak``   — the full-model decode-step sweep across fault models/bands.
 ``victims`` — decode-soak victim sweep: which leaf gets flipped, addressed
              by protect-plan path patterns (``attn.wq``, ``mlp.down``, ...).
@@ -97,6 +100,45 @@ def thresholds_specs(seed: int = 0,
         bit_bands=("significant", "low", "sign"),
         rel_bounds=(1e-7, 1e-6, 1e-5, 1e-4, 1e-3),
         samples=samples, clean_samples=samples, seed=seed)]
+
+
+def pallas_specs(seed: int = 0, quick: bool = False,
+                 samples: int = 0) -> List[CampaignSpec]:
+    """Fused-kernel detection parity (ROADMAP open item 1): run the SAME
+    bit-flip grid through the fused Pallas implementation and the XLA
+    reference schemes, so the artifact holds fused vs unfused vs packed
+    detection rates side by side.  Cell seeds derive from cell ids (which
+    include the target name), so the fused and unfused cells draw
+    *different* fault samples — the parity gate is therefore statistical:
+    overlapping 95% Wilson intervals on the same grid point
+    (:func:`repro.campaign.diff` compares detection the same way).  A
+    deterministic bit-exact parity check (same flips through both paths)
+    lives in tests/test_kernels.py; this grid measures at campaign scale
+    and times the fused kernel (interpret mode on CPU — honest wall-clock
+    for parity, not a TPU latency claim; the roofline benchmark models
+    the TPU traffic).
+
+    The EB cells run BOTH targets at the pallas-sized shape so cells stay
+    comparable (interpret-mode emulation makes the default EB shape
+    needlessly slow)."""
+    n = samples or (400 if quick else 800)
+    gemm = CampaignSpec(
+        name="pallas-gemm",
+        targets=("gemm_pallas", "gemm_packed", "gemm_unfused"),
+        fault_models=("bitflip",),
+        bit_bands=("all",),
+        shapes=((20, 256, 512),),
+        samples=n, clean_samples=max(64, n // 4), seed=seed,
+        measure_overhead=True)
+    eb = CampaignSpec(
+        name="pallas-eb",
+        targets=("eb_pallas", "embedding_bag"),
+        fault_models=("bitflip",),
+        bit_bands=("significant", "low"),
+        shapes=((2000, 64, 8, 32),),
+        samples=n, clean_samples=max(64, n // 4), seed=seed,
+        measure_overhead=True)
+    return [gemm, eb]
 
 
 #: the decode soak's victim sweep: one packed projection per layer role,
@@ -252,6 +294,7 @@ GRIDS: Dict[str, object] = {
     "quick": quick_specs,
     "paper": paper_specs,
     "thresholds": thresholds_specs,
+    "pallas": pallas_specs,
     "soak": soak_specs,
     "victims": victims_specs,
     "training": training_specs,

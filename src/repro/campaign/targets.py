@@ -20,6 +20,7 @@ produce the per-cell overhead column.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -236,6 +237,63 @@ register_target(InjectableTarget(
     overhead_phases=_gemm_phases))
 
 
+# Fused Pallas implementation as a measured third scheme: identical build
+# (so cells differ only in execution path), trials routed through
+# scheme="pallas" — interpret mode on CPU, the real kernel on TPU.  The
+# --grid pallas campaign runs this next to gemm_packed/gemm_unfused on the
+# same flip grid and gates on detection parity (overlapping Wilson CIs).
+
+_PALLAS = ResolvedRule(scheme="pallas")
+
+
+def _gemm_pallas_trial(state, plan: CellPlan, key: jax.Array):
+    b_bad = apply_fault(key, state["b"], plan)
+    _, check = QGEMM(_gemm_repack(state, b_bad), state["a"], rule=_PALLAS)
+    return check.err_count > 0, jnp.any(b_bad != state["b"])
+
+
+def _gemm_pallas_clean(state, plan: CellPlan, key: jax.Array):
+    del key
+    _, check = QGEMM(_gemm_repack(state, state["b"]), state["a"],
+                     rule=_PALLAS)
+    return check.err_count > 0
+
+
+def _gemm_pallas_overhead(state, plan: CellPlan):
+    a = state["a"]
+    b_packed = _gemm_repack(state, state["b"])
+
+    def protected():
+        return QGEMM(b_packed, a, rule=_PALLAS)[0]
+
+    def unprotected():
+        return QGEMM.unprotected(b_packed, a)
+
+    return protected, unprotected
+
+
+def _gemm_pallas_phases(state, plan: CellPlan) -> dict:
+    """encode / gemm / fused_gemm_verify — the fused kernel has no separate
+    verify phase by construction (the epilogue checks the tile the MXU just
+    produced), so the breakdown times the whole fused call instead and the
+    surcharge is fused_gemm_verify − gemm."""
+    a, b = state["a"], state["b"]
+    b_packed = _gemm_repack(state, b)
+    return {
+        "encode": lambda: QGEMM.encode(b),
+        "gemm": lambda: QGEMM.unprotected(b_packed, a),
+        "fused_gemm_verify": lambda: QGEMM(b_packed, a, rule=_PALLAS)[0],
+    }
+
+
+register_target(InjectableTarget(
+    name="gemm_pallas",
+    build=_gemm_build, trial=_gemm_pallas_trial, clean=_gemm_pallas_clean,
+    default_shapes=((20, 256, 512),), shape_arity=3,
+    analytic_bound=_gemm_bound, overhead=_gemm_pallas_overhead,
+    overhead_phases=_gemm_pallas_phases))
+
+
 def _gemm_c_build(plan: CellPlan, key: jax.Array):
     """Precompute the clean int32 C and its checksum column once per cell;
     trials corrupt C (the accumulator-resident intermediate, §IV-C2)."""
@@ -296,12 +354,19 @@ def _eb_rule(plan: CellPlan) -> ResolvedRule:
     return ResolvedRule(rel_bound=plan.rel_bound)
 
 
+def _eb_rule_pallas(plan: CellPlan) -> ResolvedRule:
+    """Same threshold, forced through the fused Pallas kernel — ONE trial
+    body serves both EB targets (rule_fn partial below), so the flip grid
+    and the Eq. (5) semantics cannot drift between the measured paths."""
+    return ResolvedRule(rel_bound=plan.rel_bound, scheme="pallas")
+
+
 def _eb_enc(state):
     return (state["table"], state["alphas"], state["betas"],
             state["rowsums"])
 
 
-def _eb_trial(state, plan: CellPlan, key: jax.Array):
+def _eb_trial(state, plan: CellPlan, key: jax.Array, rule_fn=_eb_rule):
     rows, dim, bags, pool = plan.shape
     table = state["table"]
     k1, k2, k3, k4 = jax.random.split(key, 4)
@@ -318,22 +383,22 @@ def _eb_trial(state, plan: CellPlan, key: jax.Array):
     table_bad = table.at[row, col].set(bad)
     _, check = EMBEDDING_BAG(
         (table_bad, state["alphas"], state["betas"], state["rowsums"]),
-        idx, rule=_eb_rule(plan))
+        idx, rule=rule_fn(plan))
     return check.err_count > 0, bad != elem
 
 
-def _eb_clean(state, plan: CellPlan, key: jax.Array):
+def _eb_clean(state, plan: CellPlan, key: jax.Array, rule_fn=_eb_rule):
     rows, dim, bags, pool = plan.shape
     idx = jax.random.randint(key, (bags, pool), 0, rows, jnp.int32)
-    _, check = EMBEDDING_BAG(_eb_enc(state), idx, rule=_eb_rule(plan))
+    _, check = EMBEDDING_BAG(_eb_enc(state), idx, rule=rule_fn(plan))
     return check.err_count > 0
 
 
-def _eb_overhead(state, plan: CellPlan):
+def _eb_overhead(state, plan: CellPlan, rule_fn=_eb_rule):
     rows, dim, bags, pool = plan.shape
     idx = jax.random.randint(jax.random.key(0), (bags, pool), 0, rows,
                              jnp.int32)
-    enc, rule = _eb_enc(state), _eb_rule(plan)
+    enc, rule = _eb_enc(state), rule_fn(plan)
 
     def protected():
         return EMBEDDING_BAG(enc, idx, rule=rule)[0]
@@ -344,11 +409,11 @@ def _eb_overhead(state, plan: CellPlan):
     return protected, unprotected
 
 
-def _eb_phases(state, plan: CellPlan) -> dict:
+def _eb_phases(state, plan: CellPlan, rule_fn=_eb_rule) -> dict:
     rows, dim, bags, pool = plan.shape
     idx = jax.random.randint(jax.random.key(0), (bags, pool), 0, rows,
                              jnp.int32)
-    enc, rule = _eb_enc(state), _eb_rule(plan)
+    enc, rule = _eb_enc(state), rule_fn(plan)
     return {
         "encode": lambda: EMBEDDING_BAG.encode(
             (state["table"], state["alphas"], state["betas"])),
@@ -362,6 +427,21 @@ register_target(InjectableTarget(
     build=_eb_build, trial=_eb_trial, clean=_eb_clean,
     default_shapes=((10_000, 128, 10, 100),), shape_arity=4,
     overhead=_eb_overhead, overhead_phases=_eb_phases,
+    multi_flip=False, thresholded=True))
+
+
+# the fused EB kernel vmaps in interpret mode but at ~CPU-emulation speed,
+# so the default cell is smaller than embedding_bag's; the pallas grid pins
+# BOTH EB targets to this shape so their cells stay directly comparable
+register_target(InjectableTarget(
+    name="eb_pallas",
+    build=_eb_build,
+    trial=functools.partial(_eb_trial, rule_fn=_eb_rule_pallas),
+    clean=functools.partial(_eb_clean, rule_fn=_eb_rule_pallas),
+    default_shapes=((2000, 64, 8, 32),), shape_arity=4,
+    overhead=functools.partial(_eb_overhead, rule_fn=_eb_rule_pallas),
+    overhead_phases=functools.partial(_eb_phases,
+                                      rule_fn=_eb_rule_pallas),
     multi_flip=False, thresholded=True))
 
 

@@ -39,6 +39,7 @@ from repro.core.abft_embedding import (
     eb_overhead_model,
     embedding_bag,
     table_rowsums,
+    verify_bags,
 )
 from repro.core.abft_kvcache import (
     QuantKV,
@@ -68,7 +69,7 @@ __all__ = [
     "encode_weight_colsum", "correct_weight_flip",
     "detect_prob_b_bitflip", "detect_prob_b_random", "detect_prob_c_random",
     "EB_REL_BOUND", "AbftEbOut", "table_rowsums", "embedding_bag",
-    "abft_embedding_bag", "eb_overhead_model",
+    "abft_embedding_bag", "verify_bags", "eb_overhead_model",
     "QuantKV", "quantize_kv_rows", "dequantize_kv", "verify_kv",
     "update_kv_row", "attend_quantized",
     "FloatAbftOut", "encode_weight_f32", "abft_gemm_f32",

@@ -67,6 +67,40 @@ def embedding_bag(table_q: jax.Array, alphas: jax.Array, betas: jax.Array,
     return jnp.sum(w[..., None] * deq, axis=1)           # [bags, d]
 
 
+def verify_bags(rsum: jax.Array, alphas: jax.Array, betas: jax.Array,
+                indices: jax.Array, rowsums: jax.Array, d: int,
+                weights: Optional[jax.Array] = None,
+                rel_bound: float = REL_BOUND) -> jax.Array:
+    """The Eq. (5) compare: per-bag error flags from the EB output row sums.
+
+    ``rsum`` is ``Σ_j R_b[j]`` ([bags]), however the forward pass produced
+    it (XLA reduction or the Pallas kernel's fused accumulator).  This is
+    the ONE definition of the check — the ``rel_bound`` semantics (incl.
+    ``threshold=adaptive`` controller moves) must not drift between
+    execution paths, so both :func:`abft_embedding_bag` and the Pallas
+    wrapper in :mod:`repro.kernels.ops` call here.
+
+    |RSum - CSum| > bound  =>  soft error (Alg. 2 line 5).  The paper uses
+    a bound relative to the result; float round-off however scales with
+    the ACCUMULATED magnitude, so a cancellation-heavy bag (|Σx| ≪ Σ|x|)
+    would false-positive.  We scale the bound by Σ|terms| instead —
+    strictly fewer false positives at the paper's rel_bound (its measured
+    9.5% FP rate is this very effect), same high-bit sensitivity.
+    """
+    valid = indices >= 0
+    safe_idx = jnp.where(valid, indices, 0)
+    a = alphas[safe_idx]
+    b = betas[safe_idx]
+    w = (jnp.ones_like(a) if weights is None else weights)
+    w = jnp.where(valid, w, 0.0)
+    ct = rowsums[safe_idx].astype(jnp.float32)           # [bags, pool]
+    csum = jnp.sum(w * (a * ct + d * b), axis=-1)        # [bags]
+    mag = jnp.sum(jnp.abs(w) * (jnp.abs(a) * jnp.abs(ct)
+                                + d * jnp.abs(b)), axis=-1)
+    tol = rel_bound * jnp.maximum(mag, 1.0)
+    return jnp.abs(rsum - csum) > tol
+
+
 def abft_embedding_bag(table_q: jax.Array, alphas: jax.Array,
                        betas: jax.Array, indices: jax.Array,
                        rowsums: jax.Array,
@@ -79,26 +113,8 @@ def abft_embedding_bag(table_q: jax.Array, alphas: jax.Array,
     d = table_q.shape[-1]
     r = embedding_bag(table_q, alphas, betas, indices, weights)
     rsum = jnp.sum(r, axis=-1)                           # [bags]
-
-    valid = indices >= 0
-    safe_idx = jnp.where(valid, indices, 0)
-    a = alphas[safe_idx]
-    b = betas[safe_idx]
-    w = (jnp.ones_like(a) if weights is None else weights)
-    w = jnp.where(valid, w, 0.0)
-    ct = rowsums[safe_idx].astype(jnp.float32)           # [bags, pool]
-    csum = jnp.sum(w * (a * ct + d * b), axis=-1)        # [bags]
-
-    # |RSum - CSum| > bound  =>  soft error (Alg. 2 line 5).  The paper uses
-    # a bound relative to the result; float round-off however scales with
-    # the ACCUMULATED magnitude, so a cancellation-heavy bag (|Σx| ≪ Σ|x|)
-    # would false-positive.  We scale the bound by Σ|terms| instead —
-    # strictly fewer false positives at the paper's rel_bound (its measured
-    # 9.5% FP rate is this very effect), same high-bit sensitivity.
-    mag = jnp.sum(jnp.abs(w) * (jnp.abs(a) * jnp.abs(ct)
-                                + d * jnp.abs(b)), axis=-1)
-    tol = rel_bound * jnp.maximum(mag, 1.0)
-    err_bags = jnp.abs(rsum - csum) > tol
+    err_bags = verify_bags(rsum, alphas, betas, indices, rowsums, d,
+                           weights, rel_bound)
     return AbftEbOut(r, err_bags, jnp.sum(err_bags).astype(jnp.int32))
 
 

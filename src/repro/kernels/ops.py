@@ -5,6 +5,10 @@ executes the kernel body on CPU for validation) vs. the pure-XLA path (the
 op set the dry-run lowers — identical math, real HLO cost model).  On a CPU
 container the default is the XLA path; on TPU it is the Pallas path.
 
+Dispatch precedence (all three wrappers): an EXPLICIT ``use_pallas``
+(True/False) always wins.  Only when it is None does ``interpret=True``
+(validate the kernel body on CPU) or a TPU backend select the Pallas path.
+
 These wrappers are the operator surface the :mod:`repro.protect` adapters
 dispatch to — layer code should not call them directly.
 """
@@ -17,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import (AbftEbOut, EB_REL_BOUND, LANE,
                         abft_embedding_bag as _abft_eb_core,
-                        encode_activation_checksum)
+                        encode_activation_checksum, verify_bags)
 from repro.kernels import ref as _ref
 
 
@@ -26,6 +30,17 @@ def _on_tpu() -> bool:
         return jax.devices()[0].platform == "tpu"
     except Exception:  # pragma: no cover
         return False
+
+
+def _use_pallas(use_pallas: Optional[bool], interpret: bool) -> bool:
+    """Resolve the scheme: explicit beats auto, auto = interpret-or-TPU.
+
+    (The old ``if use_pallas or interpret`` sent ``use_pallas=False,
+    interpret=True`` to the Pallas kernel — an explicit XLA request lost.)
+    """
+    if use_pallas is not None:
+        return use_pallas
+    return interpret or _on_tpu()
 
 
 def abft_qgemm(a_q: jax.Array, b_packed: jax.Array, *,
@@ -41,15 +56,15 @@ def abft_qgemm(a_q: jax.Array, b_packed: jax.Array, *,
     (one extra GEMM row's worth of MACs) and runs in int32 (an int8 column
     sum of A overflows int8, so it cannot ride the packed operand); it is
     therefore gated behind the flag and only paid by ``correct``-policy
-    call sites.
+    call sites.  On the Pallas path the matvec is fused into the kernel's
+    per-tile pass, so the ``correct`` policy pays no second read of A/B'.
     """
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
-    if use_pallas or interpret:
+    if _use_pallas(use_pallas, interpret):
         from repro.kernels.abft_qgemm import abft_qgemm_pallas
-        c, err_rows = abft_qgemm_pallas(a_q, b_packed, bm=bm, bn=bn, bk=bk,
-                                        interpret=interpret or not _on_tpu())
-    else:
-        c, err_rows = _ref.abft_qgemm_ref(a_q, b_packed)
+        return abft_qgemm_pallas(a_q, b_packed, bm=bm, bn=bn, bk=bk,
+                                 interpret=interpret or not _on_tpu(),
+                                 with_colcheck=with_colcheck)
+    c, err_rows = _ref.abft_qgemm_ref(a_q, b_packed)
     if not with_colcheck:
         return c, err_rows
     n = b_packed.shape[1] - LANE
@@ -65,25 +80,15 @@ def abft_embedding_bag(table_q, alphas, betas, indices, rowsums,
                        use_pallas: Optional[bool] = None,
                        interpret: bool = False):
     """EB forward + Eq. (5) check. -> AbftEbOut(r, err_bags, err_count)."""
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
-    if use_pallas or interpret:
+    if _use_pallas(use_pallas, interpret):
         from repro.kernels.abft_embeddingbag import abft_eb_pallas
         r, rsum = abft_eb_pallas(table_q, alphas, betas, indices, weights,
                                  interpret=interpret or not _on_tpu())
-        d = table_q.shape[-1]
-        valid = indices >= 0
-        safe_idx = jnp.where(valid, indices, 0)
-        a = alphas[safe_idx]
-        b = betas[safe_idx]
-        w = jnp.ones_like(a) if weights is None else weights
-        w = jnp.where(valid, w, 0.0)
-        ct = rowsums[safe_idx].astype(jnp.float32)
-        csum = jnp.sum(w * (a * ct + d * b), axis=-1)
-        # accumulation-magnitude bound (see core.abft_embedding)
-        mag = jnp.sum(jnp.abs(w) * (jnp.abs(a) * jnp.abs(ct)
-                                    + d * jnp.abs(b)), axis=-1)
-        tol = rel_bound * jnp.maximum(mag, 1.0)
-        err_bags = jnp.abs(rsum - csum) > tol
+        # ONE Eq. (5) definition for both paths (repro.core.verify_bags):
+        # the kernel's fused rsum feeds the shared check, so rel_bound
+        # semantics cannot drift between XLA and Pallas
+        err_bags = verify_bags(rsum, alphas, betas, indices, rowsums,
+                               table_q.shape[-1], weights, rel_bound)
         return AbftEbOut(r, err_bags, jnp.sum(err_bags).astype(jnp.int32))
     return _abft_eb_core(table_q, alphas, betas, indices, rowsums,
                          weights, rel_bound)
@@ -92,8 +97,7 @@ def abft_embedding_bag(table_q, alphas, betas, indices, rowsums,
 def quantize_rows(x: jax.Array, *, use_pallas: Optional[bool] = None,
                   interpret: bool = False):
     """Per-row signed-int8 dynamic quantization. -> (q, alpha, beta)."""
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
-    if use_pallas or interpret:
+    if _use_pallas(use_pallas, interpret):
         from repro.kernels.quantize_rows import quantize_rows_pallas
         return quantize_rows_pallas(x, interpret=interpret or not _on_tpu())
     return _ref.quantize_rows_ref(x)

@@ -76,6 +76,200 @@ def test_qgemm_ops_dispatch_xla_path(rng):
     np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
 
 
+# --------------------- abft_qgemm: uint8 zero-point path --------------------
+
+def test_qgemm_kernel_uint8_matches_ref(rng):
+    # regression: the old wrapper did a bare astype(int8), silently
+    # reinterpreting activations >= 128 as negative.  This is the exact
+    # distribution benchmarks/gemm_overhead.py generates.
+    m, k, n = 20, 256, 512
+    a = jnp.asarray(rng.integers(0, 256, size=(m, k)), jnp.uint8)
+    assert int(jnp.max(a)) >= 128            # the wraparound-triggering half
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    bp = pack_encoded_b(b)
+    c_ref, err_ref = kref.abft_qgemm_ref(a, bp)
+    c, err = abft_qgemm_pallas(a, bp, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+    np.testing.assert_array_equal(np.asarray(err), np.asarray(err_ref))
+    assert int(err.sum()) == 0
+
+
+def test_qgemm_kernel_uint8_detects_corrupted_weights(rng):
+    m, k, n = 8, 64, 96
+    a = jnp.asarray(rng.integers(0, 256, size=(m, k)), jnp.uint8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    checksum = encode_weight_checksum(b)
+    detected = 0
+    for s in range(20):
+        b_bad = flip_bit(b, jnp.asarray(s * 41 % (k * n)),
+                         jnp.asarray(s % 8))
+        bp = pack_encoded_b(b_bad, checksum)
+        c_ref, err_ref = kref.abft_qgemm_ref(a, bp)
+        c, err = abft_qgemm_pallas(a, bp, interpret=True)
+        # flags bit-identical to the unsigned reference, not just "some flag"
+        np.testing.assert_array_equal(np.asarray(err), np.asarray(err_ref))
+        detected += int(err.sum()) > 0
+    assert detected == 20
+
+
+def test_qgemm_kernel_rejects_bad_dtypes(rng):
+    a_f = jnp.ones((4, 32), jnp.float32)
+    b = jnp.asarray(rng.integers(-128, 128, size=(32, 16)), jnp.int8)
+    bp = pack_encoded_b(b)
+    with pytest.raises(TypeError, match="int8 or uint8"):
+        abft_qgemm_pallas(a_f, bp, interpret=True)
+    a = jnp.asarray(rng.integers(-128, 128, size=(4, 32)), jnp.int8)
+    with pytest.raises(TypeError, match="int8"):
+        abft_qgemm_pallas(a, bp.astype(jnp.int32), interpret=True)
+
+
+# ----------------- abft_qgemm: bn < LANE multi-tile checksum ----------------
+
+@pytest.mark.parametrize("bn", [32, 64])
+@pytest.mark.parametrize("m,k,n", [(8, 64, 96), (5, 100, 77)])
+def test_qgemm_kernel_small_bn_clean(rng, bn, m, k, n):
+    # the checksum block spans LANE/bn > 1 tiles: lane 0 of the first
+    # carries the check, the trailing tiles must stay inert
+    a = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    bp = pack_encoded_b(b)
+    c_ref, _ = kref.abft_qgemm_ref(a, bp)
+    c, err = abft_qgemm_pallas(a, bp, bm=32, bn=bn, bk=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+    assert int(err.sum()) == 0
+
+
+@pytest.mark.parametrize("bn", [32, 64])
+def test_qgemm_kernel_small_bn_detects(rng, bn):
+    m, k, n = 8, 64, 96
+    a = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    checksum = encode_weight_checksum(b)
+    detected = 0
+    for s in range(20):
+        b_bad = flip_bit(b, jnp.asarray(s * 41 % (k * n)),
+                         jnp.asarray(s % 8))
+        bp = pack_encoded_b(b_bad, checksum)
+        _, err = abft_qgemm_pallas(a, bp, bm=32, bn=bn, bk=64,
+                                   interpret=True)
+        detected += int(err.sum()) > 0
+    assert detected == 20
+
+
+# --------------------- abft_qgemm: fused Eq.-1 colcheck ---------------------
+
+@pytest.mark.parametrize("dtype", ["int8", "uint8"])
+@pytest.mark.parametrize("bn", [64, 128])
+def test_qgemm_kernel_fused_colcheck(rng, dtype, bn):
+    from repro.core import encode_activation_checksum
+    m, k, n = 12, 100, 200
+    lo, hi = (-128, 128) if dtype == "int8" else (0, 256)
+    a = jnp.asarray(rng.integers(lo, hi, size=(m, k)), getattr(jnp, dtype))
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    bp = pack_encoded_b(b)
+    c, err, col = abft_qgemm_pallas(a, bp, bn=bn, interpret=True,
+                                    with_colcheck=True)
+    c_ref, err_ref = kref.abft_qgemm_ref(a, bp)
+    col_ref = jax.lax.dot_general(
+        encode_activation_checksum(a), bp[:, :n].astype(jnp.int32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+    np.testing.assert_array_equal(np.asarray(err), np.asarray(err_ref))
+    np.testing.assert_array_equal(np.asarray(col), np.asarray(col_ref))
+
+
+def test_qgemm_ops_colcheck_paths_agree(rng):
+    # ops-level: the fused kernel's colcheck must equal the XLA wrapper
+    # matvec, so the `correct` policy sees the same Eq.-1 reference on
+    # both schemes
+    a = jnp.asarray(rng.integers(0, 256, size=(6, 64)), jnp.uint8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(64, 48)), jnp.int8)
+    bp = pack_encoded_b(b)
+    c_x, e_x, col_x = ops.abft_qgemm(a, bp, use_pallas=False,
+                                     with_colcheck=True)
+    c_p, e_p, col_p = ops.abft_qgemm(a, bp, use_pallas=True,
+                                     interpret=True, with_colcheck=True)
+    np.testing.assert_array_equal(np.asarray(c_x), np.asarray(c_p))
+    np.testing.assert_array_equal(np.asarray(e_x), np.asarray(e_p))
+    np.testing.assert_array_equal(np.asarray(col_x), np.asarray(col_p))
+
+
+def test_qgemm_correct_policy_pallas_scheme(rng):
+    from repro.protect.ops import QGEMM
+    from repro.protect.plan import ResolvedRule
+    a = jnp.asarray(rng.integers(0, 256, size=(6, 64)), jnp.uint8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(64, 48)), jnp.int8)
+    packed = QGEMM.encode(b)
+    c_p, chk_p = QGEMM(packed, a,
+                       rule=ResolvedRule(scheme="pallas", policy="correct"))
+    c_x, chk_x = QGEMM(packed, a,
+                       rule=ResolvedRule(scheme="packed", policy="correct"))
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_x))
+    np.testing.assert_array_equal(np.asarray(chk_p.aux),
+                                  np.asarray(chk_x.aux))
+
+
+# ------------------- ops dispatch: explicit scheme wins ---------------------
+
+def test_ops_explicit_false_beats_interpret(rng, monkeypatch):
+    # use_pallas=False must take the XLA path even with interpret=True —
+    # the old `if use_pallas or interpret` sent it to the kernel anyway.
+    # Poison the kernel entry points; the XLA path must never touch them.
+    import repro.kernels.abft_embeddingbag as eb_mod
+    import repro.kernels.abft_qgemm as qg_mod
+    import repro.kernels.quantize_rows as qr_mod
+
+    def _boom(*a, **kw):
+        raise AssertionError("explicit use_pallas=False reached Pallas")
+
+    monkeypatch.setattr(qg_mod, "abft_qgemm_pallas", _boom)
+    monkeypatch.setattr(eb_mod, "abft_eb_pallas", _boom)
+    monkeypatch.setattr(qr_mod, "quantize_rows_pallas", _boom)
+
+    a = jnp.asarray(rng.integers(-128, 128, size=(4, 32)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(32, 16)), jnp.int8)
+    bp = pack_encoded_b(b)
+    c, err = ops.abft_qgemm(a, bp, use_pallas=False, interpret=True)
+    assert int(err.sum()) == 0
+
+    from repro.core.abft_embedding import table_rowsums
+    t = jnp.asarray(rng.integers(-128, 128, size=(64, 32)), jnp.int8)
+    al = jnp.asarray(rng.uniform(0.01, 0.1, size=64), jnp.float32)
+    be = jnp.asarray(rng.uniform(-0.1, 0.1, size=64), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 64, size=(2, 8)), jnp.int32)
+    out = ops.abft_embedding_bag(t, al, be, idx, table_rowsums(t),
+                                 use_pallas=False, interpret=True)
+    assert int(out.err_count) == 0
+
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    q, _, _ = ops.quantize_rows(x, use_pallas=False, interpret=True)
+    assert q.dtype == jnp.int8
+
+
+# ------------- fused vs unfused: deterministic detection parity -------------
+
+def test_qgemm_fused_unfused_err_parity(rng):
+    # the SAME stale-checksum flips through the fused Pallas path and the
+    # BLAS-2 unfused scheme: Eq. (3b) is one criterion, so the per-row
+    # flags must agree flip for flip (the --grid pallas campaign gate is
+    # the statistical version of this at scale)
+    from repro.protect.ops import QGEMM
+    from repro.protect.plan import ResolvedRule
+    m, k, n = 8, 64, 96
+    a = jnp.asarray(rng.integers(0, 256, size=(m, k)), jnp.uint8)
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    checksum = encode_weight_checksum(b)
+    unfused = ResolvedRule(scheme="unfused")
+    for s in range(10):
+        b_bad = flip_bit(b, jnp.asarray(s * 41 % (k * n)),
+                         jnp.asarray(s % 8))
+        bp = pack_encoded_b(b_bad, checksum)
+        _, err_fused = abft_qgemm_pallas(a, bp, interpret=True)
+        _, chk = QGEMM(bp, a, rule=unfused)
+        np.testing.assert_array_equal(np.asarray(err_fused).astype(bool),
+                                      np.asarray(chk.err_mask))
+
+
 # ---------------------------- abft_embeddingbag ----------------------------
 
 EB_SHAPES = [
